@@ -1,0 +1,128 @@
+"""Render EXPERIMENTS.md sections from experiments/*.json artifacts.
+
+Usage:  PYTHONPATH=src:. python -m benchmarks.report > EXPERIMENTS.generated.md
+The checked-in EXPERIMENTS.md embeds this output plus the narrative
+sections (§Perf hypothesis log is written by hand as iterations happen).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from repro.configs import SHAPE_CASES, applicable_shapes, get_config
+from repro.configs.registry import ASSIGNED
+
+EXP = os.path.join(os.path.dirname(__file__), "..", "experiments")
+
+
+def load_json(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def dryrun_section() -> str:
+    lines = [
+        "### Dry-run matrix (compile = PASS)",
+        "",
+        "All cells lower + compile against the production meshes with full",
+        "in/out shardings (ShapeDtypeStruct inputs, no allocation).",
+        "`args` = per-device bytes of (params [+opt] [+cache]); `temp` =",
+        "XLA temp allocation per device; `wireGB` = per-device collective",
+        "wire bytes per step (trip-count-scaled ring estimates).",
+        "",
+        "| arch | shape | mesh | compile_s | args GB/dev | temp GB/dev | wire GB/dev | fits v5e? |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    skips = []
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        for shape in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+            if shape not in applicable_shapes(cfg):
+                if shape == "long_500k":
+                    skips.append(arch)
+                continue
+            for mesh in ("16x16", "2x16x16"):
+                p = os.path.join(EXP, "dryrun", f"{arch}_{shape}_{mesh}.json")
+                if not os.path.exists(p):
+                    lines.append(f"| {arch} | {shape} | {mesh} | MISSING | | | | |")
+                    continue
+                r = load_json(p)
+                args_gb = r["memory"]["argument_size_in_bytes"] / 2**30
+                temp_gb = r["memory"]["temp_size_in_bytes"] / 2**30
+                wire_gb = r["collectives"]["total"]["wire_bytes"] / 2**30
+                fits = "yes" if (args_gb + temp_gb) <= 16 else f"needs ≥{_chips_needed(args_gb+temp_gb, r['n_chips'])} chips"
+                lines.append(
+                    f"| {arch} | {shape} | {mesh} | {r['compile_s']:.0f} "
+                    f"| {args_gb:.2f} | {temp_gb:.2f} | {wire_gb:.2f} | {fits} |"
+                )
+    lines.append("")
+    lines.append(
+        f"`long_500k` skipped for pure full-attention archs ({', '.join(skips)}) "
+        "per the assignment; run for jamba-v0.1-52b and rwkv6-1.6b."
+    )
+    return "\n".join(lines)
+
+
+def _chips_needed(gb_per_dev: float, chips: int) -> int:
+    import math
+
+    factor = gb_per_dev / 16.0
+    return int(2 ** math.ceil(math.log2(chips * factor)))
+
+
+def roofline_section() -> str:
+    path = os.path.join(EXP, "roofline.json")
+    if not os.path.exists(path):
+        return "(roofline.json missing — run `python -m benchmarks.run --only roofline`)"
+    rows = load_json(path)
+    lines = [
+        "### Roofline (single-pod 16x16 = 256 chips, TPU v5e: 197 TF/s bf16, 819 GB/s HBM, 50 GB/s ICI)",
+        "",
+        "| arch | shape | compute s | memory s | collective s | bound | useful flops ratio | roofline % |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | **{r['dominant']}** | "
+            f"{r['useful_ratio']:.2f} | {100*r['roofline_frac']:.1f}% |"
+        )
+    return "\n".join(lines)
+
+
+def repro_tables_section() -> str:
+    out = []
+    for name in sorted(glob.glob(os.path.join(EXP, "repro", "*.json"))):
+        data = load_json(name)
+        rows = data["rows"]
+        if not rows:
+            continue
+        title = os.path.basename(name)[:-5]
+        out.append(f"#### {title}")
+        cols = [k for k in rows[0] if not k.startswith("_")]
+        out.append("| " + " | ".join(cols) + " |")
+        out.append("|" + "---|" * len(cols))
+        for r in rows:
+            cells = []
+            for c in cols:
+                v = r.get(c, "")
+                cells.append(f"{v:.2f}" if isinstance(v, float) else str(v))
+            out.append("| " + " | ".join(cells) + " |")
+        out.append("")
+    return "\n".join(out)
+
+
+def main():
+    print("## §Dry-run\n")
+    print(dryrun_section())
+    print("\n## §Roofline\n")
+    print(roofline_section())
+    print("\n## §Repro tables\n")
+    print(repro_tables_section())
+
+
+if __name__ == "__main__":
+    main()

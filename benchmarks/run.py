@@ -1,0 +1,54 @@
+"""Benchmark entry point — one function per paper table + roofline.
+
+Prints ``name,us_per_call,derived`` CSV per bench (derived = the table's
+headline metric, e.g. avg OOD PPL improvement of NSVD over ASVD).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="subset: theorems table1 table2 table3 table4 table5 roofline")
+    args = ap.parse_args()
+
+    from . import (
+        roofline,
+        table1_ratio_sweep,
+        table2_similarity,
+        table3_k1_sweep,
+        table4_nid,
+        table5_families,
+        theorems,
+    )
+
+    benches = {
+        "theorems": theorems.main,
+        "table2": table2_similarity.main,
+        "table1": table1_ratio_sweep.main,
+        "table3": table3_k1_sweep.main,
+        "table4": table4_nid.main,
+        "table5": table5_families.main,
+        "roofline": roofline.main,
+    }
+    selected = args.only or list(benches)
+    failed = []
+    for name in selected:
+        print(f"===== {name} =====", flush=True)
+        try:
+            benches[name]()
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print("FAILED benches:", failed)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

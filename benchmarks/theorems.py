@@ -1,0 +1,71 @@
+"""Numerical validation of the paper's Theorems 1-4 (exactness table).
+
+The strongest reproduction evidence available without original checkpoints:
+the theorems make exact claims; this prints max |loss - predicted| over
+random + outlier-heavy problems.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import activation_loss, asvd_compress, compress
+from repro.core.whitening import make_cholesky_whitener, make_eigen_whitener
+
+
+def run() -> List[Dict]:
+    rng = np.random.default_rng(0)
+    rows = []
+    for trial in range(8):
+        m, n, p = rng.integers(24, 96), rng.integers(16, 64), rng.integers(64, 256)
+        a = rng.standard_normal((m, n))
+        scales = np.ones(n)
+        scales[: max(1, n // 8)] = rng.uniform(10, 80)
+        x = rng.standard_normal((n, p)) * scales[:, None]
+        gram = x @ x.T
+        k = int(min(m, n) // 3) + 1
+
+        for method, whit in (
+            ("asvd1(thm2)", make_cholesky_whitener(gram, damp=0.0)),
+            ("asvd2(thm3)", make_eigen_whitener(gram)),
+        ):
+            factors, _ = asvd_compress(a, k, whit, use_randomized=False)
+            s_all = np.linalg.svd(whit.apply_right(a), compute_uv=False)
+            loss = activation_loss(a, factors.matrix(), x)
+            predicted = float(np.sqrt(np.sum(s_all[k:] ** 2)))
+            rows.append({
+                "trial": trial, "method": method, "m": int(m), "n": int(n),
+                "k": int(k), "loss": loss, "predicted": predicted,
+                "abs_err": abs(loss - predicted),
+                "rel_err": abs(loss - predicted) / max(predicted, 1e-12),
+            })
+        # Thm 3(ii) equivalence.
+        f1 = compress(a, k, "asvd1", gram=gram, damp=0.0, use_randomized=False)
+        f2 = compress(a, k, "asvd2", gram=gram, damp=0.0, use_randomized=False)
+        rows.append({
+            "trial": trial, "method": "asvd1==asvd2", "m": int(m), "n": int(n),
+            "k": int(k),
+            "abs_err": float(np.max(np.abs(f1.matrix() - f2.matrix()))),
+            "rel_err": 0.0, "loss": 0.0, "predicted": 0.0,
+        })
+    return rows
+
+
+def main():
+    t0 = time.time()
+    rows = run()
+    elapsed = (time.time() - t0) * 1e6 / len(rows)
+    worst = max(r["rel_err"] + r["abs_err"] for r in rows)
+    for method in ("asvd1(thm2)", "asvd2(thm3)", "asvd1==asvd2"):
+        sub = [r for r in rows if r["method"] == method]
+        print(f"  {method:<14} max_abs_err={max(r['abs_err'] for r in sub):.3e} "
+              f"(n={len(sub)})")
+    print(f"theorems,{elapsed:.1f},{worst:.3e}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

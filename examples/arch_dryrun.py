@@ -1,0 +1,49 @@
+"""Inspect any assigned architecture: params, active params, scan groups,
+compression plan at deployment ranks — no device allocation.
+
+    PYTHONPATH=src:. python examples/arch_dryrun.py --arch deepseek-v3-671b
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+import argparse
+
+from repro.configs import get_config
+from repro.core import CompressionConfig, build_plan
+from repro.models import build_model, count_active_params, count_params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-v3-671b")
+    ap.add_argument("--ratio", type=float, default=0.3)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    model = build_model(cfg)
+    total = count_params(cfg)
+    active = count_active_params(cfg)
+    print(f"{cfg.name}: {total/1e9:.1f}B params ({active/1e9:.2f}B active), "
+          f"{cfg.num_layers}L d={cfg.d_model}")
+    print("scan groups:")
+    for g in model.groups if hasattr(model, "groups") else []:
+        print(f"  {g.repeats} x {list(g.period)}")
+
+    plan = build_plan(
+        model.compressible_targets(),
+        CompressionConfig(method="nsvd1", ratio=args.ratio, multiple_of=128),
+    )
+    kept = 1 - plan.achieved_ratio
+    print(f"NSVD plan at {args.ratio:.0%} removal (MXU-aligned ranks): "
+          f"achieved {plan.achieved_ratio:.1%}")
+    n_show = 8
+    for line in plan.summary().splitlines()[1 : 1 + n_show]:
+        print(line)
+    print(f"  ... ({len(plan.targets)} matrices total)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""End-to-end serving driver (the paper's deployment scenario): serve a
+small model with batched requests through the continuous-batching engine,
+on BOTH dense and NSVD-compressed weights, and report tokens/s + agreement.
+
+    PYTHONPATH=src:. python examples/serve_compressed.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+import time
+
+import numpy as np
+
+from benchmarks.common import get_grams, train_small_lm
+from repro.core import CompressionConfig, build_plan, compress_params
+from repro.serving.engine import ServingEngine
+
+
+def drive(model, params, prompts, label):
+    eng = ServingEngine(model, params, max_batch=4, max_len=128)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=24)
+    t0 = time.time()
+    out = eng.run()
+    dt = time.time() - t0
+    n_tok = sum(len(v) for v in out.values())
+    print(f"  [{label}] {len(out)} requests, {n_tok} tokens "
+          f"in {dt:.1f}s ({n_tok/dt:.1f} tok/s)")
+    return out
+
+
+def main():
+    model, params, _ = train_small_lm("small-llama", steps=300)
+    grams = get_grams("small-llama", model, params)
+
+    cfg = CompressionConfig(method="nsvd1", ratio=0.2, dtype="float32",
+                            use_randomized=False)
+    plan = build_plan(model.compressible_targets(), cfg)
+    cparams = compress_params(params, plan, grams)
+    print(f"compressed: {plan.achieved_ratio:.1%} of params removed")
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(2, 250, size=rng.integers(4, 12)) for _ in range(10)]
+
+    dense_out = drive(model, params, prompts, "dense")
+    comp_out = drive(model, cparams, prompts, "nsvd-20%")
+
+    agree = [
+        float(np.mean(np.asarray(dense_out[u][:8]) == np.asarray(comp_out[u][:8])))
+        for u in dense_out
+    ]
+    print(f"  greedy agreement on first 8 tokens: {np.mean(agree):.0%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Calibration runner: collect Grams over a calibration stream.
+
+Mirrors the paper's protocol: N samples (default 256, as in §4) from the
+calibration domain; one forward pass per batch with taps enabled; Grams
+accumulate in float64 on host.  The forward is jitted once per shape.
+"""
+
+from __future__ import annotations
+
+import logging
+from typing import Dict, Iterable, Optional
+
+import jax
+import numpy as np
+
+from repro.core.compress import GramStore
+from repro.models.api import Model
+
+from .gram import accumulate_taps
+
+logger = logging.getLogger(__name__)
+
+
+def collect_grams(
+    model: Model,
+    params,
+    batches: Iterable[Dict[str, np.ndarray]],
+    max_batches: Optional[int] = None,
+) -> GramStore:
+    store = GramStore()
+
+    def fwd(p, batch):
+        taps: Dict = {}
+        kwargs = {}
+        if model.cfg.is_encdec:
+            kwargs["frames"] = batch["frames"]
+        elif "patches" in batch:
+            kwargs["patches"] = batch["patches"]
+        model.apply(p, batch["tokens"], mode="train", taps=taps, **kwargs)
+        return taps
+
+    jitted = jax.jit(fwd)
+    n = 0
+    for i, batch in enumerate(batches):
+        if max_batches is not None and i >= max_batches:
+            break
+        taps = jitted(params, batch)
+        accumulate_taps(store, taps)
+        n += 1
+    logger.info("calibration: %d batches, %d gram keys", n, len(list(store.keys())))
+    return store
+
+
+def calibration_batches(
+    vocab: int, domain: str, n_samples: int = 256, batch: int = 16, seq: int = 128,
+    seed: int = 7,
+):
+    """The paper's 256-sample calibration set, as a batch iterator."""
+    from repro.data.synth import DomainSampler
+
+    sampler = DomainSampler(vocab, seed=seed)
+    n_batches = max(1, n_samples // batch)
+    for _ in range(n_batches):
+        yield {"tokens": sampler.batch(domain, batch, seq)}

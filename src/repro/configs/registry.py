@@ -1,0 +1,49 @@
+"""Architecture registry: --arch <id> lookup for every launcher."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from .base import ModelConfig
+from .chatglm3_6b import CONFIG as CHATGLM3_6B
+from .deepseek_67b import CONFIG as DEEPSEEK_67B
+from .deepseek_v3_671b import CONFIG as DEEPSEEK_V3_671B
+from .jamba_v0_1_52b import CONFIG as JAMBA_V0_1_52B
+from .llava_next_mistral_7b import CONFIG as LLAVA_NEXT_MISTRAL_7B
+from .minicpm3_4b import CONFIG as MINICPM3_4B
+from .moonshot_v1_16b_a3b import CONFIG as MOONSHOT_V1_16B_A3B
+from .paper_models import LLAMA_7B, MISTRAL_7B, OPT_6_7B
+from .phi3_medium_14b import CONFIG as PHI3_MEDIUM_14B
+from .rwkv6_1_6b import CONFIG as RWKV6_1_6B
+from .whisper_small import CONFIG as WHISPER_SMALL
+
+# The 10 assigned architectures.
+ASSIGNED: Dict[str, ModelConfig] = {
+    "moonshot-v1-16b-a3b": MOONSHOT_V1_16B_A3B,
+    "deepseek-v3-671b": DEEPSEEK_V3_671B,
+    "whisper-small": WHISPER_SMALL,
+    "deepseek-67b": DEEPSEEK_67B,
+    "phi3-medium-14b": PHI3_MEDIUM_14B,
+    "minicpm3-4b": MINICPM3_4B,
+    "chatglm3-6b": CHATGLM3_6B,
+    "llava-next-mistral-7b": LLAVA_NEXT_MISTRAL_7B,
+    "jamba-v0.1-52b": JAMBA_V0_1_52B,
+    "rwkv6-1.6b": RWKV6_1_6B,
+}
+
+# Paper's own families (extra material).
+PAPER: Dict[str, ModelConfig] = {
+    "llama-7b": LLAMA_7B,
+    "opt-6.7b": OPT_6_7B,
+    "mistral-7b": MISTRAL_7B,
+}
+
+ALL: Dict[str, ModelConfig] = {**ASSIGNED, **PAPER}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ALL:
+        raise KeyError(
+            f"unknown arch {arch!r}; available: {sorted(ALL)}"
+        )
+    return ALL[arch]

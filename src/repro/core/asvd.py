@@ -1,0 +1,122 @@
+"""Activation-aware SVD compressors: SVD, ASVD-0, ASVD-I, ASVD-II, ASVD-III.
+
+Each compressor maps (A, calibration stats, rank k) -> (W, Z) with
+A ~= W @ Z, rank(W) = rank(Z) = k, minimizing (or sub-optimally bounding)
+the activation-weighted loss ||(A - WZ) X||_F per the paper's Theorems 1-4.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from .svd import SVDResult, best_svd, truncated_svd
+from .whitening import Whitener, make_whitener
+
+Array = np.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class LowRankFactors:
+    """A ~= w @ z  (w: (m, k), z: (k, n)); optionally a nested second pair."""
+
+    w: Array
+    z: Array
+    w2: Optional[Array] = None
+    z2: Optional[Array] = None
+    method: str = "svd"
+
+    @property
+    def rank(self) -> int:
+        k = int(self.w.shape[1])
+        if self.w2 is not None:
+            k += int(self.w2.shape[1])
+        return k
+
+    @property
+    def nested(self) -> bool:
+        return self.w2 is not None
+
+    def matrix(self) -> Array:
+        a = self.w @ self.z
+        if self.nested:
+            a = a + self.w2 @ self.z2
+        return a
+
+    def param_count(self) -> int:
+        n = self.w.size + self.z.size
+        if self.nested:
+            n += self.w2.size + self.z2.size
+        return int(n)
+
+    def astype(self, dtype) -> "LowRankFactors":
+        return LowRankFactors(
+            self.w.astype(dtype),
+            self.z.astype(dtype),
+            None if self.w2 is None else self.w2.astype(dtype),
+            None if self.z2 is None else self.z2.astype(dtype),
+            self.method,
+        )
+
+
+def plain_svd_compress(a: Array, k: int, use_randomized: bool = True) -> LowRankFactors:
+    """Standard SVD baseline (activation-unaware, Thm 1)."""
+    res = best_svd(a, k) if use_randomized else truncated_svd(a, k)
+    w, z = res.factors("sqrt")
+    return LowRankFactors(w, z, method="svd")
+
+
+def asvd_compress(
+    a: Array,
+    k: int,
+    whitener: Whitener,
+    use_randomized: bool = True,
+) -> Tuple[LowRankFactors, SVDResult]:
+    """Shared ASVD machinery: SVD(A S), truncate to k, unwhiten the right factor.
+
+    Returns the factors plus the (truncated) SVD of A S — the singular values
+    are the *exact* per-direction activation losses for ASVD-I/II (Thms 2/3),
+    which the rank allocator uses to budget ranks across layers.
+    """
+    a = np.asarray(a, dtype=np.float64)
+    aw = whitener.apply_right(a)
+    res = best_svd(aw, k) if use_randomized else truncated_svd(aw, k)
+    # W = U sqrt(s) stays; Z = sqrt(s) V^T S^{-1} returns to weight space.
+    w, z_whit = res.factors("sqrt")
+    z = whitener.unapply_right(z_whit)  # (k, n) @ (n, n) -> (k, n)
+    return LowRankFactors(w, z, method=whitener.method), res
+
+
+def compress(
+    a: Array,
+    k: int,
+    method: str = "asvd2",
+    gram: Optional[Array] = None,
+    absmean: Optional[Array] = None,
+    damp: float = 1e-6,
+    use_randomized: bool = True,
+) -> LowRankFactors:
+    """One-call façade for the non-nested methods."""
+    m = method.lower()
+    if m in ("svd", "plain"):
+        return plain_svd_compress(a, k, use_randomized)
+    whit = make_whitener(m, gram=gram, absmean=absmean, damp=damp)
+    factors, _ = asvd_compress(a, k, whit, use_randomized)
+    return factors
+
+
+def activation_loss(a: Array, approx: Array, x: Array) -> float:
+    """||(A - approx) X||_F — the quantity Theorems 2-4 bound."""
+    d = (np.asarray(a, np.float64) - np.asarray(approx, np.float64)) @ np.asarray(
+        x, np.float64
+    )
+    return float(np.linalg.norm(d, "fro"))
+
+
+def gram_loss(a: Array, approx: Array, gram: Array) -> float:
+    """sqrt(tr((A-B) G (A-B)^T)) == ||(A-B)X||_F computed from the Gram only."""
+    d = np.asarray(a, np.float64) - np.asarray(approx, np.float64)
+    val = float(np.einsum("ij,jk,ik->", d, np.asarray(gram, np.float64), d))
+    return float(np.sqrt(max(val, 0.0)))

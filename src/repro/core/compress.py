@@ -1,0 +1,192 @@
+"""Compression orchestrator: dense param pytree -> factored param pytree.
+
+Runs on host (numpy/float64) per matrix, GPTQ-style.  Handles stacked
+(scan-over-layers) kernels by compressing each slice against its per-layer
+Gram with a shared rank, producing stacked factors that keep the model
+scannable.
+"""
+
+from __future__ import annotations
+
+import logging
+import time
+from typing import Any, Dict, Mapping, MutableMapping, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .lowrank import factors_to_params
+from .nsvd import nested_compress
+from .plan import CompressionConfig, CompressionPlan, TargetSpec, build_plan
+
+logger = logging.getLogger(__name__)
+
+
+class GramStore:
+    """name -> (gram (n,n) fp64, absmean (n,), token_count).
+
+    Filled by the calibration runner; consumed here.  ``fallback`` lets
+    per-expert grams defer to the shared layer gram when an expert saw too
+    few tokens for a well-conditioned Gram (DESIGN.md §7).
+    """
+
+    def __init__(self):
+        self._grams: Dict[str, np.ndarray] = {}
+        self._absmean: Dict[str, np.ndarray] = {}
+        self._counts: Dict[str, float] = {}
+
+    def update(self, key: str, gram: np.ndarray, absmean: np.ndarray, count: float):
+        if key in self._grams:
+            self._grams[key] = self._grams[key] + gram
+            self._absmean[key] = self._absmean[key] + absmean
+            self._counts[key] += count
+        else:
+            self._grams[key] = np.asarray(gram, np.float64).copy()
+            self._absmean[key] = np.asarray(absmean, np.float64).copy()
+            self._counts[key] = float(count)
+
+    def gram(self, key: str, fallback: Optional[str] = None, min_count: int = 0) -> np.ndarray:
+        if key in self._grams and self._counts[key] >= min_count:
+            return self._grams[key]
+        if fallback is not None and fallback in self._grams:
+            return self._grams[fallback]
+        raise KeyError(f"no Gram for {key!r} (fallback={fallback!r})")
+
+    def absmean(self, key: str, fallback: Optional[str] = None) -> np.ndarray:
+        k = key if key in self._absmean else fallback
+        if k is None or k not in self._absmean:
+            raise KeyError(f"no absmean for {key!r}")
+        c = max(self._counts[k], 1.0)
+        return self._absmean[k] / c
+
+    def count(self, key: str) -> float:
+        return self._counts.get(key, 0.0)
+
+    def keys(self):
+        return self._grams.keys()
+
+    def save(self, path: str):
+        np.savez_compressed(
+            path,
+            **{f"g::{k}": v for k, v in self._grams.items()},
+            **{f"a::{k}": v for k, v in self._absmean.items()},
+            **{f"c::{k}": np.asarray(v) for k, v in self._counts.items()},
+        )
+
+    @classmethod
+    def load(cls, path: str) -> "GramStore":
+        store = cls()
+        data = np.load(path)
+        names = {k[3:] for k in data.files if k.startswith("g::")}
+        for name in names:
+            store._grams[name] = data[f"g::{name}"]
+            store._absmean[name] = data[f"a::{name}"]
+            store._counts[name] = float(data[f"c::{name}"])
+        return store
+
+
+def _get_subtree(tree: MutableMapping, path: Tuple[str, ...]):
+    node = tree
+    for p in path:
+        node = node[p]
+    return node
+
+
+def _set_subtree(tree: MutableMapping, path: Tuple[str, ...], value):
+    node = tree
+    for p in path[:-1]:
+        node = node[p]
+    node[path[-1]] = value
+
+
+def compress_matrix(
+    kernel: np.ndarray,
+    rank: int,
+    config: CompressionConfig,
+    gram: Optional[np.ndarray],
+    absmean: Optional[np.ndarray],
+) -> Dict[str, Any]:
+    """Compress one (in, out) kernel -> factored params dict (numpy)."""
+    a = np.asarray(kernel, np.float64).T  # paper orientation (out, in)
+    factors = nested_compress(
+        a,
+        rank,
+        config.method,
+        gram=gram,
+        absmean=absmean,
+        k1_frac=config.k1_frac,
+        damp=config.damp,
+        use_randomized=config.use_randomized,
+    )
+    return factors_to_params(factors, dtype=getattr(jnp, config.dtype))
+
+
+def compress_params(
+    params: Mapping[str, Any],
+    plan: CompressionPlan,
+    grams: GramStore,
+) -> Dict[str, Any]:
+    """Produce a new param pytree with every planned target factored.
+
+    Non-target leaves are passed through by reference.  Stacked kernels
+    (L, in, out) are compressed slice-by-slice against f"{gram_key}/{i}".
+    """
+    import copy
+
+    new_params = copy.deepcopy(_to_mutable(params))
+    cfg = plan.config
+    needs_gram = cfg.method not in ("svd", "plain")
+    for spec in plan.targets:
+        t0 = time.time()
+        leaf = _get_subtree(new_params, spec.path)
+        if "kernel" not in leaf:
+            raise KeyError(f"target {spec.name} has no dense kernel (already compressed?)")
+        kernel = np.asarray(leaf["kernel"], np.float32)
+        rank = plan.rank_of(spec)
+        if spec.stacked:
+            flat = kernel.reshape(-1, spec.in_dim, spec.out_dim)
+            outs = []
+            for flat_i, idx in enumerate(np.ndindex(*spec.stacked)):
+                g = a = None
+                if needs_gram:
+                    suffix = "/".join(str(i) for i in idx)
+                    key = (
+                        f"{spec.gram_key}/{suffix}"
+                        if spec.per_layer_gram
+                        else spec.gram_key
+                    )
+                    g = grams.gram(key, fallback=spec.gram_key, min_count=spec.in_dim // 4)
+                    a = grams.absmean(key, fallback=spec.gram_key)
+                outs.append(compress_matrix(flat[flat_i], rank, cfg, g, a))
+            factored = {
+                k: jnp.stack([o[k] for o in outs]).reshape(
+                    *spec.stacked, *outs[0][k].shape
+                )
+                for k in outs[0]
+            }
+        else:
+            g = a = None
+            if needs_gram:
+                g = grams.gram(spec.gram_key)
+                a = grams.absmean(spec.gram_key)
+            factored = compress_matrix(kernel, rank, cfg, g, a)
+        _set_subtree(new_params, spec.path, factored)
+        logger.info("compressed %s rank=%d in %.2fs", spec.name, rank, time.time() - t0)
+    return new_params
+
+
+def _to_mutable(tree):
+    if isinstance(tree, Mapping):
+        return {k: _to_mutable(v) for k, v in tree.items()}
+    return tree
+
+
+def compress_model(
+    params: Mapping[str, Any],
+    targets,
+    grams: GramStore,
+    config: CompressionConfig,
+) -> Tuple[Dict[str, Any], CompressionPlan]:
+    """Plan + execute in one call (the public API used by examples)."""
+    plan = build_plan(targets, config)
+    return compress_params(params, plan, grams), plan

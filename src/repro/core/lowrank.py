@@ -1,0 +1,112 @@
+"""Runtime low-rank linear application (JAX side).
+
+A dense linear stores params {"kernel": (in, out)} and computes y = x @ kernel.
+After compression the same call site consumes either
+
+    {"u": (in, k), "v": (k, out)}                        (single factorization)
+    {"u": (in, k1), "v": (k1, out),
+     "u2": (in, k2), "v2": (k2, out)}                    (nested, paper Eq. 6)
+
+and computes y = (x @ u) @ v [+ (x @ u2) @ v2].  The nested form is the
+paper's O = W1(Z1 x) + W2(Z2 x) transposed into row-vector convention
+(u = Z^T, v = W^T).
+
+``linear_apply`` is the single entry point used by every model layer, so the
+whole zoo transparently runs dense or compressed.  ``use_kernel=True`` routes
+the nested matmul through the Pallas kernel (TPU); the default jnp path is
+what the dry-run lowers.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .asvd import LowRankFactors
+
+
+def is_lowrank(params: Mapping[str, Any]) -> bool:
+    return "u" in params
+
+
+def is_nested(params: Mapping[str, Any]) -> bool:
+    return "u2" in params
+
+
+def linear_apply(
+    params: Mapping[str, Any],
+    x: jax.Array,
+    use_kernel: bool = False,
+    precision=None,
+) -> jax.Array:
+    """y = x @ W for dense, factored, or nested-factored params.
+
+    x: (..., in) -> (..., out).  Factor matmuls contract in the order that
+    keeps the intermediate at rank width (never materializes the dense
+    kernel).
+    """
+    if "kernel" in params:
+        return jnp.matmul(x, params["kernel"], precision=precision)
+    if "u" not in params:
+        raise KeyError(f"linear params must have 'kernel' or 'u', got {list(params)}")
+    if use_kernel and "u2" in params:
+        from repro.kernels.nested_lowrank import ops as nlr_ops
+
+        return nlr_ops.nested_lowrank_matmul(
+            x, params["u"], params["v"], params["u2"], params["v2"]
+        )
+    y = jnp.matmul(jnp.matmul(x, params["u"], precision=precision), params["v"],
+                   precision=precision)
+    if "u2" in params:
+        y = y + jnp.matmul(
+            jnp.matmul(x, params["u2"], precision=precision), params["v2"],
+            precision=precision,
+        )
+    return y
+
+
+def dense_equivalent(params: Mapping[str, Any]) -> jax.Array:
+    """Materialize the (in, out) kernel a factored param represents."""
+    if "kernel" in params:
+        return params["kernel"]
+    k = jnp.matmul(params["u"], params["v"])
+    if "u2" in params:
+        k = k + jnp.matmul(params["u2"], params["v2"])
+    return k
+
+
+def factors_to_params(factors: LowRankFactors, dtype=jnp.bfloat16) -> dict:
+    """Convert paper-orientation factors (A ~= W Z, A = kernel^T) into the
+    runtime {"u","v"[,"u2","v2"]} pytree.
+
+    kernel = A^T = Z^T W^T, so u = Z^T (in, k) and v = W^T (k, out).
+    """
+    out = {
+        "u": jnp.asarray(np.ascontiguousarray(factors.z.T), dtype=dtype),
+        "v": jnp.asarray(np.ascontiguousarray(factors.w.T), dtype=dtype),
+    }
+    if factors.nested:
+        out["u2"] = jnp.asarray(np.ascontiguousarray(factors.z2.T), dtype=dtype)
+        out["v2"] = jnp.asarray(np.ascontiguousarray(factors.w2.T), dtype=dtype)
+    return out
+
+
+def param_count(params: Mapping[str, Any]) -> int:
+    return int(sum(np.prod(v.shape) for v in params.values()))
+
+
+def flops_per_token(params: Mapping[str, Any]) -> int:
+    """Forward multiply-accumulate FLOPs (x2) per input row."""
+    if "kernel" in params:
+        i, o = params["kernel"].shape[-2:]
+        return 2 * i * o
+    total = 0
+    for a, b in (("u", "v"), ("u2", "v2")):
+        if a in params:
+            i, k = params[a].shape[-2:]
+            _, o = params[b].shape[-2:]
+            total += 2 * (i * k + k * o)
+    return total

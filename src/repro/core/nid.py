@@ -1,0 +1,94 @@
+"""Low-rank (column) interpolative decomposition — step (5b) alternative.
+
+A column ID approximates A ~= C @ T where C = A[:, J] is k actual columns of
+A and T is the interpolation matrix with T[:, J] = I_k.  We implement the
+standard pivoted-QR construction (Martinsson, Rokhlin & Tygert 2011):
+
+    A P = Q R,  R = [R11 R12],   C = A[:, J(first k pivots)]
+    T = [I_k, R11^{-1} R12] P^T
+
+The draw over SVD is that C keeps *actual weight columns* (sparsity /
+quantization-friendliness are preserved) and the factor is cheaper to form.
+The paper uses it for the residual step of NID-I/II.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from .asvd import LowRankFactors
+
+Array = np.ndarray
+
+
+def _pivoted_qr(a: Array) -> Tuple[Array, Array, np.ndarray]:
+    """Householder QR with column pivoting (numpy-only; no scipy in image).
+
+    Returns (q, r, piv) with a[:, piv] == q @ r and diag(r) non-increasing
+    in magnitude.
+    """
+    a = np.array(a, dtype=np.float64, copy=True)
+    m, n = a.shape
+    kmax = min(m, n)
+    piv = np.arange(n)
+    col_norms = np.sum(a * a, axis=0)
+    q = np.eye(m)
+    for j in range(kmax):
+        # Pivot: swap in the column with the largest remaining norm.
+        p = j + int(np.argmax(col_norms[j:]))
+        if p != j:
+            a[:, [j, p]] = a[:, [p, j]]
+            piv[[j, p]] = piv[[p, j]]
+            col_norms[[j, p]] = col_norms[[p, j]]
+        # Householder reflector for column j.
+        x = a[j:, j]
+        normx = np.linalg.norm(x)
+        if normx <= 1e-300:
+            col_norms[j:] = 0.0
+            continue
+        v = x.copy()
+        v[0] += np.sign(x[0]) * normx if x[0] != 0 else normx
+        v = v / np.linalg.norm(v)
+        a[j:, j:] -= 2.0 * np.outer(v, v @ a[j:, j:])
+        q[:, j:] -= 2.0 * np.outer(q[:, j:] @ v, v)
+        # Downdate remaining column norms.
+        if j + 1 < n:
+            col_norms[j + 1 :] = np.maximum(col_norms[j + 1 :] - a[j, j + 1 :] ** 2, 0.0)
+    r = np.triu(a[:kmax, :])
+    return q[:, :kmax], r, piv
+
+
+def column_id(a: Array, k: int) -> Tuple[np.ndarray, Array]:
+    """Rank-k column interpolative decomposition.
+
+    Returns (cols, t): a ~= a[:, cols] @ t, with t (k, n) and
+    t[:, cols] == I_k.
+    """
+    a = np.asarray(a, dtype=np.float64)
+    m, n = a.shape
+    k = int(min(k, min(m, n)))
+    if k == 0:
+        return np.zeros(0, dtype=np.int64), np.zeros((0, n))
+    _, r, piv = _pivoted_qr(a)
+    r11 = r[:k, :k]
+    r12 = r[:k, k:]
+    # Solve R11 T12 = R12 (upper-triangular).
+    if r12.size:
+        t12 = np.linalg.solve(r11, r12)
+    else:
+        t12 = np.zeros((k, 0))
+    t_perm = np.concatenate([np.eye(k), t12], axis=1)  # in pivoted order
+    t = np.zeros((k, n))
+    t[:, piv] = t_perm
+    cols = piv[:k].astype(np.int64)
+    return cols, t
+
+
+def id_compress(a: Array, k: int) -> LowRankFactors:
+    """A ~= C @ T as LowRankFactors (C = actual columns of A)."""
+    a = np.asarray(a, dtype=np.float64)
+    cols, t = column_id(a, k)
+    c = a[:, cols]
+    return LowRankFactors(c, t, method="id")

@@ -1,0 +1,119 @@
+"""NSVD / NID — the paper's nested activation-aware decomposition (Eq. 5).
+
+Step (5a): rank-k1 activation-aware truncation (ASVD-I or ASVD-II):
+    A~1 = argmin_{rank k1} ||(A - B) X||_F
+Step (5b): rank-k2 plain approximation of the *residual*, adhering to A:
+    A~2 = argmin_{rank k2} ||B - (A - A~1)||_F        (SVD  -> NSVD)
+          or column interpolative decomposition        (ID   -> NID)
+
+Inference: O = W1 (Z1 x) + W2 (Z2 x); with k1 + k2 = k this matches the
+FLOPs and storage of a single rank-k ASVD factorization (paper Eq. 6).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from .asvd import LowRankFactors, asvd_compress, plain_svd_compress
+from .nid import id_compress
+from .svd import best_svd
+from .whitening import make_whitener
+
+Array = np.ndarray
+
+
+def split_rank(k: int, k1_frac: float) -> tuple[int, int]:
+    """Split budget k into (k1, k2) with k1 = round(k1_frac * k), k2 = k - k1.
+
+    Paper default k1_frac = 0.95; Table 3 sweeps {0.99, 0.95, 0.90, 0.85, 0.80}.
+    Guarantees k1 >= 1 when k >= 1 (the activation-aware step always runs) and
+    k2 >= 0 (k1_frac == 1.0 degenerates to plain ASVD).
+    """
+    k = int(k)
+    if k <= 0:
+        return 0, 0
+    k1 = int(round(k1_frac * k))
+    k1 = max(1, min(k, k1))
+    return k1, k - k1
+
+
+def nsvd_compress(
+    a: Array,
+    k: int,
+    gram: Array,
+    k1_frac: float = 0.95,
+    variant: str = "nsvd2",
+    damp: float = 1e-6,
+    use_randomized: bool = True,
+) -> LowRankFactors:
+    """Nested compression.
+
+    variant:
+      'nsvd1' — step (5a) via Cholesky whitening (Thm 2), (5b) via SVD
+      'nsvd2' — step (5a) via eigen-SVD whitening (Thm 3), (5b) via SVD
+      'nid1'  — step (5a) via Cholesky whitening, (5b) via column ID
+      'nid2'  — step (5a) via eigen-SVD whitening, (5b) via column ID
+    """
+    v = variant.lower()
+    if v not in ("nsvd1", "nsvd2", "nid1", "nid2"):
+        raise ValueError(f"unknown nested variant {variant!r}")
+    whit_method = "asvd1" if v.endswith("1") else "asvd2"
+    residual_id = v.startswith("nid")
+
+    a = np.asarray(a, dtype=np.float64)
+    k1, k2 = split_rank(k, k1_frac)
+    if k1 == 0:
+        raise ValueError("rank budget must be >= 1")
+
+    whit = make_whitener(whit_method, gram=gram, damp=damp)
+    first, _ = asvd_compress(a, k1, whit, use_randomized=use_randomized)
+
+    if k2 == 0:
+        return LowRankFactors(first.w, first.z, method=v)
+
+    residual = a - first.matrix()
+    if residual_id:
+        second = id_compress(residual, k2)
+    else:
+        second = plain_svd_compress(residual, k2, use_randomized=use_randomized)
+
+    return LowRankFactors(
+        w=first.w, z=first.z, w2=second.w, z2=second.z, method=v
+    )
+
+
+def nested_compress(
+    a: Array,
+    k: int,
+    method: str,
+    gram: Optional[Array] = None,
+    absmean: Optional[Array] = None,
+    k1_frac: float = 0.95,
+    damp: float = 1e-6,
+    use_randomized: bool = True,
+) -> LowRankFactors:
+    """Unified façade over every compressor in the paper.
+
+    method in {svd, asvd0, asvd1, asvd2, asvd3, nsvd1, nsvd2, nid1, nid2}.
+    """
+    m = method.lower()
+    if m in ("nsvd1", "nsvd2", "nid1", "nid2"):
+        if gram is None:
+            raise ValueError(f"{method} requires a calibration Gram")
+        return nsvd_compress(
+            a, k, gram, k1_frac=k1_frac, variant=m, damp=damp,
+            use_randomized=use_randomized,
+        )
+    if m in ("svd", "plain"):
+        return plain_svd_compress(a, k, use_randomized)
+    whit = make_whitener(m, gram=gram, absmean=absmean, damp=damp)
+    factors, _ = asvd_compress(a, k, whit, use_randomized=use_randomized)
+    return factors
+
+
+ALL_METHODS = (
+    "svd", "asvd0", "asvd1", "asvd2", "asvd3", "nsvd1", "nsvd2", "nid1", "nid2",
+)
+NESTED_METHODS = ("nsvd1", "nsvd2", "nid1", "nid2")

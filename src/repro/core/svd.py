@@ -1,0 +1,154 @@
+"""Truncated / randomized SVD primitives used by every compressor.
+
+All factorization math runs on host in float64 by default: compression is an
+offline, once-per-checkpoint pass (GPTQ-style), and the theorem-level
+exactness tests (loss == sqrt(sum of truncated sigma^2)) only hold to
+float64 tolerances.  The *runtime* factors are cast back to the model dtype.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+Array = np.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class SVDResult:
+    """Thin container for a (possibly truncated) SVD  A ~= U @ diag(s) @ Vt."""
+
+    u: Array  # (m, k)
+    s: Array  # (k,)
+    vt: Array  # (k, n)
+
+    @property
+    def rank(self) -> int:
+        return int(self.s.shape[0])
+
+    def truncate(self, k: int) -> "SVDResult":
+        k = min(k, self.rank)
+        return SVDResult(self.u[:, :k], self.s[:k], self.vt[:k, :])
+
+    def matrix(self) -> Array:
+        return (self.u * self.s[None, :]) @ self.vt
+
+    def factors(self, split: str = "sqrt") -> Tuple[Array, Array]:
+        """Return (W, Z) with W @ Z == U diag(s) Vt.
+
+        split: 'sqrt'  -> W = U sqrt(s), Z = sqrt(s) Vt  (balanced norms)
+               'left'  -> W = U s,       Z = Vt
+               'right' -> W = U,         Z = s Vt
+        """
+        if split == "sqrt":
+            rs = np.sqrt(self.s)
+            return self.u * rs[None, :], rs[:, None] * self.vt
+        if split == "left":
+            return self.u * self.s[None, :], self.vt
+        if split == "right":
+            return self.u, self.s[:, None] * self.vt
+        raise ValueError(f"unknown split {split!r}")
+
+
+def svd(a: Array, full_matrices: bool = False, dtype=np.float64) -> SVDResult:
+    """Dense SVD in float64 (host), robust to LAPACK gesdd nonconvergence.
+
+    Fallback: eigendecomposition of the smaller Gram (A^T A or A A^T) —
+    always converges for symmetric matrices; accuracy loss ~sqrt(eps) only
+    on the smallest singular values, which truncation discards anyway.
+    """
+    a = np.asarray(a, dtype=dtype)
+    try:
+        u, s, vt = np.linalg.svd(a, full_matrices=full_matrices)
+        return SVDResult(u, s, vt)
+    except np.linalg.LinAlgError:
+        m, n = a.shape
+        if n <= m:
+            lam, v = np.linalg.eigh(a.T @ a)
+            lam = np.maximum(lam[::-1], 0.0)
+            v = v[:, ::-1]
+            s = np.sqrt(lam)
+            safe = np.maximum(s, 1e-300)
+            u = (a @ v) / safe[None, :]
+            return SVDResult(u, s, v.T)
+        lam, u = np.linalg.eigh(a @ a.T)
+        lam = np.maximum(lam[::-1], 0.0)
+        u = u[:, ::-1]
+        s = np.sqrt(lam)
+        safe = np.maximum(s, 1e-300)
+        vt = (u.T @ a) / safe[:, None]
+        return SVDResult(u, s, vt)
+
+
+def truncated_svd(a: Array, k: int, dtype=np.float64) -> SVDResult:
+    """Best rank-k approximation (Eckart–Young–Mirsky, Thm 1)."""
+    return svd(a, dtype=dtype).truncate(k)
+
+
+def randomized_svd(
+    a: Array,
+    k: int,
+    oversample: int = 16,
+    n_iter: int = 4,
+    seed: int = 0,
+    dtype=np.float64,
+) -> SVDResult:
+    """Halko–Martinsson–Tropp randomized range finder + small SVD.
+
+    Used for very wide matrices (vocab-sized unembeddings, giant FFNs) where a
+    dense SVD of the full matrix is needlessly cubic.  ``n_iter`` power
+    iterations sharpen the spectrum estimate; 4 is plenty for the
+    fast-decaying spectra of whitened LLM weights.
+    """
+    a = np.asarray(a, dtype=dtype)
+    m, n = a.shape
+    ell = min(k + oversample, min(m, n))
+    rng = np.random.default_rng(seed)
+    omega = rng.standard_normal((n, ell)).astype(dtype)
+    y = a @ omega
+    # Power iterations with QR re-orthonormalization for stability.
+    for _ in range(n_iter):
+        y, _ = np.linalg.qr(y)
+        y = a @ (a.T @ y)
+    q, _ = np.linalg.qr(y)  # (m, ell)
+    b = q.T @ a  # (ell, n)
+    ub, s, vt = np.linalg.svd(b, full_matrices=False)
+    u = q @ ub
+    return SVDResult(u[:, :k], s[:k], vt[:k, :])
+
+
+def best_svd(
+    a: Array,
+    k: int,
+    randomized_threshold: int = 6144,
+    dtype=np.float64,
+    seed: int = 0,
+) -> SVDResult:
+    """Dispatch dense vs randomized SVD on matrix size.
+
+    Dense SVD is O(min(m,n)^2 * max(m,n)); for matrices whose small dimension
+    exceeds ``randomized_threshold`` and where k is a small fraction of it,
+    randomized SVD is an order of magnitude cheaper at negligible accuracy
+    cost (validated in tests against the dense oracle).
+    """
+    m, n = a.shape
+    small = min(m, n)
+    if small > randomized_threshold and k < small // 4:
+        return randomized_svd(a, k, dtype=dtype, seed=seed)
+    return truncated_svd(a, k, dtype=dtype)
+
+
+def frobenius(a: Array) -> float:
+    return float(np.linalg.norm(np.asarray(a, dtype=np.float64), "fro"))
+
+
+def low_rank_storage(m: int, n: int, k: int) -> int:
+    """Parameter count of a rank-k factorization of an (m, n) matrix."""
+    return (m + n) * k
+
+
+def max_rank_for_budget(m: int, n: int, budget: int) -> int:
+    """Largest k with (m + n) * k <= budget (the fixed-precision dual)."""
+    return max(0, budget // (m + n))

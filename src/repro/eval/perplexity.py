@@ -1,0 +1,86 @@
+"""Perplexity evaluation harness (paper metric, Tables 1 & 3-6)."""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import Model
+from repro.models.losses import next_token_xent
+
+
+def evaluate_ppl(
+    model: Model,
+    params,
+    batches: Iterable[Dict[str, np.ndarray]],
+    max_batches: Optional[int] = None,
+) -> float:
+    """exp(mean nats/token) over the stream."""
+
+    def nll(p, batch):
+        kwargs = {}
+        if model.cfg.is_encdec:
+            kwargs["frames"] = batch["frames"]
+        elif "patches" in batch:
+            kwargs["patches"] = batch["patches"]
+        logits, _, _ = model.apply(p, batch["tokens"], mode="train", **kwargs)
+        return next_token_xent(logits, batch["tokens"])
+
+    jitted = jax.jit(nll)
+    tot, n = 0.0, 0
+    for i, batch in enumerate(batches):
+        if max_batches is not None and i >= max_batches:
+            break
+        tot += float(jitted(params, batch))
+        n += 1
+    return float(np.exp(tot / max(n, 1)))
+
+
+def eval_batches(vocab: int, domain: str, n_batches: int = 8, batch: int = 16,
+                 seq: int = 128, seed: int = 1234):
+    from repro.data.synth import DomainSampler
+
+    sampler = DomainSampler(vocab, seed=seed)
+    for _ in range(n_batches):
+        yield {"tokens": sampler.batch(domain, batch, seq)}
+
+
+def activation_similarity(
+    model: Model, params, domain_a: str, domain_b: str, vocab: int,
+    n_batches: int = 4, batch: int = 8, seq: int = 64,
+) -> Dict[str, float]:
+    """Paper Table 2 / Figure 1: cosine similarity between mean per-layer
+    input-activation vectors of two domains."""
+    from repro.data.synth import DomainSampler
+
+    def mean_taps(domain, seed):
+        sampler = DomainSampler(vocab, seed=seed)
+
+        def fwd(p, tokens):
+            taps: Dict = {}
+            model.apply(p, tokens, mode="train", taps=taps)
+            return {
+                k: jnp.mean(jnp.abs(v.reshape(-1, v.shape[-1])), axis=0)
+                for k, v in taps.items()
+                if k.endswith(".in")
+            }
+
+        jitted = jax.jit(fwd)
+        acc: Dict[str, np.ndarray] = {}
+        for _ in range(n_batches):
+            out = jitted(params, sampler.batch(domain, batch, seq))
+            for k, v in out.items():
+                acc[k] = acc.get(k, 0) + np.asarray(v, np.float64)
+        return acc
+
+    ta = mean_taps(domain_a, seed=11)
+    tb = mean_taps(domain_b, seed=22)
+    sims = {}
+    for k in ta:
+        a, b = ta[k], tb[k]
+        denom = np.linalg.norm(a) * np.linalg.norm(b)
+        sims[k] = float(a @ b / denom) if denom > 0 else 0.0
+    return sims

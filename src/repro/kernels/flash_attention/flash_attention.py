@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: causal flash attention (GQA), 32k-prefill hot-spot.
+
+Standard flash-attention-2 schedule adapted to TPU/Pallas:
+  grid = (batch*kv_head, q_blocks, kv_blocks) with the kv axis innermost
+  (sequential revisits of the same output block carry the online-softmax
+  accumulators in VMEM scratch).  GQA: all G query heads of one KV head are
+  processed together, so K/V tiles stream from HBM once per q block, and the
+  (G*bq, bk) score tile keeps the MXU fed even for kv-light archs
+  (chatglm3: G=16).
+
+Causality: kv blocks strictly above the diagonal are skipped via
+pl.when (no FLOPs, no HBM traffic beyond the prefetch); the diagonal block
+applies the triangular mask.
+
+This kernel is the TPU twin of models/attention.chunked_causal_attention
+(the jnp path the dry-run lowers); tests sweep shapes/dtypes against it in
+interpret mode.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *, scale, bq, bk):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # Causal skip: this kv block starts after the last query of the block.
+    @pl.when(kj * bk <= qi * bq + bq - 1)
+    def _():
+        q = q_ref[0, 0]  # (G*bq, hd)
+        k = k_ref[0]  # (bk, hd)
+        v = v_ref[0]  # (bk, hd)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+        # Triangular mask on the diagonal block (and partial overlaps).
+        g_bq = q.shape[0]
+        g = g_bq // bq
+        q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (g, bq), 1).reshape(g_bq)
+        k_pos = kj * bk + jax.lax.iota(jnp.int32, bk)
+        causal = q_pos[:, None] >= k_pos[None, :]
+        s = jnp.where(causal, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k", "interpret"))
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    block_q: int = 256,
+    block_k: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (B, S, Hq, hd); k/v: (B, S, Hkv, hd) -> (B, S, Hq, hd), causal.
+
+    S must divide by the block sizes (ops.py pads).
+    """
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    scale = 1.0 / (hd ** 0.5)
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+
+    # Layout: fold (B, Hkv) into the grid's major axis; queries grouped.
+    # q -> (B*Hkv, nq, G*bq, hd): group dim g varies fastest within a tile.
+    qg = q.reshape(b, s, hkv, g, hd).transpose(0, 2, 3, 1, 4)  # (B,Hkv,G,S,hd)
+    qg = qg.reshape(b * hkv, g, s, hd)
+    kg = k.transpose(0, 2, 1, 3).reshape(b * hkv, s, hd)
+    vg = v.transpose(0, 2, 1, 3).reshape(b * hkv, s, hd)
+    nq = s // bq
+    nk = s // bk
+
+    # Tile q as (bh, nq, G*bq, hd) by interleaving: block (g, bq) flattened.
+    qg = qg.transpose(0, 2, 1, 3).reshape(b * hkv, nq, bq, g, hd)
+    qg = qg.transpose(0, 1, 3, 2, 4).reshape(b * hkv, nq, g * bq, hd)
+
+    kernel = functools.partial(_kernel, scale=scale, bq=bq, bk=bk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hkv, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, g * bq, hd), lambda bh, qi, kj: (bh, qi, 0, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bh, qi, kj: (bh, kj, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bh, qi, kj: (bh, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g * bq, hd), lambda bh, qi, kj: (bh, qi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hkv, nq, g * bq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g * bq, hd), jnp.float32),
+            pltpu.VMEM((g * bq, 1), jnp.float32),
+            pltpu.VMEM((g * bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kg, vg)
+
+    # Undo the tiling: (bh, nq, g*bq, hd) -> (B, S, Hq, hd).
+    out = out.reshape(b * hkv, nq, g, bq, hd).transpose(0, 2, 1, 3, 4)
+    out = out.reshape(b, hkv, g, s, hd).transpose(0, 3, 1, 2, 4)
+    return out.reshape(b, s, hq, hd)

@@ -1,0 +1,28 @@
+"""jit'd wrapper: padding + backend dispatch for flash attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention as _kernel_call
+from .ref import flash_attention_ref
+
+
+def flash_attention(q, k, v, block_q: int = 256, block_k: int = 256,
+                    interpret: bool = False, use_kernel: bool | None = None):
+    if use_kernel is None:
+        use_kernel = interpret or jax.default_backend() == "tpu"
+    if not use_kernel:
+        return flash_attention_ref(q, k, v)
+    s = q.shape[1]
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    pad = (-s) % max(bq, bk)
+    if pad:
+        widths = [(0, 0), (0, pad), (0, 0), (0, 0)]
+        q = jnp.pad(q, widths)
+        k = jnp.pad(k, widths)
+        v = jnp.pad(v, widths)
+    out = _kernel_call(q, k, v, block_q=bq, block_k=bk, interpret=interpret)
+    return out[:, : s] if pad else out

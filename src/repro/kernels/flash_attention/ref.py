@@ -1,0 +1,19 @@
+"""Pure-jnp oracle: naive causal GQA attention (fp32 softmax)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v):
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    scale = 1.0 / (hd ** 0.5)
+    qg = q.reshape(b, s, hkv, g, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(causal[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v)
+    return out.reshape(b, s, hq, hd)

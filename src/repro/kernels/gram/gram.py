@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: streaming Gram update  G += X^T X  (calibration).
+
+The calibration pass is bandwidth-bound: every activation tensor is read
+once and reduced into an (n, n) fp32 Gram.  The kernel tiles the (n, n)
+output on a 2-D grid and streams X in row-chunks, accumulating on the MXU
+in fp32 — one HBM pass over X per Gram instead of the two (matmul +
+accumulate) of the unfused path, and the accumulation happens in VMEM.
+
+Grid: (n/bi, n/bj, T/bt); the T axis is the reduction — Pallas revisits the
+same output tile for each t step (output index map ignores t), so the
+accumulator lives in the output ref across t steps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_i_ref, x_j_ref, g_ref):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _():
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    xi = x_i_ref[...]  # (bt, bi)
+    xj = x_j_ref[...]  # (bt, bj)
+    g_ref[...] += jnp.dot(
+        xi.T, xj, preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_t", "interpret"))
+def gram_accumulate(
+    x: jax.Array,
+    block_n: int = 256,
+    block_t: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """x: (..., n) -> (n, n) fp32 Gram of the flattened rows."""
+    n = x.shape[-1]
+    rows = 1
+    for s in x.shape[:-1]:
+        rows *= s
+    x2d = x.reshape(rows, n)
+    bn = min(block_n, n)
+    bt = min(block_t, rows)
+    grid = (n // bn, n // bn, rows // bt)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, bn), lambda i, j, t: (t, i)),
+            pl.BlockSpec((bt, bn), lambda i, j, t: (t, j)),
+        ],
+        out_specs=pl.BlockSpec((bn, bn), lambda i, j, t: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=interpret,
+    )(x2d, x2d)

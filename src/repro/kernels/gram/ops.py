@@ -1,0 +1,32 @@
+"""jit'd wrapper: padding + backend dispatch for the Gram kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .gram import gram_accumulate as _kernel_call
+from .ref import gram_accumulate_ref
+
+
+def gram_accumulate(x, block_n: int = 256, block_t: int = 512,
+                    interpret: bool = False, use_kernel: bool | None = None):
+    if use_kernel is None:
+        use_kernel = interpret or jax.default_backend() == "tpu"
+    if not use_kernel:
+        return gram_accumulate_ref(x)
+    n = x.shape[-1]
+    rows = 1
+    for s in x.shape[:-1]:
+        rows *= s
+    x2d = x.reshape(rows, n)
+    bn = min(block_n, n)
+    bt = min(block_t, rows)
+    pad_n = (-n) % bn
+    pad_t = (-rows) % bt
+    if pad_n or pad_t:
+        x2d = jnp.pad(x2d, [(0, pad_t), (0, pad_n)])
+    g = _kernel_call(x2d, block_n=bn, block_t=bt, interpret=interpret)
+    if pad_n:
+        g = g[:n, :n]
+    return g

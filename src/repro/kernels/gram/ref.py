@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the Gram kernel."""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def gram_accumulate_ref(x):
+    n = x.shape[-1]
+    flat = x.reshape(-1, n).astype(jnp.float32)
+    return lax.dot_general(
+        flat, flat, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )

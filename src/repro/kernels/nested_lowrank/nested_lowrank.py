@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: fused nested low-rank matmul (paper Eq. 6).
+
+Computes  y = (x @ u) @ v + (x @ u2) @ v2  in ONE pass over the factored
+weights — the decode-time hot-spot of an NSVD-compressed model.
+
+Why fuse (DESIGN.md §3/§4): at decode the batch of live rows is small
+(M ≈ 64-512), so both GEMMs are memory-bound on weight traffic.  A naive
+two-kernel schedule streams u, v, u2, v2 from HBM *and* round-trips the
+rank-k intermediate through HBM.  This kernel tiles N (the output dim) on
+the grid, keeps x and both rank-k intermediates resident in VMEM, streams
+each weight tile exactly once, and accumulates both branches into the same
+fp32 VMEM accumulator:
+
+  grid over (N / bn):
+    t  = x @ u        (M, k1)     computed once on the first grid step,
+    t2 = x @ u2       (M, k2)      cached in VMEM scratch
+    y[:, j] = t @ v[:, j] + t2 @ v2[:, j]
+
+VMEM budget per step: M*K (x) + M*(k1+k2) (intermediates) + K*? ...
+with M<=512, K<=16384, k<=1408, bn=256 everything sits well under 16 MB.
+MXU alignment: block shapes padded to multiples of (8, 128) by BlockSpec;
+ranks are budgeted to multiples of 128 by ratio.py when tpu_friendly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, u_ref, v_ref, u2_ref, v2_ref, y_ref, t_ref, t2_ref):
+    """One grid step: j-th tile of the output dim."""
+    j = pl.program_id(0)
+
+    # First grid step computes the shared rank-k intermediates.
+    @pl.when(j == 0)
+    def _():
+        x = x_ref[...]
+        t_ref[...] = jnp.dot(
+            x, u_ref[...], preferred_element_type=jnp.float32
+        )
+        t2_ref[...] = jnp.dot(
+            x, u2_ref[...], preferred_element_type=jnp.float32
+        )
+
+    t = t_ref[...].astype(v_ref.dtype)
+    t2 = t2_ref[...].astype(v2_ref.dtype)
+    acc = jnp.dot(t, v_ref[...], preferred_element_type=jnp.float32)
+    acc += jnp.dot(t2, v2_ref[...], preferred_element_type=jnp.float32)
+    y_ref[...] = acc.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def nested_lowrank_matmul(
+    x: jax.Array,
+    u: jax.Array,
+    v: jax.Array,
+    u2: jax.Array,
+    v2: jax.Array,
+    block_n: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """x: (M, K); u: (K, k1); v: (k1, N); u2: (K, k2); v2: (k2, N) -> (M, N).
+
+    Leading batch dims of x are flattened.  N must be divisible by block_n
+    (callers pad; ops.py handles it).
+    """
+    orig_shape = x.shape
+    m = 1
+    for s in orig_shape[:-1]:
+        m *= s
+    k_in = x.shape[-1]
+    x2d = x.reshape(m, k_in)
+    n = v.shape[-1]
+    k1 = u.shape[-1]
+    k2 = u2.shape[-1]
+    bn = min(block_n, n)
+    grid = (n // bn,)
+
+    y = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, k_in), lambda j: (0, 0)),  # x resident
+            pl.BlockSpec((k_in, k1), lambda j: (0, 0)),  # u resident
+            pl.BlockSpec((k1, bn), lambda j: (0, j)),  # v streamed by tile
+            pl.BlockSpec((k_in, k2), lambda j: (0, 0)),  # u2 resident
+            pl.BlockSpec((k2, bn), lambda j: (0, j)),  # v2 streamed by tile
+        ],
+        out_specs=pl.BlockSpec((m, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((m, k1), jnp.float32),
+            pltpu.VMEM((m, k2), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x2d, u, v, u2, v2)
+    return y.reshape(*orig_shape[:-1], n)

@@ -1,0 +1,39 @@
+"""jit'd wrapper: padding + dispatch (kernel on TPU, oracle elsewhere)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .nested_lowrank import nested_lowrank_matmul as _kernel_call
+from .ref import nested_lowrank_matmul_ref
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+def nested_lowrank_matmul(
+    x, u, v, u2, v2, block_n: int = 256, interpret: bool = False,
+    use_kernel: bool | None = None,
+):
+    """Public op.  On non-TPU backends (and under dry-run lowering) the
+    pure-jnp oracle is used; interpret=True forces the kernel body through
+    the Pallas interpreter (correctness tests)."""
+    if use_kernel is None:
+        use_kernel = interpret or jax.default_backend() == "tpu"
+    if not use_kernel:
+        return nested_lowrank_matmul_ref(x, u, v, u2, v2)
+    n = v.shape[-1]
+    bn = min(block_n, n)
+    v_p, pad_n = _pad_to(v, bn, -1)
+    v2_p, _ = _pad_to(v2, bn, -1)
+    y = _kernel_call(x, u, v_p, u2, v2_p, block_n=bn, interpret=interpret)
+    if pad_n:
+        y = y[..., : n]
+    return y

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the nested low-rank matmul."""
+
+import jax
+import jax.numpy as jnp
+
+
+def nested_lowrank_matmul_ref(x, u, v, u2, v2):
+    y = jnp.matmul(jnp.matmul(x, u), v)
+    return y + jnp.matmul(jnp.matmul(x, u2), v2)

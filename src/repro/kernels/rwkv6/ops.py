@@ -1,0 +1,28 @@
+"""jit'd wrapper for the chunked RWKV6 kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .ref import rwkv6_scan_ref
+from .rwkv6 import rwkv6_chunked
+
+
+def rwkv6_attention(r, k, v, w, u, chunk: int = 16, interpret: bool = False,
+                    use_kernel: bool | None = None):
+    """r/k/v/w: (BH, T, K); u: (BH, K) -> (BH, T, K)."""
+    if use_kernel is None:
+        use_kernel = interpret or jax.default_backend() == "tpu"
+    if not use_kernel:
+        return rwkv6_scan_ref(r, k, v, w, u)
+    t = r.shape[1]
+    pad = (-t) % chunk
+    if pad:
+        widths = [(0, 0), (0, pad), (0, 0)]
+        r = jnp.pad(r, widths)
+        k = jnp.pad(k, widths)
+        v = jnp.pad(v, widths)
+        w = jnp.pad(w, widths, constant_values=1.0)  # identity decay
+    y = rwkv6_chunked(r, k, v, w, u, chunk=chunk, interpret=interpret)
+    return y[:, : t] if pad else y

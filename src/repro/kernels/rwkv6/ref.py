@@ -1,0 +1,23 @@
+"""Pure-jnp scan oracle for the RWKV6 recurrence (matches models/rwkv6.py)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_scan_ref(r, k, v, w, u):
+    """r/k/v/w: (BH, T, K); u: (BH, K) -> y (BH, T, K), fp32 math."""
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp  # (BH, K)
+        kv = k_t[:, :, None] * v_t[:, None, :]  # (BH, K, V)
+        y = jnp.einsum("bk,bkv->bv", r_t, s + uf[:, :, None] * kv)
+        s = w_t[:, :, None] * s + kv
+        return s, y
+
+    bh, t, kdim = r.shape
+    s0 = jnp.zeros((bh, kdim, kdim), jnp.float32)
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (rf, kf, vf, wf))
+    _, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype)

@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: chunked RWKV6 time-mix recurrence.
+
+The RWKV6 recurrence per head (K = V = head_dim, state S in R^{KxV}):
+
+    y_t = r_t . (S_{t-1} + diag(u) k_t^T v_t)
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+
+A naive scan is O(T) sequential steps of rank-1 updates — the 512k-token
+long-context hot-spot.  This kernel processes the sequence in chunks of L
+tokens: the inter-chunk state is carried sequentially (grid minor axis),
+while all intra-chunk work is dense matmul on the MXU:
+
+    per chunk, with logcum_t = sum_{s<=t} log w_s (per channel):
+      cross:  y_t += (r_t * exp(logcum_{t-1})) @ S
+      intra:  y_t += sum_{s<t} [sum_k r_t[k] k_s[k] e^{logcum_{t-1}[k]
+                                 - logcum_s[k]}] v_s     (strictly lower tri)
+      bonus:  y_t += (r_t * u * k_t) @ v_t               (diagonal)
+      state:  S   <- exp(logcum_L) * S
+                     + sum_s (k_s * e^{logcum_L - logcum_s})^T v_s
+
+All exponents are differences with s <= t, hence <= 0 after the chunk-local
+rebase — no overflow for any decay magnitude (the scan reference and the
+official CUDA kernel share this property; the (L, L, K) broadcast lives in
+VMEM, so L is kept at 16-32).
+
+TPU adaptation notes (DESIGN.md §3): the CUDA kernel assigns one warp per
+(batch, head) and shuffles the rank-1 updates; here the chunk-dense form
+turns ~L rank-1 updates into three (L,K)x(K,V)-class contractions that run
+on the MXU, with the sequential dependency reduced from T steps to T/L.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_ref):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0].astype(jnp.float32)  # (L, K)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    logw = jnp.log(jnp.maximum(w_ref[0].astype(jnp.float32), 1e-38))
+    u = u_ref[0].astype(jnp.float32)  # (1, K) bonus
+
+    logcum = jnp.cumsum(logw, axis=0)  # (L, K) inclusive
+    logecum = logcum - logw  # exclusive (prod over s < t)
+
+    s = s_ref[...]  # (K, V)
+
+    # Cross-chunk: (L, K) @ (K, V)
+    y = jnp.dot(r * jnp.exp(logecum), s, preferred_element_type=jnp.float32)
+
+    # Intra-chunk: A[t, s] = sum_k r[t,k] k[s,k] exp(logecum[t,k] - logcum[s,k])
+    lw = logecum[:, None, :] - logcum[None, :, :]  # (L, L, K), <= 0 for s < t
+    ltri = jnp.tril(jnp.ones((r.shape[0], r.shape[0]), jnp.float32), k=-1)
+    a = jnp.sum(
+        r[:, None, :] * k[None, :, :] * jnp.exp(jnp.minimum(lw, 0.0)), axis=-1
+    )
+    y += jnp.dot(a * ltri, v, preferred_element_type=jnp.float32)
+
+    # Diagonal bonus term.
+    y += jnp.sum(r * u * k, axis=-1, keepdims=True) * v
+
+    # State update.
+    decay_all = jnp.exp(logcum[-1])  # (K,)
+    carry = jnp.exp(logcum[-1][None, :] - logcum)  # (L, K), <= 1
+    s_new = decay_all[:, None] * s + jnp.dot(
+        (k * carry).T, v, preferred_element_type=jnp.float32
+    )
+    s_ref[...] = s_new
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_chunked(
+    r: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array,
+    chunk: int = 16,
+    interpret: bool = False,
+) -> jax.Array:
+    """r/k/v/w: (BH, T, K); u: (BH, K).  Returns y: (BH, T, K).
+
+    T must be divisible by chunk (ops.py pads).  The per-(batch*head)
+    programs are the parallel grid axis; chunks are the sequential axis
+    carrying the state scratch.
+    """
+    bh, t_len, kdim = r.shape
+    l = min(chunk, t_len)
+    grid = (bh, t_len // l)
+    u3 = u[:, None, :]  # (BH, 1, K)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, l, kdim), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, l, kdim), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, l, kdim), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, l, kdim), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, 1, kdim), lambda b, t: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, l, kdim), lambda b, t: (b, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t_len, kdim), r.dtype),
+        scratch_shapes=[pltpu.VMEM((kdim, kdim), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u3)

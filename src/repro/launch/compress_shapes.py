@@ -1,0 +1,75 @@
+"""Shape-level compression: param ShapeDtypeStructs -> factored structs.
+
+The dry-run of a *compressed* deployment must not run real SVDs on 671B
+params; it only needs the factored parameter SHAPES.  This mirrors
+core.compress.compress_params at the ShapeDtypeStruct level using the same
+plan/rank machinery, so the compressed dry-run exercises exactly the
+production sharding of {"u","v","u2","v2"} leaves.
+"""
+
+from __future__ import annotations
+
+import copy
+from typing import Any, Dict, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.nsvd import split_rank
+from repro.core.plan import CompressionConfig, build_plan
+
+
+def _get(tree, path):
+    node = tree
+    for p in path:
+        node = node[p]
+    return node
+
+
+def _set(tree, path, value):
+    node = tree
+    for p in path[:-1]:
+        node = node[p]
+    node[path[-1]] = value
+
+
+def compressed_param_shapes(
+    model,
+    params_shape,
+    ratio: float,
+    method: str = "nsvd1",
+    k1_frac: float = 0.95,
+    multiple_of: int = 128,
+) -> Dict[str, Any]:
+    """Replace each compressible kernel struct with factored structs."""
+    cfg = CompressionConfig(
+        method=method, ratio=ratio, k1_frac=k1_frac, multiple_of=multiple_of
+    )
+    plan = build_plan(model.compressible_targets(), cfg)
+
+    def to_mut(t):
+        if isinstance(t, Mapping):
+            return {k: to_mut(v) for k, v in t.items()}
+        return t
+
+    out = to_mut(params_shape)
+    nested = method.startswith(("nsvd", "nid"))
+    for spec in plan.targets:
+        leaf = _get(out, spec.path)
+        kern = leaf["kernel"]
+        dtype = kern.dtype
+        k = plan.rank_of(spec)
+        lead = tuple(spec.stacked)
+        if nested:
+            k1, k2 = split_rank(k, k1_frac)
+        else:
+            k1, k2 = k, 0
+        factored = {
+            "u": jax.ShapeDtypeStruct((*lead, spec.in_dim, k1), dtype),
+            "v": jax.ShapeDtypeStruct((*lead, k1, spec.out_dim), dtype),
+        }
+        if k2 > 0:
+            factored["u2"] = jax.ShapeDtypeStruct((*lead, spec.in_dim, k2), dtype)
+            factored["v2"] = jax.ShapeDtypeStruct((*lead, k2, spec.out_dim), dtype)
+        _set(out, spec.path, factored)
+    return out

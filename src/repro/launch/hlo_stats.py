@@ -1,0 +1,166 @@
+"""Parse partitioned HLO text for collective statistics.
+
+compiled.cost_analysis() has no collective accounting, so the roofline's
+collective term comes from here: for every all-reduce / all-gather /
+reduce-scatter / all-to-all / collective-permute op we take the (per-device)
+output shape and the replica-group size g, and convert to ring wire bytes:
+
+    all-reduce       2 * s * (g-1)/g
+    all-gather       s * (g-1)/g          (s = gathered output)
+    reduce-scatter   s * (g-1)            (s = scattered output)
+    all-to-all       s * (g-1)/g
+    collective-permute  s
+
+Ops inside while-loop bodies are multiplied by the loop trip count (parsed
+from the loop condition's comparison constant) — scan-over-layers models
+would otherwise undercount collectives by the layer count.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+\[[\d,]*\][^\s]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_V2_RE.search(line)
+    if m:  # [n_groups,group_size] iota format
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return 2  # conservative default
+
+
+def _computation_blocks(hlo: str) -> Dict[str, List[str]]:
+    """Split module text into named computations."""
+    blocks: Dict[str, List[str]] = {}
+    name = None
+    for line in hlo.splitlines():
+        m = re.match(r"^(%?[\w\.\-]+)\s*(?:\([^)]*\))?\s*->.*\{\s*$", line.strip())
+        if line.strip().startswith(("ENTRY", "%")) and "{" in line and "->" in line:
+            m2 = re.match(r"^(?:ENTRY\s+)?(%?[\w\.\-]+)", line.strip())
+            name = m2.group(1) if m2 else None
+            blocks[name] = []
+            continue
+        if line.strip() == "}":
+            name = None
+            continue
+        if name is not None:
+            blocks[name].append(line)
+    return blocks
+
+
+def _while_trip_counts(hlo: str, blocks: Dict[str, List[str]]) -> Dict[str, int]:
+    """body-computation-name -> trip count (best effort)."""
+    trips: Dict[str, int] = {}
+    for line in hlo.splitlines():
+        m = re.search(r"while\(.*\)\s*,\s*condition=([%\w\.\-]+),\s*body=([%\w\.\-]+)", line)
+        if not m:
+            continue
+        cond, body = m.group(1), m.group(2)
+        count = None
+        for cl in blocks.get(cond, []):
+            cm = re.search(r"compare\(.*\).*direction=LT", cl)
+            if cm:
+                km = re.search(r"constant\((\d+)\)", "\n".join(blocks.get(cond, [])))
+                if km:
+                    count = int(km.group(1))
+                break
+        # jax scans emit: cond computes iter < constant; constant may be a
+        # separate op in the cond block.
+        if count is None:
+            consts = [
+                int(x) for x in re.findall(r"constant\((\d+)\)", "\n".join(blocks.get(cond, [])))
+                if int(x) > 1
+            ]
+            count = max(consts) if consts else 1
+        trips[body] = max(trips.get(body, 1), count)
+    return trips
+
+
+def collective_stats(hlo: str) -> Dict[str, Dict[str, float]]:
+    """Returns {op: {count, bytes, wire_bytes}} per device, plus totals.
+
+    Collectives in while bodies are scaled by trip count; nested loops
+    compose multiplicatively (body-of-body).
+    """
+    blocks = _computation_blocks(hlo)
+    trips = _while_trip_counts(hlo, blocks)
+
+    # Propagate trip multipliers through nested calls (one level of nesting
+    # is enough for scan-in-scan; iterate to fixpoint over 3 rounds).
+    mult: Dict[str, float] = {name: 1.0 for name in blocks}
+    for _ in range(3):
+        for body, count in trips.items():
+            if body in mult:
+                # multiplier of computations called from this body
+                for line in blocks.get(body, []):
+                    for callee in re.findall(r"(?:condition|body|to_apply|calls)=([%\w\.\-]+)", line):
+                        if callee in mult:
+                            mult[callee] = max(mult[callee], mult.get(body, 1.0) * trips.get(callee, 1.0))
+        for body, count in trips.items():
+            mult[body] = max(mult.get(body, 1.0), count)
+    # Entry-level bodies get their own trip count; computations called from
+    # multiplied bodies inherit (handled above, best effort).
+
+    stats: Dict[str, Dict[str, float]] = {}
+    total_bytes = 0.0
+    total_wire = 0.0
+    for name, lines in blocks.items():
+        scale = mult.get(name, 1.0)
+        for line in lines:
+            m = _COLL_RE.search(line)
+            if not m:
+                continue
+            shape_txt = m.group(1) or m.group(2)
+            op = m.group(3)
+            size = _shape_bytes(shape_txt)
+            g = _group_size(line)
+            if op == "all-reduce":
+                wire = 2.0 * size * (g - 1) / g
+            elif op == "all-gather":
+                wire = size * (g - 1) / g
+            elif op == "reduce-scatter":
+                wire = size * (g - 1)
+            elif op == "all-to-all":
+                wire = size * (g - 1) / g
+            else:  # collective-permute
+                wire = float(size)
+            rec = stats.setdefault(op, {"count": 0.0, "bytes": 0.0, "wire_bytes": 0.0})
+            rec["count"] += scale
+            rec["bytes"] += scale * size
+            rec["wire_bytes"] += scale * wire
+            total_bytes += scale * size
+            total_wire += scale * wire
+    stats["total"] = {"bytes": total_bytes, "wire_bytes": total_wire}
+    return stats

@@ -1,0 +1,27 @@
+"""Production mesh factory.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — required by the dry-run contract.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+# TPU v5e hardware constants (roofline targets).
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+CHIP_HBM_BYTES = 16 * 1024**3
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    """General mesh for tests/examples (1x1 meshes exercise the same code)."""
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))

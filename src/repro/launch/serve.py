@@ -1,0 +1,64 @@
+"""Serving launcher: load (or compress) a model and run batched requests."""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving.engine import ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="small-llama")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--compress", type=float, default=None,
+                    help="NSVD ratio (requires calibration pass)")
+    args = ap.parse_args()
+
+    if args.arch.startswith("small-"):
+        from benchmarks.common import train_small_lm
+
+        model, params, _ = train_small_lm(args.arch)
+        cfg = model.cfg
+    else:
+        cfg = get_config(args.arch)
+        if args.reduced:
+            cfg = cfg.reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+
+    if args.compress is not None:
+        from benchmarks.common import get_grams
+        from repro.core import CompressionConfig, build_plan, compress_params
+
+        grams = get_grams(args.arch, model, params)
+        plan = build_plan(
+            model.compressible_targets(),
+            CompressionConfig(method="nsvd1", ratio=args.compress,
+                              dtype="float32", use_randomized=False),
+        )
+        params = compress_params(params, plan, grams)
+        print(f"serving NSVD-compressed weights ({plan.achieved_ratio:.0%} removed)")
+
+    eng = ServingEngine(model, params, max_batch=4, max_len=256)
+    rng = np.random.default_rng(0)
+    for _ in range(args.requests):
+        eng.submit(rng.integers(2, cfg.vocab_size // 2, size=8),
+                   max_new_tokens=args.max_new)
+    t0 = time.time()
+    out = eng.run()
+    dt = time.time() - t0
+    n = sum(len(v) for v in out.values())
+    print(f"{len(out)} requests, {n} tokens, {n/dt:.1f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

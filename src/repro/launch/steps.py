@@ -1,0 +1,256 @@
+"""Step builders: train_step / prefill_step / decode_step with shardings.
+
+These are the jit roots the launcher, serving engine and dry-run all share.
+Every step is a pure function over (params, [opt/cache], batch) pytrees; the
+sharding trees returned by ``step_shardings`` plug straight into
+``jax.jit(in_shardings=..., out_shardings=...)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCase
+from repro.models.api import Model
+from repro.models.losses import chunked_xent_from_hidden, next_token_xent
+from repro.optim import (
+    AdamWConfig,
+    AdamWState,
+    apply_updates,
+    global_norm,
+    init_state,
+    state_pspecs,
+)
+from repro.optim.grad import roundtrip
+from repro.parallel.sharding import Parallelism, param_pspecs
+from repro.runtime.fault import GuardConfig, guarded_update
+
+
+@dataclasses.dataclass(frozen=True)
+class StepConfig:
+    aux_weight: float = 0.01  # MoE load-balance loss weight
+    chunked_loss: int = 0  # >0: seq-chunked xent (memory optimization)
+    grad_compress: bool = False  # int8+error-feedback DP gradients
+    guard: Optional[GuardConfig] = GuardConfig()
+
+
+# ------------------------------------------------------------------- train
+
+def make_train_step(
+    model: Model, opt_cfg: AdamWConfig, step_cfg: StepConfig = StepConfig()
+) -> Callable:
+    cfg = model.cfg
+
+    def loss_fn(params, batch):
+        kwargs = {}
+        if cfg.is_encdec:
+            kwargs["frames"] = batch["frames"]
+        elif "patches" in batch:
+            kwargs["patches"] = batch["patches"]
+        if step_cfg.chunked_loss and not cfg.is_encdec:
+            hidden, _, aux = model.apply(
+                params, batch["tokens"], mode="train", output="hidden", **kwargs
+            )
+            unemb = params.get("unembed", params["embed"])
+            loss = chunked_xent_from_hidden(
+                hidden, unemb, batch["tokens"], chunk=step_cfg.chunked_loss,
+                mask=batch.get("loss_mask"),
+            )
+        else:
+            logits, _, aux = model.apply(
+                params, batch["tokens"], mode="train", **kwargs
+            )
+            loss = next_token_xent(logits, batch["tokens"], batch.get("loss_mask"))
+        return loss + step_cfg.aux_weight * aux, (loss, aux)
+
+    def train_step(params, opt_state, batch, grad_error=None):
+        (total, (loss, aux)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch
+        )
+        new_error = grad_error
+        if step_cfg.grad_compress:
+            grads, new_error = roundtrip(grads, grad_error)
+        new_params, new_opt, metrics = apply_updates(params, grads, opt_state, opt_cfg)
+        metrics = dict(metrics, loss=loss, aux=aux)
+        if step_cfg.guard is not None:
+            (new_params, new_opt), bad = guarded_update(
+                loss, metrics["grad_norm"], (new_params, new_opt),
+                (params, opt_state), step_cfg.guard,
+            )
+            metrics["bad_step"] = bad
+        if step_cfg.grad_compress:
+            return new_params, new_opt, metrics, new_error
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+# ------------------------------------------------------------------- serve
+
+def make_prefill_step(model: Model, max_len: int) -> Callable:
+    cfg = model.cfg
+
+    def prefill_step(params, batch):
+        b = batch["tokens"].shape[0]
+        cache = model.init_cache(b, max_len)
+        kwargs = {}
+        if cfg.is_encdec:
+            kwargs["frames"] = batch["frames"]
+        elif "patches" in batch:
+            kwargs["patches"] = batch["patches"]
+        logits, cache, _ = model.apply(
+            params, batch["tokens"], mode="prefill", cache=cache, **kwargs
+        )
+        return logits[:, -1:], cache
+
+    return prefill_step
+
+
+def make_decode_step(model: Model) -> Callable:
+    def decode_step(params, cache, batch):
+        logits, cache, _ = model.apply(
+            params,
+            batch["tokens"],
+            mode="decode",
+            cache=cache,
+            cache_len=batch["cache_len"],
+        )
+        return logits, cache
+
+    return decode_step
+
+
+# -------------------------------------------------------------- shardings
+
+# KV caches are SEQUENCE-sharded over the model axis (context parallelism):
+# it sidesteps the non-divisible-head-count archs (chatglm kv=2, phi3 h=40,
+# whisper h=12) and scales to 512k caches; batch==1 long-context cells fold
+# the DP axes into the sequence dim instead.
+_CACHE_LEAF_RULES = {
+    # leaf name -> (base ndim, (batch_dim, seq_dim, chan_dim))
+    "k": (4, 1, None),
+    "v": (4, 1, None),
+    "c_kv": (3, 1, None),
+    "k_rope": (3, 1, None),
+    "h": (3, None, 1),
+    "conv": (3, None, 2),
+    "state": (4, None, 1),
+    "shift_t": (2, None, None),
+    "shift_c": (2, None, None),
+    "k_scale": (3, 1, None),
+    "v_scale": (3, 1, None),
+}
+
+
+def _axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def cache_pspecs(cache_shapes, par: Parallelism):
+    """PartitionSpec tree for a cache pytree (stack dims -> None prefix)."""
+    mesh = par.mesh
+    dp = par.dp
+    tp = par.tp_axis
+
+    def walk(tree, name=""):
+        if isinstance(tree, dict):
+            return {k: walk(v, k) for k, v in tree.items()}
+        base_ndim, seq_dim, chan_dim = _CACHE_LEAF_RULES[name]
+        pad = len(tree.shape) - base_ndim
+        spec = [None] * len(tree.shape)
+        shape = tree.shape
+        b = shape[pad]
+        batch_ok = mesh is None or b % _axis_size(mesh, dp) == 0
+        if batch_ok and mesh is not None:
+            spec[pad] = dp
+        if seq_dim is not None and mesh is not None:
+            t = shape[pad + seq_dim]
+            if batch_ok:
+                if t % _axis_size(mesh, tp) == 0:
+                    spec[pad + seq_dim] = tp
+            else:
+                # batch=1 long-context: fold DP axes into the sequence dim.
+                all_axes = tuple(par.dp_axes) + (tp,)
+                if t % _axis_size(mesh, all_axes) == 0:
+                    spec[pad + seq_dim] = all_axes
+                elif t % _axis_size(mesh, tp) == 0:
+                    spec[pad + seq_dim] = tp
+        if chan_dim is not None and mesh is not None:
+            c = shape[pad + chan_dim]
+            if c % _axis_size(mesh, tp) == 0:
+                spec[pad + chan_dim] = tp
+        return P(*spec)
+
+    return walk(cache_shapes)
+
+
+def batch_pspecs(batch_shapes, par: Parallelism):
+    mesh = par.mesh
+
+    def walk(tree):
+        if isinstance(tree, dict):
+            return {k: walk(v) for k, v in tree.items()}
+        ok = mesh is None or tree.shape[0] % _axis_size(mesh, par.dp) == 0
+        lead = par.dp if (ok and mesh is not None) else None
+        return P(*([lead] + [None] * (len(tree.shape) - 1)))
+
+    return walk(batch_shapes)
+
+
+def logits_pspec(batch: int, vocab: int, par: Parallelism) -> P:
+    mesh = par.mesh
+    b_ok = mesh is not None and batch % _axis_size(mesh, par.dp) == 0
+    v_ok = mesh is not None and vocab % _axis_size(mesh, par.tp_axis) == 0
+    return P(par.dp if b_ok else None, None, par.tp_axis if v_ok else None)
+
+
+def sanitize_pspecs(pspec_tree, shape_tree, mesh):
+    """Drop sharding entries that don't divide the dim (jit boundaries
+    require exact divisibility, unlike internal GSPMD constraints)."""
+
+    def fix(spec, leaf):
+        entries = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        out = []
+        for dim, e in zip(leaf.shape, entries):
+            if e is not None and dim % _axis_size(mesh, e) != 0:
+                e = None
+            out.append(e)
+        return P(*out)
+
+    return jax.tree.map(
+        fix, pspec_tree, shape_tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def named(tree_pspec, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_pspec,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def train_shardings(params_shape, par: Parallelism, batch_shapes, fsdp: bool = False):
+    """(in_shardings, out_shardings) pspec trees for the train step."""
+    p_specs = param_pspecs(params_shape, fsdp_axes=par.dp_axes if fsdp else None)
+    opt_specs = state_pspecs(params_shape, p_specs, par.dp_axes)
+    b_specs = batch_pspecs(batch_shapes, par)
+    metrics = {
+        "loss": P(), "aux": P(), "grad_norm": P(), "lr": P(), "bad_step": P()
+    }
+    return (p_specs, opt_specs, b_specs), (p_specs, opt_specs, metrics)
+
+
+def eval_shape_opt_state(params_shape) -> AdamWState:
+    return jax.eval_shape(init_state, params_shape)

@@ -1,0 +1,11 @@
+from .api import (
+    Model,
+    build_model,
+    cache_specs,
+    count_active_params,
+    count_params,
+    input_specs,
+    param_specs,
+)
+from .encdec import EncDecLM
+from .transformer import DecoderLM

@@ -1,0 +1,112 @@
+"""Model facade: build any registered arch, get inputs/steps/targets.
+
+``build_model(cfg, par)`` returns a DecoderLM or EncDecLM; ``input_specs``
+produces ShapeDtypeStruct stand-ins for every input of a shape case
+(weak-type-correct, shardable, no device allocation) — the dry-run contract.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCase
+from repro.parallel.sharding import NONE_PARALLEL, Parallelism
+
+from .encdec import EncDecLM
+from .transformer import DecoderLM, VISION_FEATURE_DIM
+
+Model = Union[DecoderLM, EncDecLM]
+
+
+def build_model(
+    cfg: ModelConfig,
+    par: Parallelism = NONE_PARALLEL,
+    remat: bool = False,
+    unroll: bool = False,
+    seq_parallel: bool = False,
+) -> Model:
+    if cfg.is_encdec:
+        return EncDecLM(cfg, par, remat, unroll)
+    return DecoderLM(cfg, par, remat, unroll, seq_parallel)
+
+
+def input_specs(cfg: ModelConfig, case: ShapeCase) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs for the batch of one (arch x shape) cell.
+
+    train/prefill: full (B, S) token batch (+ modality stubs).
+    decode: one new token per row; the KV cache itself is part of the step
+    *state* (see launch/steps.py), not the batch.
+    """
+    b, s = case.global_batch, case.seq_len
+    i32, f32 = jnp.int32, jnp.float32
+    if case.kind in ("train", "prefill"):
+        specs: Dict[str, Any] = {}
+        if cfg.is_encdec:
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), f32
+            )
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        elif cfg.frontend == "vision":
+            specs["patches"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_patches, VISION_FEATURE_DIM), f32
+            )
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s - cfg.num_patches), i32)
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        if case.kind == "train":
+            specs["loss_mask"] = jax.ShapeDtypeStruct(
+                specs["tokens"].shape, f32
+            )
+        return specs
+    # decode: one token per row + per-row cache lengths.
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+        "cache_len": jax.ShapeDtypeStruct((b,), i32),
+    }
+
+
+def cache_specs(cfg: ModelConfig, case: ShapeCase) -> Any:
+    """ShapeDtypeStructs of the KV/state cache for a decode case."""
+    model = build_model(cfg)
+    return jax.eval_shape(
+        lambda: model.init_cache(case.global_batch, case.seq_len)
+    )
+
+
+def param_specs(cfg: ModelConfig, seed: int = 0) -> Any:
+    """ShapeDtypeStructs of the model params (no allocation)."""
+    model = build_model(cfg)
+    return jax.eval_shape(lambda: model.init(jax.random.key(seed)))
+
+
+def count_params(cfg: ModelConfig) -> int:
+    import numpy as np
+
+    shapes = param_specs(cfg)
+    return int(
+        sum(np.prod(x.shape) for x in jax.tree.leaves(shapes))
+    )
+
+
+def count_active_params(cfg: ModelConfig) -> int:
+    """Active params per token (MoE: only top_k + shared experts count)."""
+    import numpy as np
+
+    total = count_params(cfg)
+    if cfg.moe is None:
+        return total
+    # Subtract inactive expert params.
+    m = cfg.moe
+    n_moe_layers = sum(1 for _, f in _specs(cfg) if f == "moe")
+    per_expert = 3 * cfg.d_model * m.d_ff_expert
+    inactive = n_moe_layers * (m.num_experts - m.top_k) * per_expert
+    return int(total - inactive)
+
+
+def _specs(cfg: ModelConfig):
+    from .blocks import resolve_specs
+
+    return resolve_specs(cfg)

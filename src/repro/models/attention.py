@@ -1,0 +1,281 @@
+"""GQA/MHA attention with KV cache, flash-style chunked prefill, cross-attn.
+
+Conventions:
+  x:          (B, S, D)
+  positions:  (B, S) int32 absolute positions
+  cache:      {"k": (B, S_max, Hkv, hd), "v": (B, S_max, Hkv, hd)}
+  cache_len:  (B,) int32 — tokens already in the cache (per row; supports
+              continuous batching with ragged fill)
+
+Modes:
+  train/prefill: full causal pass, optionally writing the cache
+  decode:        q from one new token per row, attends over the cache
+  bidir:         encoder self-attention (no mask)
+  cross:         decoder cross-attention over precomputed memory K/V
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from .layers import apply_rope, linear, linear_init, rope_frequencies
+
+NEG_INF = -1e30
+
+
+def attention_init(key, cfg: ModelConfig, dtype) -> Dict:
+    d = cfg.d_model
+    hq = cfg.num_heads * cfg.head_dim
+    hkv = cfg.num_kv_heads * cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": linear_init(ks[0], d, hq, dtype),
+        "wk": linear_init(ks[1], d, hkv, dtype),
+        "wv": linear_init(ks[2], d, hkv, dtype),
+        "wo": linear_init(ks[3], hq, d, dtype),
+    }
+
+
+def init_kv_cache(
+    cfg: ModelConfig, batch: int, max_len: int, dtype, quant: bool = False
+) -> Dict:
+    shape = (batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    if quant:
+        # int8 symmetric per-(position, head) quantization: halves the
+        # decode-dominant cache read bytes (§Perf, deepseek-67b decode).
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros(shape[:3], jnp.float32),
+            "v_scale": jnp.zeros(shape[:3], jnp.float32),
+        }
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _quantize_kv(x: jax.Array):
+    """x: (..., hd) -> (int8, scale (...,)) symmetric per-vector."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def _dequantize_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def _split_heads(x: jax.Array, n_heads: int, head_dim: int) -> jax.Array:
+    return x.reshape(*x.shape[:-1], n_heads, head_dim)
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    return x.reshape(*x.shape[:-2], x.shape[-2] * x.shape[-1])
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array, scale: float) -> jax.Array:
+    """q: (B,S,Hq,hd), k: (B,T,Hkv,hd) -> scores (B,Hkv,G,S,T) fp32."""
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, s, hkv, g, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k, preferred_element_type=jnp.float32)
+    return scores * scale
+
+
+def _gqa_out(probs: jax.Array, v: jax.Array) -> jax.Array:
+    """probs: (B,Hkv,G,S,T), v: (B,T,Hkv,hd) -> (B,S,Hq,hd)."""
+    b, hkv, g, s, t = probs.shape
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v)
+    return out.reshape(b, s, hkv * g, v.shape[-1])
+
+
+def _naive_attention(q, k, v, mask, scale):
+    scores = _gqa_scores(q, k, scale)
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return _gqa_out(probs, v)
+
+
+def chunked_causal_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, scale: float, chunk: int = 1024
+) -> jax.Array:
+    """Flash-attention algorithm in pure JAX (online softmax over KV chunks).
+
+    Memory is O(chunk_q * chunk_k) per (head, batch) instead of O(S^2); this
+    is the jnp twin of the Pallas kernel and the path the 32k-prefill dry-run
+    lowers.  Upper-triangle chunk pairs are skipped at runtime via lax.cond
+    (the hillclimbed variant; see EXPERIMENTS.md §Perf).
+    """
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    cq = min(chunk, s)
+    ck = min(chunk, s)
+    nq, nk = s // cq, s // ck
+    qg = q.reshape(b, nq, cq, hkv, g, hd)
+
+    k_chunks = k.reshape(b, nk, ck, hkv, hd)
+    v_chunks = v.reshape(b, nk, ck, hkv, hd)
+
+    def q_block(qi, q_blk):
+        # q_blk: (b, cq, hkv, g, hd)
+        def kv_step(carry, kj):
+            acc, m, l = carry
+            kc = k_chunks[:, kj]
+            vc = v_chunks[:, kj]
+
+            def compute(args):
+                acc, m, l = args
+                s_blk = jnp.einsum(
+                    "bqkgd,btkd->bkgqt", q_blk, kc,
+                    preferred_element_type=jnp.float32,
+                ) * scale
+                # Causal mask within the diagonal block.
+                q_pos = qi * cq + jnp.arange(cq)
+                k_pos = kj * ck + jnp.arange(ck)
+                causal = q_pos[:, None] >= k_pos[None, :]
+                s_blk = jnp.where(causal[None, None, None], s_blk, NEG_INF)
+                m_new = jnp.maximum(m, jnp.max(s_blk, axis=-1))
+                p = jnp.exp(s_blk - m_new[..., None])
+                corr = jnp.exp(m - m_new)
+                l_new = l * corr + jnp.sum(p, axis=-1)
+                acc_new = acc * corr[..., None] + jnp.einsum(
+                    "bkgqt,btkd->bkgqd", p.astype(vc.dtype), vc,
+                    preferred_element_type=jnp.float32,
+                )
+                return acc_new, m_new, l_new
+
+            acc, m, l = jax.lax.cond(
+                kj * ck <= qi * cq + cq - 1,  # any overlap with causal region
+                compute,
+                lambda args: args,
+                (acc, m, l),
+            )
+            return (acc, m, l), None
+
+        acc0 = jnp.zeros((b, hkv, g, cq, hd), jnp.float32)
+        m0 = jnp.full((b, hkv, g, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, cq), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0), jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        # (b, hkv, g, cq, hd) -> (b, cq, hq, hd)
+        return jnp.transpose(out, (0, 3, 1, 2, 4)).reshape(b, cq, hq, hd)
+
+    outs = jax.lax.map(lambda qi: q_block(qi, qg[:, qi].transpose(0, 1, 2, 3, 4)), jnp.arange(nq))
+    # outs: (nq, b, cq, hq, hd) -> (b, s, hq, hd)
+    return jnp.transpose(outs, (1, 0, 2, 3, 4)).reshape(b, s, hq, hd).astype(q.dtype)
+
+
+def attention_apply(
+    params: Mapping[str, Any],
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    mode: str = "causal",
+    cache: Optional[Dict] = None,
+    cache_len: Optional[jax.Array] = None,
+    memory: Optional[jax.Array] = None,
+    chunked_threshold: int = 8192,
+    attn_chunk: int = 1024,
+    taps: Optional[Dict] = None,
+    tap_prefix: str = "",
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """Returns (output (B,S,D), updated cache or None)."""
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    scale = 1.0 / math.sqrt(hd)
+    use_rope = cfg.pos_emb == "rope" and mode != "cross"
+    inv_freq = rope_frequencies(hd, cfg.rotary_pct, cfg.rope_theta) if use_rope else None
+
+    if taps is not None:
+        taps[f"{tap_prefix}.in"] = x
+
+    q = _split_heads(linear(params["wq"], x), cfg.num_heads, hd)
+    if mode == "cross":
+        kv_src = memory
+    else:
+        kv_src = x
+    if taps is not None and mode == "cross":
+        taps[f"{tap_prefix}.kv_in"] = kv_src
+    k = _split_heads(linear(params["wk"], kv_src), cfg.num_kv_heads, hd)
+    v = _split_heads(linear(params["wv"], kv_src), cfg.num_kv_heads, hd)
+
+    if use_rope:
+        q = apply_rope(q, positions, inv_freq)
+        k = apply_rope(k, positions, inv_freq)
+
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None and cache_len is not None and s == 1
+        t_max = cache["k"].shape[1]
+        # Write the new K/V at each row's current length.
+        idx = cache_len  # (B,)
+        if "k_scale" in cache:  # int8-quantized cache
+            kq, ks = _quantize_kv(k[:, 0])
+            vq, vs = _quantize_kv(v[:, 0])
+            rows = jnp.arange(k.shape[0])
+            new_cache = {
+                "k": _scatter_rows(cache["k"], kq, idx),
+                "v": _scatter_rows(cache["v"], vq, idx),
+                "k_scale": cache["k_scale"].at[rows, idx].set(ks),
+                "v_scale": cache["v_scale"].at[rows, idx].set(vs),
+            }
+            k_cache = _dequantize_kv(new_cache["k"], new_cache["k_scale"], q.dtype)
+            v_cache = _dequantize_kv(new_cache["v"], new_cache["v_scale"], q.dtype)
+        else:
+            k_cache = _scatter_rows(cache["k"], k[:, 0], idx)
+            v_cache = _scatter_rows(cache["v"], v[:, 0], idx)
+            new_cache = {"k": k_cache, "v": v_cache}
+        valid = jnp.arange(t_max)[None, :] <= idx[:, None]  # (B, T)
+        mask = valid[:, None, None, None, :]  # (B,1,1,1,T)
+        out = _naive_attention(q, k_cache, v_cache, mask, scale)
+    elif mode == "cross":
+        t = k.shape[1]
+        mask = jnp.ones((b, 1, 1, s, t), bool)
+        out = _naive_attention(q, k, v, mask, scale)
+    elif mode == "bidir":
+        mask = jnp.ones((b, 1, 1, s, s), bool)
+        out = _naive_attention(q, k, v, mask, scale)
+    else:  # causal train/prefill
+        if s >= chunked_threshold:
+            out = chunked_causal_attention(q, k, v, scale, attn_chunk)
+        else:
+            causal = jnp.tril(jnp.ones((s, s), bool))
+            mask = causal[None, None, None]
+            out = _naive_attention(q, k, v, mask, scale)
+        if cache is not None:
+            t_max = cache["k"].shape[1]
+            pad = [(0, 0), (0, t_max - s), (0, 0), (0, 0)]
+            if "k_scale" in cache:
+                kq, ks = _quantize_kv(k)
+                vq, vs = _quantize_kv(v)
+                pad3 = [(0, 0), (0, t_max - s), (0, 0)]
+                new_cache = {
+                    "k": jnp.pad(kq, pad),
+                    "v": jnp.pad(vq, pad),
+                    "k_scale": jnp.pad(ks, pad3),
+                    "v_scale": jnp.pad(vs, pad3),
+                }
+            else:
+                new_cache = {
+                    "k": jnp.pad(k, pad).astype(cache["k"].dtype),
+                    "v": jnp.pad(v, pad).astype(cache["v"].dtype),
+                }
+
+    merged = _merge_heads(out)
+    if taps is not None:
+        taps[f"{tap_prefix}.out_in"] = merged
+    y = linear(params["wo"], merged)
+    return y, new_cache
+
+
+def _scatter_rows(cache: jax.Array, new: jax.Array, idx: jax.Array) -> jax.Array:
+    """cache: (B, T, H, d), new: (B, H, d), idx: (B,) -> write new at [b, idx[b]]."""
+    b = cache.shape[0]
+    return cache.at[jnp.arange(b), idx].set(new.astype(cache.dtype))

@@ -1,0 +1,146 @@
+"""Shared model layers: norms, rotary embeddings, MLPs, embeddings.
+
+Pure-functional: every layer is (init_fn, apply_fn) over plain dict pytrees.
+All linear layers route through ``repro.core.lowrank.linear_apply`` so that
+compressed (factored) parameters are drop-in.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lowrank import linear_apply
+
+
+def _dtype(name: str):
+    return getattr(jnp, name)
+
+
+# ---------------------------------------------------------------- linear
+
+def linear_init(key, in_dim: int, out_dim: int, dtype, scale: float = 1.0):
+    std = scale / (in_dim ** 0.5)
+    return {"kernel": (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * std).astype(dtype)}
+
+
+def linear(params: Mapping[str, Any], x: jax.Array) -> jax.Array:
+    return linear_apply(params, x)
+
+
+# ---------------------------------------------------------------- norms
+
+def norm_init(kind: str, dim: int, dtype):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((dim,), dtype)}
+    if kind == "layernorm":
+        return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+    raise ValueError(kind)
+
+
+def norm_apply(params: Mapping[str, Any], x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if "bias" in params:  # layernorm
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+        y = (xf - mean) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * params["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- rotary
+
+def rope_frequencies(head_dim: int, rotary_pct: float, theta: float) -> jax.Array:
+    """Inverse frequencies for the rotated sub-dimension."""
+    rot_dim = int(head_dim * rotary_pct)
+    rot_dim -= rot_dim % 2
+    return 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, inv_freq: jax.Array) -> jax.Array:
+    """Rotate the leading 2*len(inv_freq) features of the last dim.
+
+    x: (..., S, H, hd) or (..., H, hd) broadcast against positions (..., S)
+    positions: (B, S) int32.
+    """
+    rot = 2 * inv_freq.shape[0]
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    # angles: (B, S, 1, rot/2)
+    ang = positions[..., None, None].astype(jnp.float32) * inv_freq
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x_rot.astype(jnp.float32), 2, axis=-1)
+    rotated = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([rotated.astype(x.dtype), x_pass], axis=-1)
+
+
+# ---------------------------------------------------------------- MLP
+
+def mlp_init(key, cfg_activation: str, d_model: int, d_ff: int, dtype) -> Dict:
+    ks = jax.random.split(key, 3)
+    p = {"wo": linear_init(ks[2], d_ff, d_model, dtype)}
+    if cfg_activation == "swiglu":
+        p["wi"] = linear_init(ks[0], d_model, d_ff, dtype)
+        p["wg"] = linear_init(ks[1], d_model, d_ff, dtype)
+    else:
+        p["wi"] = linear_init(ks[0], d_model, d_ff, dtype)
+    return p
+
+
+def mlp_apply(params: Mapping[str, Any], x: jax.Array, activation: str) -> jax.Array:
+    if activation == "swiglu":
+        h = jax.nn.silu(linear(params["wg"], x)) * linear(params["wi"], x)
+    elif activation == "gelu":
+        h = jax.nn.gelu(linear(params["wi"], x))
+    elif activation == "relu_sq":
+        h = jnp.square(jax.nn.relu(linear(params["wi"], x)))
+    else:
+        raise ValueError(activation)
+    return linear(params["wo"], h)
+
+
+def mlp_taps(params: Mapping[str, Any], x: jax.Array, activation: str, taps: Dict, prefix: str):
+    """Forward with activation taps for calibration (records linear inputs)."""
+    taps[f"{prefix}.in"] = x
+    if activation == "swiglu":
+        h = jax.nn.silu(linear(params["wg"], x)) * linear(params["wi"], x)
+    elif activation == "gelu":
+        h = jax.nn.gelu(linear(params["wi"], x))
+    elif activation == "relu_sq":
+        h = jnp.square(jax.nn.relu(linear(params["wi"], x)))
+    else:
+        raise ValueError(activation)
+    taps[f"{prefix}.mid"] = h
+    return linear(params["wo"], h)
+
+
+# ---------------------------------------------------------------- embeddings
+
+def embedding_init(key, vocab: int, dim: int, dtype):
+    return {"table": (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)}
+
+
+def embed(params: Mapping[str, Any], tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params: Mapping[str, Any], x: jax.Array) -> jax.Array:
+    """Logits; params either a tied embedding table or an output projection."""
+    if "table" in params:
+        return jnp.einsum("...d,vd->...v", x, params["table"])
+    return linear(params, x)
+
+
+def learned_pos_init(key, max_seq: int, dim: int, dtype):
+    return {"table": (jax.random.normal(key, (max_seq, dim), jnp.float32) * 0.02).astype(dtype)}
+
+
+def learned_pos(params: Mapping[str, Any], positions: jax.Array) -> jax.Array:
+    # Clip: assigned decode shapes can exceed the family's native max
+    # positions; learned tables saturate rather than crash (documented).
+    pos = jnp.minimum(positions, params["table"].shape[0] - 1)
+    return jnp.take(params["table"], pos, axis=0)

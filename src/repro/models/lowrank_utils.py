@@ -1,0 +1,23 @@
+"""Small helpers shared by model layers for factored params."""
+
+from __future__ import annotations
+
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_kernel(params: Mapping[str, Any]) -> jax.Array:
+    """Materialize the (in, out) kernel from dense or factored params.
+
+    Used where a weight participates in a non-matmul construction (e.g. MLA
+    absorption).  The materialized matrix is rank-width small in the MLA case
+    (kv_lora_rank rows), so this stays cheap.
+    """
+    if "kernel" in params:
+        return params["kernel"]
+    k = jnp.matmul(params["u"], params["v"])
+    if "u2" in params:
+        k = k + jnp.matmul(params["u2"], params["v2"])
+    return k

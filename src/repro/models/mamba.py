@@ -1,0 +1,181 @@
+"""Mamba (S6) selective-state-space mixer — jamba's sequence layer.
+
+TPU adaptation (DESIGN.md §3): the CUDA reference fuses the recurrence into
+a warp-level scan; here the diagonal-A recurrence
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t,     y_t = C_t . h_t + D x_t
+
+is chunked: a sequential lax.scan over chunks carries the (B, Di, N) state,
+and within a chunk the recurrence runs as an associative scan
+(work-efficient, parallel over the chunk) — bounding the materialized
+(chunk, Di, N) tensor to VMEM-friendly sizes.
+
+Decode: single-step state update against the {"h", "conv"} cache.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from .layers import linear, linear_init
+
+Array = jax.Array
+
+
+def mamba_init(key, cfg: ModelConfig, dtype) -> Dict:
+    mc = cfg.mamba
+    d = cfg.d_model
+    di = mc.d_inner
+    ns = mc.d_state
+    dt_rank = mc.dt_rank or -(-d // 16)
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A.
+    a_init = jnp.tile(jnp.arange(1, ns + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": linear_init(ks[0], d, 2 * di, dtype),
+        "conv": {
+            "w": (jax.random.normal(ks[1], (mc.d_conv, di), jnp.float32) * 0.1).astype(dtype),
+            "b": jnp.zeros((di,), dtype),
+        },
+        "x_proj": linear_init(ks[2], di, dt_rank + 2 * ns, dtype),
+        "dt_proj": {
+            "kernel": (jax.random.normal(ks[3], (dt_rank, di), jnp.float32) * (dt_rank ** -0.5)).astype(dtype),
+            "bias": jnp.full((di,), -4.6, dtype),  # softplus^-1(0.01)
+        },
+        "a_log": jnp.log(a_init),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": linear_init(ks[4], di, d, dtype),
+    }
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    mc = cfg.mamba
+    return {
+        "h": jnp.zeros((batch, mc.d_inner, mc.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, mc.d_conv - 1, mc.d_inner), dtype),
+    }
+
+
+def _causal_depthwise_conv(x: Array, w: Array, b: Array, tail: Optional[Array]) -> Array:
+    """x: (B, S, Di); w: (K, Di).  Causal: pads with `tail` (or zeros)."""
+    k = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + xp[:, i : i + x.shape[1]] * w[i]
+    return out + b
+
+
+def _ssm_params(params, xc: Array, cfg: ModelConfig, taps=None, tap_prefix=""):
+    mc = cfg.mamba
+    dt_rank = mc.dt_rank or -(-cfg.d_model // 16)
+    if taps is not None:
+        taps[f"{tap_prefix}.ssm_in"] = xc
+    proj = linear(params["x_proj"], xc)
+    dt_in = proj[..., :dt_rank]
+    if taps is not None:
+        taps[f"{tap_prefix}.dt_in"] = dt_in
+    b_mat = proj[..., dt_rank : dt_rank + mc.d_state]
+    c_mat = proj[..., dt_rank + mc.d_state :]
+    dt = jnp.matmul(dt_in, params["dt_proj"]["kernel"]) + params["dt_proj"]["bias"]
+    dt = jax.nn.softplus(dt.astype(jnp.float32))  # (B, S, Di)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))  # (Di, N)
+    return dt, a, b_mat.astype(jnp.float32), c_mat.astype(jnp.float32)
+
+
+def _chunk_scan(dt, a, b_mat, c_mat, xc, h0, chunk: int):
+    """Chunked associative scan of the diagonal SSM recurrence.
+
+    dt: (B, S, Di), a: (Di, N), b_mat/c_mat: (B, S, N), xc: (B, S, Di)
+    h0: (B, Di, N) initial state.  Returns (y (B, S, Di), h_final).
+
+    The (.., Di, N) decay / input-outer tensors are formed INSIDE the chunk
+    body from (B, chunk, ..) slices, so only one chunk's (B, chunk, Di, N)
+    tensor is ever live — materializing them over the full sequence first
+    costs nchunks x the memory for zero benefit (EXPERIMENTS.md §Perf,
+    jamba iteration 1: 16x reduction of the dominant temp allocation).
+    """
+    bsz, s, di = dt.shape
+    n = a.shape[1]
+    nchunks = max(1, s // chunk)
+    chunk = s // nchunks
+
+    dt_c = jnp.moveaxis(dt.reshape(bsz, nchunks, chunk, di), 1, 0)
+    bx_c = jnp.moveaxis(
+        (dt * xc.astype(jnp.float32)).reshape(bsz, nchunks, chunk, di), 1, 0
+    )
+    b_c = jnp.moveaxis(b_mat.reshape(bsz, nchunks, chunk, n), 1, 0)
+    c_c = jnp.moveaxis(c_mat.reshape(bsz, nchunks, chunk, n), 1, 0)
+
+    def assoc(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b2 + a2 * b1
+
+    def step(h, inputs):
+        dt_k, bx_k, b_k, c_k = inputs  # (B, chunk, Di) / (B, chunk, N)
+        da_k = jnp.exp(dt_k[..., None] * a)  # (B, chunk, Di, N)
+        dbx_k = bx_k[..., None] * b_k[:, :, None, :]
+        # Prefix products within the chunk (parallel).
+        acc_a, acc_b = jax.lax.associative_scan(assoc, (da_k, dbx_k), axis=1)
+        h_t = acc_a * h[:, None] + acc_b  # (B, chunk, Di, N)
+        y_c = jnp.einsum("bsdn,bsn->bsd", h_t, c_k)
+        return h_t[:, -1], y_c
+
+    h_final, y = jax.lax.scan(step, h0, (dt_c, bx_c, b_c, c_c))
+    y = jnp.moveaxis(y, 0, 1).reshape(bsz, s, di)
+    return y, h_final
+
+
+def mamba_apply(
+    params: Mapping[str, Any],
+    x: Array,
+    cfg: ModelConfig,
+    mode: str = "causal",
+    cache: Optional[Dict] = None,
+    chunk: int = 256,
+    taps: Optional[Dict] = None,
+    tap_prefix: str = "",
+) -> Tuple[Array, Optional[Dict]]:
+    mc = cfg.mamba
+    b, s, _ = x.shape
+    if taps is not None:
+        taps[f"{tap_prefix}.in"] = x
+    xz = linear(params["in_proj"], x)
+    xpart, z = jnp.split(xz, 2, axis=-1)
+
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None and s == 1
+        tail = cache["conv"]
+        xc = _causal_depthwise_conv(xpart, params["conv"]["w"], params["conv"]["b"], tail)
+        new_tail = jnp.concatenate([tail[:, 1:], xpart], axis=1)
+        xc = jax.nn.silu(xc)
+        dt, a, b_mat, c_mat = _ssm_params(params, xc, cfg, taps, tap_prefix)
+        da = jnp.exp(dt[:, 0, :, None] * a)  # (B, Di, N)
+        dbx = (dt[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] * b_mat[:, 0, None, :]
+        h = da * cache["h"] + dbx
+        y = jnp.einsum("bdn,bn->bd", h, c_mat[:, 0])[:, None, :]
+        new_cache = {"h": h, "conv": new_tail}
+    else:
+        xc = _causal_depthwise_conv(xpart, params["conv"]["w"], params["conv"]["b"], None)
+        xc = jax.nn.silu(xc)
+        dt, a, b_mat, c_mat = _ssm_params(params, xc, cfg, taps, tap_prefix)
+        h0 = jnp.zeros((b, mc.d_inner, mc.d_state), jnp.float32)
+        y, h_final = _chunk_scan(dt, a, b_mat, c_mat, xc, h0, chunk)
+        if cache is not None:
+            k = mc.d_conv - 1
+            new_cache = {"h": h_final, "conv": xpart[:, -k:, :]}
+
+    y = y.astype(x.dtype) + params["d_skip"].astype(x.dtype) * xc
+    y = y * jax.nn.silu(z)
+    if taps is not None:
+        taps[f"{tap_prefix}.out_in"] = y
+    return linear(params["out_proj"], y), new_cache

@@ -1,0 +1,199 @@
+"""Multi-head Latent Attention (deepseek-v3 / minicpm3).
+
+MLA compresses K/V into a small latent c_kv (kv_lora_rank) plus a shared
+rope key; the KV cache stores only (c_kv, k_rope) — a ~10-50x cache
+reduction vs GQA.
+
+Two execution paths:
+  * naive (train/prefill): expand K/V from the latent per token — matches the
+    reference formulation, best for large-S matmuls.
+  * absorbed (decode): fold W_uk into the query and W_uv into the output so
+    attention runs directly in latent space — avoids re-expanding a 32k-token
+    cache for every generated token.  This is the TPU-friendly decode path
+    (hillclimb candidate; see EXPERIMENTS.md §Perf).
+
+NSVD composes with MLA by treating each projection (wq_a, wq_b, wkv_a,
+wkv_b, wo) as an independent compressible matrix (DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from .layers import linear, linear_init, norm_apply, norm_init
+from .lowrank_utils import dense_kernel
+
+NEG_INF = -1e30
+
+
+def mla_init(key, cfg: ModelConfig, dtype) -> Dict:
+    m = cfg.mla
+    d = cfg.d_model
+    h = cfg.num_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": linear_init(ks[0], d, m.q_lora_rank, dtype),
+        "q_norm": norm_init("rmsnorm", m.q_lora_rank, dtype),
+        "wq_b": linear_init(ks[1], m.q_lora_rank, h * qk_dim, dtype),
+        "wkv_a": linear_init(ks[2], d, m.kv_lora_rank + m.qk_rope_head_dim, dtype),
+        "kv_norm": norm_init("rmsnorm", m.kv_lora_rank, dtype),
+        "wkv_b": linear_init(
+            ks[3], m.kv_lora_rank, h * (m.qk_nope_head_dim + m.v_head_dim), dtype
+        ),
+        "wo": linear_init(ks[4], h * m.v_head_dim, d, dtype),
+    }
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Dict:
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
+    }
+
+
+def _rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotate full last dim; x (..., S, dim) or (..., S, H, dim)."""
+    dim = x.shape[-1]
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    if x.ndim == positions.ndim + 1:  # (B, S, dim)
+        ang = positions[..., None].astype(jnp.float32) * inv_freq
+    else:  # (B, S, H, dim)
+        ang = positions[..., None, None].astype(jnp.float32) * inv_freq
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1).astype(x.dtype)
+
+
+def _project_q(params, x, cfg: ModelConfig, positions):
+    m = cfg.mla
+    h = cfg.num_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    cq = norm_apply(params["q_norm"], linear(params["wq_a"], x))
+    q = linear(params["wq_b"], cq).reshape(*x.shape[:-1], h, qk)
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = _rope(q[..., m.qk_nope_head_dim :], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(params, x, cfg: ModelConfig, positions):
+    m = cfg.mla
+    kv_a = linear(params["wkv_a"], x)
+    c_kv = norm_apply(params["kv_norm"], kv_a[..., : m.kv_lora_rank])
+    k_rope = _rope(kv_a[..., m.kv_lora_rank :], positions, cfg.rope_theta)
+    return c_kv, k_rope
+
+
+def mla_apply(
+    params: Mapping[str, Any],
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    mode: str = "causal",
+    cache: Optional[Dict] = None,
+    cache_len: Optional[jax.Array] = None,
+    taps: Optional[Dict] = None,
+    tap_prefix: str = "",
+) -> Tuple[jax.Array, Optional[Dict]]:
+    m = cfg.mla
+    h = cfg.num_heads
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    b, s, _ = x.shape
+
+    if taps is not None:
+        taps[f"{tap_prefix}.in"] = x
+
+    q_nope, q_rope = _project_q(params, x, cfg, positions)
+    c_kv_new, k_rope_new = _project_kv_latent(params, x, cfg, positions)
+    if taps is not None:
+        taps[f"{tap_prefix}.q_lora_in"] = norm_apply(
+            params["q_norm"], linear(params["wq_a"], x)
+        )
+        taps[f"{tap_prefix}.kv_lora_in"] = c_kv_new
+
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None and s == 1
+        idx = cache_len
+        rows = jnp.arange(b)
+        c_kv = cache["c_kv"].at[rows, idx].set(c_kv_new[:, 0].astype(cache["c_kv"].dtype))
+        k_rope = cache["k_rope"].at[rows, idx].set(
+            k_rope_new[:, 0].astype(cache["k_rope"].dtype)
+        )
+        new_cache = {"c_kv": c_kv, "k_rope": k_rope}
+        out = _absorbed_attention(params, q_nope, q_rope, c_kv, k_rope, cfg, idx, scale)
+    else:
+        # Naive expanded path.
+        kv = linear(params["wkv_b"], c_kv_new).reshape(
+            b, s, h, m.qk_nope_head_dim + m.v_head_dim
+        )
+        k_nope = kv[..., : m.qk_nope_head_dim]
+        v = kv[..., m.qk_nope_head_dim :]
+        k_rope_bcast = jnp.broadcast_to(
+            k_rope_new[:, :, None, :], (b, s, h, m.qk_rope_head_dim)
+        )
+        q = jnp.concatenate([q_nope, q_rope], -1)
+        k = jnp.concatenate([k_nope, k_rope_bcast], -1)
+        scores = (
+            jnp.einsum("bshd,bthd->bhst", q, k, preferred_element_type=jnp.float32)
+            * scale
+        )
+        causal = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(causal[None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhst,bthd->bshd", probs.astype(v.dtype), v)
+        if cache is not None:
+            t_max = cache["c_kv"].shape[1]
+            new_cache = {
+                "c_kv": jnp.pad(c_kv_new, [(0, 0), (0, t_max - s), (0, 0)]).astype(
+                    cache["c_kv"].dtype
+                ),
+                "k_rope": jnp.pad(k_rope_new, [(0, 0), (0, t_max - s), (0, 0)]).astype(
+                    cache["k_rope"].dtype
+                ),
+            }
+        out = out.reshape(b, s, h * m.v_head_dim)
+        if taps is not None:
+            taps[f"{tap_prefix}.out_in"] = out
+        return linear(params["wo"], out), new_cache
+
+    out = out.reshape(b, s, h * m.v_head_dim)
+    if taps is not None:
+        taps[f"{tap_prefix}.out_in"] = out
+    return linear(params["wo"], out), new_cache
+
+
+def _absorbed_attention(params, q_nope, q_rope, c_kv, k_rope, cfg, idx, scale):
+    """Decode attention in latent space (W_uk/W_uv absorbed).
+
+    q_nope: (B, 1, H, nope), c_kv: (B, T, R), k_rope: (B, T, r).
+    """
+    m = cfg.mla
+    h = cfg.num_heads
+    wkv_b = dense_kernel(params["wkv_b"])  # (R, H*(nope+v))
+    wkv_b = wkv_b.reshape(m.kv_lora_rank, h, m.qk_nope_head_dim + m.v_head_dim)
+    w_uk = wkv_b[..., : m.qk_nope_head_dim]  # (R, H, nope)
+    w_uv = wkv_b[..., m.qk_nope_head_dim :]  # (R, H, v)
+
+    # Fold W_uk into q: q_eff (B, 1, H, R)
+    q_eff = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk)
+    scores = jnp.einsum(
+        "bshr,btr->bhst", q_eff, c_kv, preferred_element_type=jnp.float32
+    )
+    scores += jnp.einsum(
+        "bshr,btr->bhst", q_rope, k_rope, preferred_element_type=jnp.float32
+    )
+    scores *= scale
+    t_max = c_kv.shape[1]
+    valid = jnp.arange(t_max)[None, :] <= idx[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhst,btr->bshr", probs.astype(c_kv.dtype), c_kv)  # (B,1,H,R)
+    return jnp.einsum("bshr,rhv->bshv", ctx, w_uv)  # (B,1,H,v)

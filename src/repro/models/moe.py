@@ -1,0 +1,206 @@
+"""Token-choice top-k MoE with capacity, shared experts, and EP dispatch.
+
+Two execution paths share the same dispatch math:
+
+  * single-device (``ep_axis=None``): plain jnp — used by smoke tests,
+    calibration and the small-LM repro experiments.  Can emit per-expert
+    activation taps for the per-expert Gram extension (DESIGN.md §7).
+
+  * expert-parallel (``ep_axis='model'``): called *inside* a fully-manual
+    shard_map.  Because the residual stream is replicated across the model
+    axis, each model shard simply gathers the tokens routed to its local
+    experts into an (E_local, C, D) capacity buffer — no all-to-all — and
+    the combine is a single psum, which XLA overlaps with the next block.
+    This is the TPU-native mapping of the paper-era GPU MoE dispatch
+    (DESIGN.md §3).
+
+Dispatch: token-slots are sorted by (local) expert id (stable), ranked
+within their expert, and dropped beyond capacity
+C = ceil(N * top_k * cf / E) (drop-by-position, Switch-style).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Mapping, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from .layers import linear, linear_init
+
+Array = jax.Array
+
+
+def moe_init(key, cfg: ModelConfig, dtype) -> Dict:
+    m = cfg.moe
+    d = cfg.d_model
+    f = m.d_ff_expert
+    e = m.num_experts
+    ks = jax.random.split(key, 8)
+    std = 1.0 / (d ** 0.5)
+    params: Dict[str, Any] = {
+        "router": {
+            # Router kept fp32 for routing stability.
+            "kernel": jax.random.normal(ks[0], (d, e), jnp.float32) * std
+        },
+        "experts": {
+            "wi": {"kernel": (jax.random.normal(ks[1], (e, d, f), jnp.float32) * std).astype(dtype)},
+            "wg": {"kernel": (jax.random.normal(ks[2], (e, d, f), jnp.float32) * std).astype(dtype)},
+            "wo": {"kernel": (jax.random.normal(ks[3], (e, f, d), jnp.float32) * (1.0 / f ** 0.5)).astype(dtype)},
+        },
+    }
+    if m.num_shared_experts > 0:
+        fs = f * m.num_shared_experts
+        params["shared"] = {
+            "wi": linear_init(ks[4], d, fs, dtype),
+            "wg": linear_init(ks[5], d, fs, dtype),
+            "wo": linear_init(ks[6], fs, d, dtype),
+        }
+    return params
+
+
+class Dispatch(NamedTuple):
+    buf: Array  # (E_local, C, D) gathered token embeddings
+    valid: Array  # (N*k,) slot validity (local expert & under capacity)
+    sorted_e: Array  # (N*k,) local expert id per sorted slot (E_local if remote)
+    pos: Array  # (N*k,) rank within expert
+    sorted_t: Array  # (N*k,) source token index
+    sorted_w: Array  # (N*k,) combine weight
+
+
+def _dispatch(
+    x_flat: Array,
+    top_w: Array,
+    top_i: Array,
+    e0,
+    e_local: int,
+    capacity: int,
+) -> Dispatch:
+    """Sort-based capacity dispatch for experts [e0, e0 + e_local)."""
+    n, k = top_i.shape
+    d = x_flat.shape[-1]
+    flat_e = top_i.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(n), k)
+    flat_w = top_w.reshape(-1)
+    local = (flat_e >= e0) & (flat_e < e0 + e_local)
+    key = jnp.where(local, flat_e - e0, e_local)
+    order = jnp.argsort(key, stable=True)
+    sorted_e = key[order]
+    sorted_t = flat_t[order]
+    sorted_w = flat_w[order]
+    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    pos = jnp.arange(sorted_e.shape[0]) - first
+    valid = (sorted_e < e_local) & (pos < capacity)
+    safe_e = jnp.where(valid, sorted_e, 0)
+    safe_p = jnp.where(valid, pos, 0)
+    buf = jnp.zeros((e_local, capacity, d), x_flat.dtype)
+    buf = buf.at[safe_e, safe_p].add(
+        jnp.where(valid[:, None], x_flat[sorted_t], 0).astype(x_flat.dtype)
+    )
+    return Dispatch(buf, valid, sorted_e, pos, sorted_t, sorted_w)
+
+
+def _combine(h: Array, disp: Dispatch, n: int) -> Array:
+    """Gather each slot's expert output, weight it, scatter-add to tokens."""
+    d = h.shape[-1]
+    safe_e = jnp.where(disp.valid, disp.sorted_e, 0)
+    safe_p = jnp.where(disp.valid, disp.pos, 0)
+    slot_out = h[safe_e, safe_p]  # (N*k, D)
+    slot_out = slot_out * jnp.where(disp.valid, disp.sorted_w, 0.0)[:, None].astype(
+        h.dtype
+    )
+    out = jnp.zeros((n, d), h.dtype)
+    return out.at[disp.sorted_t].add(slot_out)
+
+
+def _expert_ffn(experts: Mapping[str, Any], buf: Array) -> Array:
+    """buf: (E, C, D) -> (E, C, D) through each expert's SwiGLU FFN.
+
+    Supports dense (E, D, F) kernels or factored {u: (E, D, k), v: (E, k, F)}
+    (+ nested u2/v2) — the MoE twin of lowrank.linear_apply.
+    """
+
+    def emm(p, hh):
+        if "kernel" in p:
+            return jnp.einsum("ecd,edf->ecf", hh, p["kernel"])
+        y = jnp.einsum(
+            "eck,ekf->ecf", jnp.einsum("ecd,edk->eck", hh, p["u"]), p["v"]
+        )
+        if "u2" in p:
+            y = y + jnp.einsum(
+                "eck,ekf->ecf", jnp.einsum("ecd,edk->eck", hh, p["u2"]), p["v2"]
+            )
+        return y
+
+    h = jax.nn.silu(emm(experts["wg"], buf)) * emm(experts["wi"], buf)
+    return emm(experts["wo"], h), h
+
+
+def router_probs(params, x: Array) -> Array:
+    logits = jnp.matmul(x.astype(jnp.float32), params["router"]["kernel"].astype(jnp.float32))
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def moe_apply(
+    params: Mapping[str, Any],
+    x: Array,
+    cfg: ModelConfig,
+    ep_axis: Optional[str] = None,
+    taps: Optional[Dict] = None,
+    tap_prefix: str = "",
+) -> Tuple[Array, Array]:
+    """x: (B, S, D) -> (out (B, S, D), aux load-balance loss scalar).
+
+    When ``ep_axis`` is set this must run inside a shard_map where the
+    expert dim is sharded along that axis and x is replicated along it.
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    n = b * s
+    x_flat = x.reshape(n, d)
+    probs = router_probs(params, x_flat)  # (N, E) fp32
+    top_w, top_i = jax.lax.top_k(probs, m.top_k)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+
+    # Load-balance aux loss (Switch-style): E * sum_e f_e * p_e.
+    e = m.num_experts
+    counts = jnp.zeros((e,), jnp.float32).at[top_i.reshape(-1)].add(1.0)
+    f_e = counts / (n * m.top_k)
+    p_e = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(f_e * p_e)
+
+    if ep_axis is None:
+        e0, e_local = 0, e
+    else:
+        size = jax.lax.axis_size(ep_axis)
+        e_local = e // size
+        e0 = jax.lax.axis_index(ep_axis) * e_local
+
+    capacity = max(8, -(-n * m.top_k * int(4 * m.capacity_factor) // (4 * e)))
+    disp = _dispatch(x_flat, top_w, top_i, e0, e_local, capacity)
+
+    h, h_mid = _expert_ffn(params["experts"], disp.buf)  # (E_local, C, D/F)
+    if taps is not None:
+        taps[f"{tap_prefix}.router_in"] = x_flat
+        taps[f"{tap_prefix}.expert_buf"] = disp.buf
+        taps[f"{tap_prefix}.expert_mid"] = h_mid
+    out = _combine(h, disp, n)
+
+    # Shared experts (always-on dense SwiGLU).  Inside the EP shard_map their
+    # width arrives pre-sliced along the model axis, so the partial outputs
+    # ride the same psum as the routed-expert combine.
+    if "shared" in params:
+        sh = params["shared"]
+        hs = jax.nn.silu(linear(sh["wg"], x_flat)) * linear(sh["wi"], x_flat)
+        if taps is not None:
+            taps[f"{tap_prefix}.shared_in"] = x_flat
+            taps[f"{tap_prefix}.shared_mid"] = hs
+        out = out + linear(sh["wo"], hs).astype(out.dtype)
+
+    if ep_axis is not None:
+        out = jax.lax.psum(out, ep_axis)
+        aux = jax.lax.pmean(aux, ep_axis)
+
+    return out.reshape(b, s, d), aux

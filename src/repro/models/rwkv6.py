@@ -1,0 +1,215 @@
+"""RWKV6 "Finch" — attention-free time-mix with data-dependent decay.
+
+Faithful structure per arXiv:2404.05892:
+  * ddlerp token-shift: x_i = x + (x_prev - x) * (mu_i + lora_i(lerp(x)))
+    for i in {w, k, v, r, g}
+  * data-dependent decay: w_t = exp(-exp(w0 + tanh(xw W_d1) W_d2))
+  * per-head recurrence on state S (hd x hd):
+      out_t = r_t . (S_{t-1} + diag(u) k_t^T v_t)
+      S_t   = diag(w_t) S_{t-1} + k_t^T v_t
+  * group-norm over heads, gated by silu(g), then output projection
+  * channel-mix: token-shifted squared-relu FFN with receptance gate
+
+Sequence path: lax.scan over time (the Pallas kernel implements the chunked
+form; see repro/kernels/rwkv6).  Decode: single step against the
+{"shift","state"} cache — O(1) per token, which is why rwkv6 runs the
+long_500k cell.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from .layers import linear, linear_init
+
+Array = jax.Array
+
+MIX_NAMES = ("w", "k", "v", "r", "g")
+
+
+def rwkv_time_mix_init(key, cfg: ModelConfig, dtype) -> Dict:
+    r = cfg.rwkv
+    d = cfg.d_model
+    n_heads = d // r.head_dim
+    ks = jax.random.split(key, 16)
+    p: Dict[str, Any] = {
+        "mu_x": (jax.random.uniform(ks[0], (d,)) * 0.5).astype(dtype),
+        "mix_w1": (jax.random.normal(ks[1], (d, 5 * r.mix_lora), jnp.float32) * 0.02).astype(dtype),
+        "mix_w2": (jax.random.normal(ks[2], (5, r.mix_lora, d), jnp.float32) * 0.02).astype(dtype),
+        "mu": (jax.random.uniform(ks[3], (5, d)) * 0.5).astype(dtype),
+        "decay_w0": jnp.asarray(
+            jax.random.uniform(ks[4], (d,), jnp.float32, -8.0, -4.0), dtype=jnp.float32
+        ),
+        "decay_w1": (jax.random.normal(ks[5], (d, r.decay_lora), jnp.float32) * 0.02).astype(dtype),
+        "decay_w2": (jax.random.normal(ks[6], (r.decay_lora, d), jnp.float32) * 0.02).astype(dtype),
+        "bonus": (jax.random.normal(ks[7], (n_heads, r.head_dim), jnp.float32) * 0.02).astype(jnp.float32),
+        "wr": linear_init(ks[8], d, d, dtype),
+        "wk": linear_init(ks[9], d, d, dtype),
+        "wv": linear_init(ks[10], d, d, dtype),
+        "wg": linear_init(ks[11], d, d, dtype),
+        "wo": linear_init(ks[12], d, d, dtype),
+        "ln_scale": jnp.ones((d,), dtype),
+        "ln_bias": jnp.zeros((d,), dtype),
+    }
+    return p
+
+
+def rwkv_channel_mix_init(key, cfg: ModelConfig, dtype) -> Dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": (jax.random.uniform(ks[0], (d,)) * 0.5).astype(dtype),
+        "mu_r": (jax.random.uniform(ks[1], (d,)) * 0.5).astype(dtype),
+        "wk": linear_init(ks[0], d, cfg.d_ff, dtype),
+        "wv": linear_init(ks[1], cfg.d_ff, d, dtype),
+        "wr": linear_init(ks[2], d, d, dtype),
+    }
+
+
+def init_rwkv_cache(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    r = cfg.rwkv
+    d = cfg.d_model
+    n_heads = d // r.head_dim
+    return {
+        "shift_t": jnp.zeros((batch, d), dtype),
+        "shift_c": jnp.zeros((batch, d), dtype),
+        "state": jnp.zeros((batch, n_heads, r.head_dim, r.head_dim), jnp.float32),
+    }
+
+
+def _token_shift(x: Array, prev: Optional[Array]) -> Array:
+    """x_prev per position; position 0 uses `prev` (cache) or zeros."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    else:
+        prev = prev[:, None, :].astype(x.dtype)
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _ddlerp(params, x: Array, x_prev: Array):
+    """Data-dependent lerp producing the five mixed inputs (w,k,v,r,g)."""
+    xx = x_prev - x
+    xxx = x + xx * params["mu_x"]
+    # (B, S, 5*mix_lora) -> (5, B, S, mix_lora)
+    lora = jnp.tanh(jnp.matmul(xxx, params["mix_w1"]))
+    lora = lora.reshape(*x.shape[:-1], 5, -1)
+    lora = jnp.moveaxis(lora, -2, 0)
+    dyn = jnp.einsum("nbsl,nld->nbsd", lora, params["mix_w2"])
+    mixed = x[None] + xx[None] * (params["mu"][:, None, None, :] + dyn)
+    return {name: mixed[i] for i, name in enumerate(MIX_NAMES)}
+
+
+def _group_norm(x: Array, scale: Array, bias: Array, n_heads: int, eps=1e-5) -> Array:
+    """Per-head layernorm over the concatenated head outputs."""
+    b, s, d = x.shape
+    xh = x.reshape(b, s, n_heads, d // n_heads).astype(jnp.float32)
+    mean = jnp.mean(xh, -1, keepdims=True)
+    var = jnp.var(xh, -1, keepdims=True)
+    y = (xh - mean) * jax.lax.rsqrt(var + eps)
+    return (y.reshape(b, s, d) * scale + bias).astype(x.dtype)
+
+
+def rwkv_time_mix(
+    params: Mapping[str, Any],
+    x: Array,
+    cfg: ModelConfig,
+    mode: str = "causal",
+    cache: Optional[Dict] = None,
+    taps: Optional[Dict] = None,
+    tap_prefix: str = "",
+) -> Tuple[Array, Optional[Dict]]:
+    r = cfg.rwkv
+    d = cfg.d_model
+    hd = r.head_dim
+    n_heads = d // hd
+    b, s, _ = x.shape
+
+    prev = cache["shift_t"] if (cache is not None and mode == "decode") else None
+    x_prev = _token_shift(x, prev)
+    mixed = _ddlerp(params, x, x_prev)
+    if taps is not None:
+        for nm in MIX_NAMES:
+            taps[f"{tap_prefix}.{nm}_in"] = mixed[nm]
+
+    rv = linear(params["wr"], mixed["r"]).reshape(b, s, n_heads, hd)
+    kv = linear(params["wk"], mixed["k"]).reshape(b, s, n_heads, hd)
+    vv = linear(params["wv"], mixed["v"]).reshape(b, s, n_heads, hd)
+    g = linear(params["wg"], mixed["g"])
+    decay = params["decay_w0"] + jnp.matmul(
+        jnp.tanh(jnp.matmul(mixed["w"], params["decay_w1"])), params["decay_w2"]
+    ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(decay)).reshape(b, s, n_heads, hd)  # in (0, 1)
+    u = params["bonus"]  # (H, hd)
+
+    state0 = (
+        cache["state"]
+        if cache is not None
+        else jnp.zeros((b, n_heads, hd, hd), jnp.float32)
+    )
+
+    rf = rv.astype(jnp.float32)
+    kf = kv.astype(jnp.float32)
+    vf = vv.astype(jnp.float32)
+
+    if mode == "decode":
+        kv_outer = kf[:, 0, :, :, None] * vf[:, 0, :, None, :]  # (B,H,hd,hd)
+        out = jnp.einsum(
+            "bhk,bhkv->bhv", rf[:, 0], state0 + u[None, :, :, None] * kv_outer
+        )
+        state = w[:, 0, :, :, None] * state0 + kv_outer
+        y = out[:, None].reshape(b, 1, d)
+        new_cache = {"shift_t": x[:, -1], "state": state}
+    else:
+
+        def step(st, inp):
+            r_t, k_t, v_t, w_t = inp  # (B,H,hd) each
+            kv_outer = k_t[..., :, None] * v_t[..., None, :]
+            out_t = jnp.einsum(
+                "bhk,bhkv->bhv", r_t, st + u[None, :, :, None] * kv_outer
+            )
+            st = w_t[..., :, None] * st + kv_outer
+            return st, out_t
+
+        xs = tuple(
+            jnp.moveaxis(t, 1, 0) for t in (rf, kf, vf, w.astype(jnp.float32))
+        )
+        state, outs = jax.lax.scan(step, state0, xs)
+        y = jnp.moveaxis(outs, 0, 1).reshape(b, s, d)
+        new_cache = {"shift_t": x[:, -1], "state": state} if cache is not None else None
+
+    y = _group_norm(y.astype(x.dtype), params["ln_scale"], params["ln_bias"], n_heads)
+    y = y * jax.nn.silu(g)
+    if taps is not None:
+        taps[f"{tap_prefix}.out_in"] = y
+    return linear(params["wo"], y), new_cache
+
+
+def rwkv_channel_mix(
+    params: Mapping[str, Any],
+    x: Array,
+    cfg: ModelConfig,
+    mode: str = "causal",
+    cache: Optional[Dict] = None,
+    taps: Optional[Dict] = None,
+    tap_prefix: str = "",
+) -> Tuple[Array, Optional[Dict]]:
+    prev = cache["shift_c"] if (cache is not None and mode == "decode") else None
+    x_prev = _token_shift(x, prev)
+    xx = x_prev - x
+    xk = x + xx * params["mu_k"]
+    xr = x + xx * params["mu_r"]
+    if taps is not None:
+        taps[f"{tap_prefix}.k_in"] = xk
+        taps[f"{tap_prefix}.r_in"] = xr
+    h = jnp.square(jax.nn.relu(linear(params["wk"], xk)))
+    if taps is not None:
+        taps[f"{tap_prefix}.mid"] = h
+    v = linear(params["wv"], h)
+    y = jax.nn.sigmoid(linear(params["wr"], xr)) * v
+    new_cache = {"shift_c": x[:, -1]} if cache is not None else None
+    return y, new_cache

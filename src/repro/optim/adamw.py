@@ -1,0 +1,132 @@
+"""AdamW with ZeRO-1 state sharding and optional grad compression hooks.
+
+Design (1000+ node scale, DESIGN.md §5):
+  * params live in model dtype (bf16 at scale); the optimizer carries fp32
+    master copies + moments.
+  * ZeRO-1: master/moments are sharded over the DP axes *in addition to* the
+    param's own TP sharding — expressed purely through out_shardings on the
+    optimizer state (XLA inserts reduce-scatter/all-gather around the
+    update).  ``zero_pspec`` picks the largest TP-free dim.
+  * gradient clipping by global norm; optional int8 gradient compression
+    with error feedback (repro/optim/grad.py) applied before the DP
+    all-reduce.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # Schedule hook: step -> multiplier (see schedule.py).
+    schedule: Optional[Callable[[jax.Array], jax.Array]] = None
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any  # first moment (fp32)
+    nu: Any  # second moment (fp32)
+    master: Any  # fp32 master params
+
+
+def init_state(params) -> AdamWState:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(f32, params),
+        nu=jax.tree.map(f32, params),
+        master=jax.tree.map(lambda p: p.astype(jnp.float32), params),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def apply_updates(
+    params,
+    grads,
+    state: AdamWState,
+    cfg: AdamWConfig,
+) -> Tuple[Any, AdamWState, Mapping[str, jax.Array]]:
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    lr = cfg.lr * (cfg.schedule(step) if cfg.schedule is not None else 1.0)
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, mu, nu, master, p):
+        g = g.astype(jnp.float32) * scale
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * jnp.square(g)
+        mhat = mu / bc1
+        vhat = nu / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * master
+        master = master - lr * delta
+        return mu, nu, master, master.astype(p.dtype)
+
+    flat_out = jax.tree.map(upd, grads, state.mu, state.nu, state.master, params)
+    # Unzip the 4-tuples.
+    mu = jax.tree.map(lambda t: t[0], flat_out, is_leaf=lambda x: isinstance(x, tuple))
+    nu = jax.tree.map(lambda t: t[1], flat_out, is_leaf=lambda x: isinstance(x, tuple))
+    master = jax.tree.map(lambda t: t[2], flat_out, is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree.map(lambda t: t[3], flat_out, is_leaf=lambda x: isinstance(x, tuple))
+
+    new_state = AdamWState(step=step, mu=mu, nu=nu, master=master)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_state, metrics
+
+
+# ------------------------------------------------------------------ ZeRO-1
+
+def zero_pspec(param_spec: P, shape: Tuple[int, ...], dp_axes: Tuple[str, ...]) -> P:
+    """Shard an optimizer-state leaf over the DP axes on its largest dim not
+    already claimed by TP.  Falls back to the param spec when no dim is free
+    or divisible."""
+    import numpy as np
+
+    entries = list(param_spec) + [None] * (len(shape) - len(param_spec))
+
+    def uses_dp(e):
+        if e is None:
+            return False
+        axes = e if isinstance(e, tuple) else (e,)
+        return any(a in dp_axes for a in axes)
+
+    if any(uses_dp(e) for e in entries):
+        return param_spec  # FSDP already shards this param over DP
+    free = [i for i, e in enumerate(entries) if e is None and shape[i] > 1]
+    if not free:
+        return param_spec
+    target = max(free, key=lambda i: shape[i])
+    new_entries = list(entries)
+    new_entries[target] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    return P(*new_entries)
+
+
+def state_pspecs(params_shape, param_pspec_tree, dp_axes: Tuple[str, ...]):
+    """PartitionSpec tree for AdamWState given the params' spec tree."""
+
+    def zspec(leaf, spec):
+        return zero_pspec(spec, leaf.shape, dp_axes)
+
+    moments = jax.tree.map(zspec, params_shape, param_pspec_tree)
+    return AdamWState(step=P(), mu=moments, nu=moments, master=moments)

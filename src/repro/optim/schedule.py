@@ -1,0 +1,28 @@
+"""Learning-rate schedules (multiplier form: step -> scale in [0, 1])."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant():
+    return lambda step: jnp.ones((), jnp.float32)
+
+
+def linear_warmup_cosine(warmup: int, total: int, floor: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / max(warmup, 1), 1.0)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return warm * cos
+
+    return fn
+
+
+def inverse_sqrt(warmup: int):
+    def fn(step):
+        s = jnp.maximum(step.astype(jnp.float32), 1.0)
+        return jnp.minimum(s / max(warmup, 1), jnp.sqrt(warmup / s))
+
+    return fn

@@ -1,0 +1,8 @@
+from .sharding import (
+    NONE_PARALLEL,
+    Parallelism,
+    make_parallelism,
+    param_pspec,
+    param_pspecs,
+    param_shardings,
+)

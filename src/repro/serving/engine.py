@@ -1,0 +1,181 @@
+"""Batched serving engine (continuous-batching-lite) over (compressed)
+weights.
+
+Slot-based: a fixed (max_batch, max_len) cache; requests are admitted into
+free slots (per-row prefill written into the slot via dynamic updates),
+every engine step decodes one token for all live rows, finished rows free
+their slots immediately — new requests join mid-flight without stalling
+the running batch.  Greedy or temperature sampling.
+
+This is the decode path the nested_lowrank Pallas kernel serves on TPU;
+on CPU the jnp twin runs (ops.py dispatch).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.steps import _CACHE_LEAF_RULES
+from repro.models.api import Model
+
+
+def _walk_cache(tree, fn, name=""):
+    """Apply fn(leaf, batch_axis) over a cache pytree (stacked scan groups
+    put layer dims BEFORE the batch dim; the leaf name determines its base
+    rank, hence where batch sits)."""
+    if isinstance(tree, dict):
+        return {k: _walk_cache(v, fn, k) for k, v in tree.items()}
+    base_ndim = _CACHE_LEAF_RULES[name][0]
+    return fn(tree, tree.ndim - base_ndim)
+
+
+def slice_cache_row(cache, slot: int):
+    return _walk_cache(
+        cache, lambda c, ax: jax.lax.slice_in_dim(c, slot, slot + 1, axis=ax)
+    )
+
+
+def set_cache_row(cache, row, slot: int):
+    def walk(c, r, name=""):
+        if isinstance(c, dict):
+            return {k: walk(c[k], r[k], k) for k in c}
+        ax = c.ndim - _CACHE_LEAF_RULES[name][0]
+        idx = [slice(None)] * c.ndim
+        idx[ax] = slice(slot, slot + 1)
+        return c.at[tuple(idx)].set(r)
+
+    return walk(cache, row)
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    generated: List[int] = dataclasses.field(default_factory=list)
+    slot: Optional[int] = None
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        model: Model,
+        params,
+        max_batch: int = 8,
+        max_len: int = 512,
+        seed: int = 0,
+    ):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.cache = model.init_cache(max_batch, max_len)
+        self.cache_len = jnp.zeros((max_batch,), jnp.int32)
+        self.last_token = jnp.zeros((max_batch,), jnp.int32)
+        self.active = np.zeros((max_batch,), bool)
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.queue: deque[Request] = deque()
+        self._uid = itertools.count()
+        self._rng = jax.random.key(seed)
+
+        self._decode = jax.jit(self._decode_fn)
+        self._prefill = jax.jit(self._prefill_fn, static_argnames=("plen",))
+
+    # --------------------------------------------------------------- API
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
+               temperature: float = 0.0) -> int:
+        req = Request(next(self._uid), np.asarray(prompt, np.int32),
+                      max_new_tokens, temperature)
+        self.queue.append(req)
+        return req.uid
+
+    def run(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
+        """Drive until queue + slots drain.  Returns uid -> generated."""
+        finished: Dict[int, List[int]] = {}
+        for _ in range(max_steps):
+            self._admit()
+            if not self.active.any():
+                if not self.queue:
+                    break
+                continue
+            for req in self.step():
+                finished[req.uid] = req.generated
+        return finished
+
+    # ------------------------------------------------------------- internals
+
+    def _admit(self):
+        while self.queue and not self.active.all():
+            slot = int(np.argmin(self.active))
+            req = self.queue.popleft()
+            req.slot = slot
+            self.slots[slot] = req
+            self.active[slot] = True
+            self._prefill_into_slot(req, slot)
+
+    def _prefill_fn(self, params, cache, tokens, plen: int):
+        """Single-request prefill; returns (last_logits, row cache)."""
+        logits, new_cache, _ = self.model.apply(
+            params, tokens, mode="prefill", cache=cache
+        )
+        return logits[:, -1], new_cache
+
+    def _prefill_into_slot(self, req: Request, slot: int):
+        plen = len(req.prompt)
+        row_cache = slice_cache_row(self.cache, slot)
+        # Zero the row state (previous occupant) before prefill.
+        row_cache = jax.tree.map(jnp.zeros_like, row_cache)
+        tokens = jnp.asarray(req.prompt[None, :])
+        logits, row_cache = self._prefill(self.params, row_cache, tokens, plen)
+        self.cache = set_cache_row(self.cache, row_cache, slot)
+        self.cache_len = self.cache_len.at[slot].set(plen)
+        tok = self._sample(logits[0], req.temperature)
+        self.last_token = self.last_token.at[slot].set(tok)
+        req.generated.append(int(tok))
+
+    def _decode_fn(self, params, cache, last_token, cache_len):
+        logits, new_cache, _ = self.model.apply(
+            params, last_token[:, None], mode="decode",
+            cache=cache, cache_len=cache_len,
+        )
+        return logits[:, 0], new_cache
+
+    def _sample(self, logits: jax.Array, temperature: float) -> jax.Array:
+        if temperature <= 0.0:
+            return jnp.argmax(logits, -1).astype(jnp.int32)
+        self._rng, sub = jax.random.split(self._rng)
+        return jax.random.categorical(sub, logits / temperature).astype(jnp.int32)
+
+    def step(self) -> List[Request]:
+        """One decode step for all live rows; returns requests finished."""
+        logits, self.cache = self._decode(
+            self.params, self.cache, self.last_token, self.cache_len
+        )
+        self.cache_len = self.cache_len + jnp.asarray(self.active, jnp.int32)
+        finished = []
+        new_last = np.array(self.last_token)
+        for slot, req in enumerate(self.slots):
+            if req is None or not self.active[slot]:
+                continue
+            tok = self._sample(logits[slot], req.temperature)
+            req.generated.append(int(tok))
+            new_last[slot] = int(tok)
+            if req.done or self.cache_len[slot] >= self.max_len - 1:
+                finished.append(req)
+                self.slots[slot] = None
+                self.active[slot] = False
+        self.last_token = jnp.asarray(new_last)
+        return finished

@@ -1,0 +1,113 @@
+"""Property-based tests (hypothesis) for the core invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    achieved_ratio,
+    activation_loss,
+    compress,
+    gram_loss,
+    nested_compress,
+    rank_for_ratio,
+    ratio_for_rank,
+    split_rank,
+    truncated_svd,
+    MatrixSpec,
+    uniform_ranks,
+)
+
+dims = st.integers(min_value=4, max_value=40)
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+ratios = st.floats(min_value=0.05, max_value=0.8)
+k1fracs = st.floats(min_value=0.5, max_value=1.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, n=dims, seed=seeds)
+def test_truncated_svd_error_never_exceeds_full_rank(m, n, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((m, n))
+    k = min(m, n) // 2 + 1
+    err = np.linalg.norm(a - truncated_svd(a, k).matrix(), "fro")
+    s = np.linalg.svd(a, compute_uv=False)
+    np.testing.assert_allclose(err, np.sqrt(np.sum(s[k:] ** 2)), atol=1e-8)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, n=dims, seed=seeds, k1_frac=k1fracs)
+def test_nested_rank_and_storage_invariants(m, n, seed, k1_frac):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((m, n))
+    x = rng.standard_normal((n, 3 * n))
+    gram = x @ x.T
+    k = max(2, min(m, n) // 3)
+    f = nested_compress(a, k, "nsvd2", gram=gram, k1_frac=k1_frac,
+                        use_randomized=False)
+    assert f.rank == k
+    assert f.param_count() == (m + n) * k
+    # Reconstruction must be finite and loss consistent between the Gram and
+    # explicit activation formulations.
+    approx = f.matrix()
+    assert np.isfinite(approx).all()
+    np.testing.assert_allclose(
+        gram_loss(a, approx, gram), activation_loss(a, approx, x), rtol=1e-6, atol=1e-8
+    )
+
+
+@settings(max_examples=50, deadline=None)
+@given(m=st.integers(32, 4096), n=st.integers(32, 4096), ratio=ratios)
+def test_rank_for_ratio_respects_budget(m, n, ratio):
+    k = rank_for_ratio(m, n, ratio)
+    assert k >= 1
+    # Storage never exceeds budget unless clamped to the k=1 floor.
+    if k > 1:
+        assert (m + n) * k <= (1 - ratio) * m * n
+    # And one more rank would overflow it.
+    assert (m + n) * (k + 1) > (1 - ratio) * m * n
+    # Round-trip consistency.
+    assert ratio_for_rank(m, n, k) >= ratio - (m + n) / (m * n)
+
+
+@settings(max_examples=20, deadline=None)
+@given(ratio=ratios, seed=seeds)
+def test_uniform_allocation_achieves_ratio(ratio, seed):
+    rng = np.random.default_rng(seed)
+    specs = [
+        MatrixSpec(f"m{i}", int(rng.integers(256, 2048)), int(rng.integers(256, 2048)), "g")
+        for i in range(5)
+    ]
+    ranks = uniform_ranks(specs, ratio)
+    achieved = achieved_ratio(specs, ranks)
+    # Floor-rounding means achieved >= requested (we remove at least `ratio`),
+    # within the one-rank granularity.
+    assert achieved >= ratio - 0.02
+
+
+@settings(max_examples=15, deadline=None)
+@given(k=st.integers(1, 500), k1_frac=st.floats(0.0, 1.0))
+def test_split_rank_sum_invariant(k, k1_frac):
+    k1, k2 = split_rank(k, k1_frac)
+    assert k1 + k2 == k
+    assert k1 >= 1
+    assert k2 >= 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=seeds)
+def test_whitened_loss_dominates_plain_svd_loss_on_activations(seed):
+    """Activation-aware compression is never worse than plain SVD *on the
+    calibration activations* (it optimizes exactly that objective)."""
+    rng = np.random.default_rng(seed)
+    m, n, p = 24, 16, 64
+    a = rng.standard_normal((m, n))
+    scales = np.ones(n)
+    scales[:2] = 25.0
+    x = rng.standard_normal((n, p)) * scales[:, None]
+    gram = x @ x.T
+    k = 5
+    plain = compress(a, k, "svd", use_randomized=False)
+    aware = compress(a, k, "asvd2", gram=gram, damp=0.0, use_randomized=False)
+    assert activation_loss(a, aware.matrix(), x) <= activation_loss(
+        a, plain.matrix(), x
+    ) * (1 + 1e-9)

@@ -1,0 +1,79 @@
+"""Tests for the §Perf hillclimb features: int8 KV cache, chunk-local
+mamba scan, seq-parallel constraint plumbing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+
+
+class TestKVQuant:
+    @pytest.mark.parametrize("arch", ["deepseek-67b", "chatglm3-6b"])
+    def test_decode_matches_full_forward(self, arch):
+        cfg = get_config(arch).reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        b, s = 2, 8
+        tokens = jax.random.randint(jax.random.key(1), (b, s), 0, cfg.vocab_size)
+        full, _, _ = model.apply(params, tokens, mode="train")
+        cache = model.init_cache(b, 32, kv_quant=True)
+        _, cache, _ = model.apply(params, tokens[:, : s - 1], mode="prefill",
+                                  cache=cache)
+        cl = jnp.full((b,), s - 1, jnp.int32)
+        dec, _, _ = model.apply(params, tokens[:, s - 1 :], mode="decode",
+                                cache=cache, cache_len=cl)
+        np.testing.assert_allclose(
+            np.asarray(dec[:, 0]), np.asarray(full[:, -1]), rtol=0.08, atol=0.08
+        )
+
+    def test_cache_bytes_halved(self):
+        cfg = get_config("deepseek-67b").reduced()
+        model = build_model(cfg)
+
+        def nbytes(tree):
+            return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+        dense = jax.eval_shape(lambda: model.init_cache(4, 64))
+        quant = jax.eval_shape(lambda: model.init_cache(4, 64, kv_quant=True))
+
+        def sdsbytes(tree):
+            import numpy as np
+            return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+                       for x in jax.tree.leaves(tree))
+
+        # fp32 test dtype -> int8 = 4x smaller + per-vector scale overhead
+        # (1/hd relative; reduced config hd=8 -> 0.25 + 0.125 = 0.375;
+        # production hd=128 -> 0.258).
+        assert sdsbytes(quant) < 0.45 * sdsbytes(dense)
+
+
+class TestMambaChunkLocal:
+    def test_chunk_sizes_agree(self):
+        """The chunked scan must be chunk-size invariant (the §Perf change
+        moved tensor construction inside the body without changing math)."""
+        from repro.configs.base import MambaConfig, ModelConfig
+        from repro.models.mamba import mamba_apply, mamba_init
+
+        cfg = get_config("jamba-v0.1-52b").reduced()
+        params = mamba_init(jax.random.key(0), cfg, jnp.float32)
+        x = jax.random.normal(jax.random.key(1), (2, 32, cfg.d_model))
+        y8, _ = mamba_apply(params, x, cfg, chunk=8)
+        y16, _ = mamba_apply(params, x, cfg, chunk=16)
+        y32, _ = mamba_apply(params, x, cfg, chunk=32)
+        np.testing.assert_allclose(np.asarray(y8), np.asarray(y16), rtol=2e-4, atol=2e-5)
+        np.testing.assert_allclose(np.asarray(y8), np.asarray(y32), rtol=2e-4, atol=2e-5)
+
+
+class TestSeqParallelPlumbing:
+    def test_seq_parallel_model_runs_single_device(self):
+        cfg = get_config("chatglm3-6b").reduced()
+        model = build_model(cfg, seq_parallel=True)
+        params = model.init(jax.random.key(0))
+        tokens = jax.random.randint(jax.random.key(1), (2, 16), 0, cfg.vocab_size)
+        ref_model = build_model(cfg)
+        a, _, _ = model.apply(params, tokens, mode="train")
+        b, _, _ = ref_model.apply(params, tokens, mode="train")
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
