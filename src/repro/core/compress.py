@@ -52,10 +52,16 @@ class GramStore:
             return self._grams[fallback]
         raise KeyError(f"no Gram for {key!r} (fallback={fallback!r})")
 
-    def absmean(self, key: str, fallback: Optional[str] = None) -> np.ndarray:
-        k = key if key in self._absmean else fallback
-        if k is None or k not in self._absmean:
-            raise KeyError(f"no absmean for {key!r}")
+    def absmean(self, key: str, fallback: Optional[str] = None, min_count: int = 0) -> np.ndarray:
+        # Same fallback decision as gram(): a whitening Gram and its absmean
+        # must come from the SAME statistics, otherwise the stacked path
+        # whitens with the layer Gram while scaling with a per-expert mean.
+        if key in self._absmean and self._counts[key] >= min_count:
+            k = key
+        elif fallback is not None and fallback in self._absmean:
+            k = fallback
+        else:
+            raise KeyError(f"no absmean for {key!r} (fallback={fallback!r})")
         c = max(self._counts[k], 1.0)
         return self._absmean[k] / c
 
@@ -155,8 +161,9 @@ def compress_params(
                         if spec.per_layer_gram
                         else spec.gram_key
                     )
-                    g = grams.gram(key, fallback=spec.gram_key, min_count=spec.in_dim // 4)
-                    a = grams.absmean(key, fallback=spec.gram_key)
+                    min_count = spec.in_dim // 4
+                    g = grams.gram(key, fallback=spec.gram_key, min_count=min_count)
+                    a = grams.absmean(key, fallback=spec.gram_key, min_count=min_count)
                 outs.append(compress_matrix(flat[flat_i], rank, cfg, g, a))
             factored = {
                 k: jnp.stack([o[k] for o in outs]).reshape(

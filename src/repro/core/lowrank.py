@@ -12,9 +12,10 @@ paper's O = W1(Z1 x) + W2(Z2 x) transposed into row-vector convention
 (u = Z^T, v = W^T).
 
 ``linear_apply`` is the single entry point used by every model layer, so the
-whole zoo transparently runs dense or compressed.  ``use_kernel=True`` routes
-the nested matmul through the Pallas kernel (TPU); the default jnp path is
-what the dry-run lowers.
+whole zoo transparently runs dense or compressed.  Nested matmuls dispatch
+through ``kernels.nested_lowrank.ops``: the fused Pallas kernel on TPU for
+decode-shaped inputs, the jnp oracle on CPU (which is also what the dry-run
+lowers); ``use_kernel`` overrides the choice in either direction.
 """
 
 from __future__ import annotations
@@ -39,7 +40,7 @@ def is_nested(params: Mapping[str, Any]) -> bool:
 def linear_apply(
     params: Mapping[str, Any],
     x: jax.Array,
-    use_kernel: bool = False,
+    use_kernel: Optional[bool] = None,
     precision=None,
 ) -> jax.Array:
     """y = x @ W for dense, factored, or nested-factored params.
@@ -47,16 +48,23 @@ def linear_apply(
     x: (..., in) -> (..., out).  Factor matmuls contract in the order that
     keeps the intermediate at rank width (never materializes the dense
     kernel).
+
+    Nested params route through ``kernels.nested_lowrank.ops`` by default,
+    which picks the fused Pallas kernel for decode-shaped inputs on TPU and
+    the jnp oracle everywhere else; ``use_kernel=False`` forces the plain
+    jnp path (needed when ``precision`` must be honored), ``True`` forces
+    the kernel.
     """
     if "kernel" in params:
         return jnp.matmul(x, params["kernel"], precision=precision)
     if "u" not in params:
         raise KeyError(f"linear params must have 'kernel' or 'u', got {list(params)}")
-    if use_kernel and "u2" in params:
+    if use_kernel is not False and "u2" in params:
         from repro.kernels.nested_lowrank import ops as nlr_ops
 
         return nlr_ops.nested_lowrank_matmul(
-            x, params["u"], params["v"], params["u2"], params["v2"]
+            x, params["u"], params["v"], params["u2"], params["v2"],
+            use_kernel=use_kernel,
         )
     y = jnp.matmul(jnp.matmul(x, params["u"], precision=precision), params["v"],
                    precision=precision)

@@ -32,11 +32,22 @@ def rank_for_ratio(m: int, n: int, ratio: float, multiple_of: int = 1) -> int:
     k = int(budget // (m + n))
     k = max(1, k)
     if multiple_of > 1:
-        # Round down to the alignment grid but never to zero.
-        k = max(multiple_of, (k // multiple_of) * multiple_of)
-        # Never exceed the point where factorization stops compressing.
-        k = min(k, max(1, (m * n) // (m + n)))
+        k = _align_rank(k, multiple_of, m, n)
     return k
+
+
+def _align_rank(k: int, multiple_of: int, m: int, n: int) -> int:
+    """Round a budget-respecting rank onto the alignment grid.
+
+    Rounds DOWN so the aligned rank never stores more than the unaligned
+    one (the caller's budget).  The single exception is k < multiple_of,
+    where the floor would be rank zero: we return one ``multiple_of``
+    (the documented minimum) even though it may exceed the budget.
+    Always capped at the rank where factorization stops compressing.
+    """
+    down = (k // multiple_of) * multiple_of
+    k = down if down >= multiple_of else multiple_of
+    return min(k, max(1, (m * n) // (m + n)))
 
 
 def ratio_for_rank(m: int, n: int, k: int) -> float:
@@ -110,8 +121,7 @@ def importance_ranks(
     if multiple_of > 1:
         for name in ranks:
             s = by_name[name]
-            k = max(multiple_of, (ranks[name] // multiple_of) * multiple_of)
-            ranks[name] = min(k, max(1, (s.m * s.n) // (s.m + s.n)))
+            ranks[name] = _align_rank(ranks[name], multiple_of, s.m, s.n)
     return ranks
 
 

@@ -18,15 +18,29 @@ def _pad_to(x, mult, axis):
     return jnp.pad(x, widths), pad
 
 
+# The kernel keeps x and both rank-k intermediates resident in VMEM, so it
+# only pays off (and only fits the ~16 MB budget) for decode-shaped row
+# counts; larger batches (prefill/train) stay on the XLA matmul path.
+MAX_KERNEL_ROWS = 1024
+
+
 def nested_lowrank_matmul(
     x, u, v, u2, v2, block_n: int = 256, interpret: bool = False,
     use_kernel: bool | None = None,
 ):
     """Public op.  On non-TPU backends (and under dry-run lowering) the
     pure-jnp oracle is used; interpret=True forces the kernel body through
-    the Pallas interpreter (correctness tests)."""
+    the Pallas interpreter (correctness tests).  ``use_kernel=None`` picks
+    the kernel only for decode-shaped inputs (flattened rows <=
+    MAX_KERNEL_ROWS) on TPU; pass True to force it regardless."""
     if use_kernel is None:
-        use_kernel = interpret or jax.default_backend() == "tpu"
+        rows = 1
+        for s in x.shape[:-1]:
+            rows *= s
+        use_kernel = (
+            interpret
+            or (jax.default_backend() == "tpu" and rows <= MAX_KERNEL_ROWS)
+        )
     if not use_kernel:
         return nested_lowrank_matmul_ref(x, u, v, u2, v2)
     n = v.shape[-1]

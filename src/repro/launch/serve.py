@@ -19,6 +19,10 @@ def main():
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--compress", type=float, default=None,
                     help="NSVD ratio (requires calibration pass)")
     args = ap.parse_args()
@@ -48,16 +52,24 @@ def main():
         params = compress_params(params, plan, grams)
         print(f"serving NSVD-compressed weights ({plan.achieved_ratio:.0%} removed)")
 
-    eng = ServingEngine(model, params, max_batch=4, max_len=256)
-    rng = np.random.default_rng(0)
+    eng = ServingEngine(model, params, max_batch=args.max_batch,
+                        max_len=args.max_len, seed=args.seed)
+    rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
         eng.submit(rng.integers(2, cfg.vocab_size // 2, size=8),
-                   max_new_tokens=args.max_new)
+                   max_new_tokens=args.max_new,
+                   temperature=args.temperature)
     t0 = time.time()
     out = eng.run()
     dt = time.time() - t0
     n = sum(len(v) for v in out.values())
     print(f"{len(out)} requests, {n} tokens, {n/dt:.1f} tok/s")
+    s = eng.stats()
+    if s.get("steps"):
+        print(f"decode steps: {s['steps']}  "
+              f"p50={s['step_p50_s']*1e3:.2f}ms  "
+              f"p90={s['step_p90_s']*1e3:.2f}ms  "
+              f"p99={s['step_p99_s']*1e3:.2f}ms")
 
 
 if __name__ == "__main__":

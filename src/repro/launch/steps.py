@@ -125,6 +125,98 @@ def make_decode_step(model: Model) -> Callable:
     return decode_step
 
 
+# ------------------------------------------------------- serving jit roots
+#
+# The serving engine keeps ALL per-slot state (cache, lengths, last tokens,
+# PRNG keys) on device; these two step builders are its only jit roots.
+# PRNG keys travel as raw (B, 2) uint32 key data so they scatter/gather with
+# plain .at indexing.
+
+def sample_tokens(key_data: jax.Array, logits: jax.Array, temps: jax.Array):
+    """Vectorized per-row sampling: greedy where temps <= 0, categorical at
+    logits/temp otherwise, each row drawing from its own PRNG key.
+
+    key_data: (B, 2) uint32, logits: (B, V), temps: (B,) float32.
+    Returns (new_key_data (B, 2), tokens (B,) int32).
+    """
+
+    def one(kd, lg, t):
+        new_key, sub = jax.random.split(jax.random.wrap_key_data(kd))
+        greedy = jnp.argmax(lg, -1).astype(jnp.int32)
+        drawn = jax.random.categorical(sub, lg / jnp.maximum(t, 1e-6))
+        tok = jnp.where(t > 0.0, drawn.astype(jnp.int32), greedy)
+        return jax.random.key_data(new_key), tok
+
+    return jax.vmap(one)(key_data, logits, temps)
+
+
+def set_cache_rows(cache, rows, slots: jax.Array):
+    """Write R per-row cache slices into batch rows ``slots``, one scatter
+    per leaf.  Out-of-range slot indices are dropped (mode="drop"), which
+    admission uses to pad request groups to a fixed batch shape without
+    clobbering live rows."""
+
+    def walk(c, r, name=""):
+        if isinstance(c, dict):
+            return {k: walk(c[k], r[k], k) for k in c}
+        ax = c.ndim - _CACHE_LEAF_RULES[name][0]
+        idx = (slice(None),) * ax + (slots,)
+        return c.at[idx].set(r.astype(c.dtype), mode="drop")
+
+    return walk(cache, rows)
+
+
+def make_decode_sample_step(model: Model) -> Callable:
+    """Fused decode + batched sampling: one jitted call per engine step and
+    zero host round-trips.  Inactive rows keep their last_token and
+    cache_len (their sampled garbage is masked out on device)."""
+
+    def decode_sample_step(params, cache, last_token, cache_len, key_data,
+                           active, temps):
+        logits, cache, _ = model.apply(
+            params, last_token[:, None], mode="decode",
+            cache=cache, cache_len=cache_len,
+        )
+        key_data, sampled = sample_tokens(key_data, logits[:, 0], temps)
+        sampled = jnp.where(active, sampled, last_token)
+        cache_len = cache_len + active.astype(jnp.int32)
+        return sampled, cache, cache_len, key_data
+
+    return decode_sample_step
+
+
+def make_prefill_admit_step(model: Model, max_len: int) -> Callable:
+    """Batched multi-request admission in one jitted call: prefill R
+    prompts (right-padded to a shared bucket length P), scatter their fresh
+    row caches into the engine cache (replacing any previous occupant's
+    rows wholesale), set per-slot lengths / last tokens / keys, and sample
+    every row's first token.
+
+    ``slots`` entries >= max_batch mark padding rows: all their writes drop,
+    so admission groups keep a fixed (max_batch, P) shape and the engine
+    compiles once per prompt-length bucket, not once per prompt length.
+    """
+
+    def prefill_admit_step(params, cache, tokens, plens, slots, cache_len,
+                           last_token, key_data, temps):
+        row_cache = model.init_cache(tokens.shape[0], max_len)
+        logits, row_cache, _ = model.apply(
+            params, tokens, mode="prefill", cache=row_cache
+        )
+        # Last REAL position's logits per row (prompts are right-padded).
+        last = jnp.take_along_axis(logits, (plens - 1)[:, None, None], axis=1)
+        nslots = cache_len.shape[0]
+        row_keys = key_data[jnp.clip(slots, 0, nslots - 1)]
+        row_keys, first = sample_tokens(row_keys, last[:, 0], temps)
+        cache = set_cache_rows(cache, row_cache, slots)
+        cache_len = cache_len.at[slots].set(plens, mode="drop")
+        last_token = last_token.at[slots].set(first, mode="drop")
+        key_data = key_data.at[slots].set(row_keys, mode="drop")
+        return first, cache, cache_len, last_token, key_data
+
+    return prefill_admit_step
+
+
 # -------------------------------------------------------------- shardings
 
 # KV caches are SEQUENCE-sharded over the model axis (context parallelism):

@@ -76,6 +76,49 @@ def cache_specs(cfg: ModelConfig, case: ShapeCase) -> Any:
     )
 
 
+# Cache leaves holding RECURRENT state (SSM/RWKV): their post-prefill value
+# depends on every input position, so right-padding a prompt corrupts them.
+# Attention leaves (k/v/...) are per-position and masked by cache_len, so
+# padded rows are never attended before being overwritten.
+RECURRENT_CACHE_LEAVES = frozenset({"h", "conv", "state", "shift_t", "shift_c"})
+
+
+def cache_leaf_names(model: Model) -> frozenset:
+    """Distinct cache leaf names of a model (no device allocation)."""
+    shapes = jax.eval_shape(lambda: model.init_cache(1, 8))
+    names = set()
+
+    def walk(tree):
+        for k, v in tree.items():
+            if isinstance(v, dict):
+                walk(v)
+            else:
+                names.add(k)
+
+    walk(shapes)
+    return frozenset(names)
+
+
+def has_recurrent_cache(model: Model) -> bool:
+    """True when the model carries recurrent state in its cache, i.e.
+    prompts cannot be right-padded to bucketed prefill lengths."""
+    return bool(cache_leaf_names(model) & RECURRENT_CACHE_LEAVES)
+
+
+def prefill_pad_safe(model: Model) -> bool:
+    """True when right-padding a prompt cannot change real positions'
+    outputs, i.e. the serving engine may bucket prompt lengths.
+
+    Two architecture families are pad-SENSITIVE: recurrent caches
+    (SSM/RWKV state folds in every input position) and token-choice MoE
+    (expert capacity is budgeted over the flattened token batch, so padding
+    tokens compete for — and can evict real tokens from — expert slots).
+    """
+    if has_recurrent_cache(model):
+        return False
+    return getattr(model.cfg, "moe", None) is None
+
+
 def param_specs(cfg: ModelConfig, seed: int = 0) -> Any:
     """ShapeDtypeStructs of the model params (no allocation)."""
     model = build_model(cfg)

@@ -1,20 +1,45 @@
-"""Batched serving engine (continuous-batching-lite) over (compressed)
-weights.
+"""Batched, host-sync-free serving engine (continuous batching) over
+(compressed) weights.
 
 Slot-based: a fixed (max_batch, max_len) cache; requests are admitted into
-free slots (per-row prefill written into the slot via dynamic updates),
-every engine step decodes one token for all live rows, finished rows free
-their slots immediately — new requests join mid-flight without stalling
-the running batch.  Greedy or temperature sampling.
+free slots, every engine step decodes one token for all live rows, finished
+rows free their slots immediately — new requests join mid-flight without
+stalling the running batch.
 
-This is the decode path the nested_lowrank Pallas kernel serves on TPU;
-on CPU the jnp twin runs (ops.py dispatch).
+Hot-path design (the paper's Eq. 6 payoff is only real if the engine keeps
+up with the factored matmuls):
+
+  * ALL per-slot state lives on device: cache, cache_len, last_token and a
+    per-slot PRNG key array.  The host mirrors only what it needs for
+    scheduling (active flags, lengths) and those mirrors are updated from
+    host-side bookkeeping, never by reading device buffers.
+  * ``step()`` is ONE jitted call (decode + batched greedy/temperature
+    sampling for every live row) followed by ONE device->host transfer of
+    the sampled token vector.  No per-slot ``int(...)`` syncs.
+  * Prefill compiles once per prompt-length BUCKET (powers of two), not
+    once per prompt length: prompts are right-padded to the bucket, the
+    causal mask keeps real positions exact, and the padded cache tail is
+    masked by cache_len until decode overwrites it.  Pad-sensitive models
+    — recurrent cache state (SSM/RWKV) and token-choice MoE (padding
+    tokens would compete for expert-capacity slots) — fall back to
+    exact-length prefill (detected via ``prefill_pad_safe``).
+  * Admission is batched: up to ``max_batch`` queued requests sharing a
+    bucket are prefilled in one call and scattered into their slots with
+    one multi-row cache write (padding rows carry an out-of-range slot
+    index, so their writes drop).
+
+Decode-time nested-lowrank matmuls of compressed dense/attention/MLP
+layers route through ``kernels/nested_lowrank/ops.py`` (fused Pallas
+kernel on TPU, jnp oracle on CPU) via ``linear_apply``'s default
+dispatch; MoE expert matmuls keep their own stacked-einsum twin
+(``moe._expert_ffn``) and are not kernel-routed yet.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import itertools
+import time
 from collections import deque
 from typing import Dict, List, Optional
 
@@ -22,36 +47,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.launch.steps import _CACHE_LEAF_RULES
-from repro.models.api import Model
-
-
-def _walk_cache(tree, fn, name=""):
-    """Apply fn(leaf, batch_axis) over a cache pytree (stacked scan groups
-    put layer dims BEFORE the batch dim; the leaf name determines its base
-    rank, hence where batch sits)."""
-    if isinstance(tree, dict):
-        return {k: _walk_cache(v, fn, k) for k, v in tree.items()}
-    base_ndim = _CACHE_LEAF_RULES[name][0]
-    return fn(tree, tree.ndim - base_ndim)
-
-
-def slice_cache_row(cache, slot: int):
-    return _walk_cache(
-        cache, lambda c, ax: jax.lax.slice_in_dim(c, slot, slot + 1, axis=ax)
-    )
-
-
-def set_cache_row(cache, row, slot: int):
-    def walk(c, r, name=""):
-        if isinstance(c, dict):
-            return {k: walk(c[k], r[k], k) for k in c}
-        ax = c.ndim - _CACHE_LEAF_RULES[name][0]
-        idx = [slice(None)] * c.ndim
-        idx[ax] = slice(slot, slot + 1)
-        return c.at[tuple(idx)].set(r)
-
-    return walk(cache, row)
+from repro.launch.steps import make_decode_sample_step, make_prefill_admit_step
+from repro.models.api import Model, prefill_pad_safe
 
 
 @dataclasses.dataclass
@@ -76,29 +73,51 @@ class ServingEngine:
         max_batch: int = 8,
         max_len: int = 512,
         seed: int = 0,
+        bucket_min: int = 16,
     ):
         self.model = model
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
+
+        # Device-resident state (never read back except the sampled tokens).
         self.cache = model.init_cache(max_batch, max_len)
         self.cache_len = jnp.zeros((max_batch,), jnp.int32)
         self.last_token = jnp.zeros((max_batch,), jnp.int32)
+        self.key_data = jax.random.key_data(
+            jax.random.split(jax.random.key(seed), max_batch)
+        )
+
+        # Host mirrors for scheduling (updated by bookkeeping, not syncs).
         self.active = np.zeros((max_batch,), bool)
+        self.temps = np.zeros((max_batch,), np.float32)
+        self._len_host = np.zeros((max_batch,), np.int64)
+
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.queue: deque[Request] = deque()
         self._uid = itertools.count()
-        self._rng = jax.random.key(seed)
 
-        self._decode = jax.jit(self._decode_fn)
-        self._prefill = jax.jit(self._prefill_fn, static_argnames=("plen",))
+        self._decode = jax.jit(make_decode_sample_step(model))
+        self._prefill = jax.jit(make_prefill_admit_step(model, max_len))
+        self._bucketed = prefill_pad_safe(model)
+        self._buckets = self._make_buckets(bucket_min, max_len)
+
+        # Telemetry: step() wall times (includes the one D2H sync).
+        self.step_times: List[float] = []
+        self.decode_transfers = 0
 
     # --------------------------------------------------------------- API
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
                temperature: float = 0.0) -> int:
-        req = Request(next(self._uid), np.asarray(prompt, np.int32),
-                      max_new_tokens, temperature)
+        prompt = np.asarray(prompt, np.int32)
+        if len(prompt) == 0:
+            raise ValueError("empty prompt")
+        if len(prompt) > self.max_len - 1:
+            raise ValueError(
+                f"prompt length {len(prompt)} exceeds max_len-1={self.max_len - 1}"
+            )
+        req = Request(next(self._uid), prompt, max_new_tokens, temperature)
         self.queue.append(req)
         return req.uid
 
@@ -106,7 +125,8 @@ class ServingEngine:
         """Drive until queue + slots drain.  Returns uid -> generated."""
         finished: Dict[int, List[int]] = {}
         for _ in range(max_steps):
-            self._admit()
+            for req in self._admit():
+                finished[req.uid] = req.generated
             if not self.active.any():
                 if not self.queue:
                     break
@@ -115,67 +135,131 @@ class ServingEngine:
                 finished[req.uid] = req.generated
         return finished
 
-    # ------------------------------------------------------------- internals
+    # ------------------------------------------------------------- admission
 
-    def _admit(self):
-        while self.queue and not self.active.all():
-            slot = int(np.argmin(self.active))
+    @staticmethod
+    def _make_buckets(bucket_min: int, max_len: int) -> List[int]:
+        buckets = []
+        b = bucket_min
+        while b < max_len:
+            buckets.append(b)
+            b *= 2
+        buckets.append(max_len)
+        return buckets
+
+    def _bucket(self, plen: int) -> int:
+        for b in self._buckets:
+            if plen <= b:
+                return b
+        return self.max_len
+
+    def _take_group(self, max_r: int) -> List[Request]:
+        """Pop up to max_r queued requests sharing the front request's
+        prompt-length bucket (FIFO within the bucket)."""
+        if not self.queue:
+            return []
+        if not self._bucketed:
+            # Recurrent state: exact-length prefill, one request at a time.
+            return [self.queue.popleft()]
+        want = self._bucket(len(self.queue[0].prompt))
+        group, rest = [], deque()
+        while self.queue:
             req = self.queue.popleft()
-            req.slot = slot
-            self.slots[slot] = req
-            self.active[slot] = True
-            self._prefill_into_slot(req, slot)
+            if len(group) < max_r and self._bucket(len(req.prompt)) == want:
+                group.append(req)
+            else:
+                rest.append(req)
+        self.queue = rest
+        return group
 
-    def _prefill_fn(self, params, cache, tokens, plen: int):
-        """Single-request prefill; returns (last_logits, row cache)."""
-        logits, new_cache, _ = self.model.apply(
-            params, tokens, mode="prefill", cache=cache
-        )
-        return logits[:, -1], new_cache
+    def _admit(self) -> List[Request]:
+        """Admit queued requests into free slots (batched per bucket).
+        Returns requests that finished at admission (max_new_tokens <= 1)."""
+        finished: List[Request] = []
+        while self.queue:
+            free = [i for i in range(self.max_batch) if not self.active[i]]
+            if not free:
+                break
+            group = self._take_group(len(free))
+            if not group:
+                break
+            if self._bucketed:
+                plen_pad = self._bucket(max(len(r.prompt) for r in group))
+                rows = self.max_batch  # fixed shape: compiles per bucket only
+            else:
+                plen_pad = len(group[0].prompt)
+                rows = 1
+            tokens = np.zeros((rows, plen_pad), np.int32)
+            plens = np.ones((rows,), np.int32)
+            slots = np.full((rows,), self.max_batch, np.int32)  # pad = dropped
+            temps = np.zeros((rows,), np.float32)
+            for r, req in enumerate(group):
+                tokens[r, : len(req.prompt)] = req.prompt
+                plens[r] = len(req.prompt)
+                slots[r] = free[r]
+                temps[r] = req.temperature
+            first, self.cache, self.cache_len, self.last_token, self.key_data = (
+                self._prefill(
+                    self.params, self.cache, jnp.asarray(tokens),
+                    jnp.asarray(plens), jnp.asarray(slots), self.cache_len,
+                    self.last_token, self.key_data, jnp.asarray(temps),
+                )
+            )
+            toks = np.asarray(jax.device_get(first))
+            for r, req in enumerate(group):
+                slot = free[r]
+                req.slot = slot
+                req.generated.append(int(toks[r]))
+                self.temps[slot] = req.temperature
+                self._len_host[slot] = len(req.prompt)
+                if req.done or self._len_host[slot] >= self.max_len - 1:
+                    finished.append(req)
+                else:
+                    self.slots[slot] = req
+                    self.active[slot] = True
+        return finished
 
-    def _prefill_into_slot(self, req: Request, slot: int):
-        plen = len(req.prompt)
-        row_cache = slice_cache_row(self.cache, slot)
-        # Zero the row state (previous occupant) before prefill.
-        row_cache = jax.tree.map(jnp.zeros_like, row_cache)
-        tokens = jnp.asarray(req.prompt[None, :])
-        logits, row_cache = self._prefill(self.params, row_cache, tokens, plen)
-        self.cache = set_cache_row(self.cache, row_cache, slot)
-        self.cache_len = self.cache_len.at[slot].set(plen)
-        tok = self._sample(logits[0], req.temperature)
-        self.last_token = self.last_token.at[slot].set(tok)
-        req.generated.append(int(tok))
-
-    def _decode_fn(self, params, cache, last_token, cache_len):
-        logits, new_cache, _ = self.model.apply(
-            params, last_token[:, None], mode="decode",
-            cache=cache, cache_len=cache_len,
-        )
-        return logits[:, 0], new_cache
-
-    def _sample(self, logits: jax.Array, temperature: float) -> jax.Array:
-        if temperature <= 0.0:
-            return jnp.argmax(logits, -1).astype(jnp.int32)
-        self._rng, sub = jax.random.split(self._rng)
-        return jax.random.categorical(sub, logits / temperature).astype(jnp.int32)
+    # --------------------------------------------------------------- decode
 
     def step(self) -> List[Request]:
-        """One decode step for all live rows; returns requests finished."""
-        logits, self.cache = self._decode(
-            self.params, self.cache, self.last_token, self.cache_len
+        """One decode step for all live rows; returns requests finished.
+
+        Exactly one device->host transfer: the sampled token vector."""
+        t0 = time.perf_counter()
+        active = self.active.copy()
+        sampled, self.cache, self.cache_len, self.key_data = self._decode(
+            self.params, self.cache, self.last_token, self.cache_len,
+            self.key_data, jnp.asarray(active), jnp.asarray(self.temps),
         )
-        self.cache_len = self.cache_len + jnp.asarray(self.active, jnp.int32)
+        self.last_token = sampled
+        self._len_host += active
+        toks = np.asarray(jax.device_get(sampled))  # the step's single D2H
+        self.decode_transfers += 1
         finished = []
-        new_last = np.array(self.last_token)
         for slot, req in enumerate(self.slots):
-            if req is None or not self.active[slot]:
+            if req is None or not active[slot]:
                 continue
-            tok = self._sample(logits[slot], req.temperature)
-            req.generated.append(int(tok))
-            new_last[slot] = int(tok)
-            if req.done or self.cache_len[slot] >= self.max_len - 1:
+            req.generated.append(int(toks[slot]))
+            if req.done or self._len_host[slot] >= self.max_len - 1:
                 finished.append(req)
                 self.slots[slot] = None
                 self.active[slot] = False
-        self.last_token = jnp.asarray(new_last)
+        self.step_times.append(time.perf_counter() - t0)
         return finished
+
+    # ------------------------------------------------------------ telemetry
+
+    def stats(self) -> Dict[str, float]:
+        """Decode-step timing summary (seconds) + throughput proxy."""
+        if not self.step_times:
+            return {"steps": 0}
+        ts = np.asarray(self.step_times)
+        n_live = max(1, int(self.active.sum()))
+        return {
+            "steps": len(ts),
+            "step_mean_s": float(ts.mean()),
+            "step_p50_s": float(np.percentile(ts, 50)),
+            "step_p90_s": float(np.percentile(ts, 90)),
+            "step_p99_s": float(np.percentile(ts, 99)),
+            "live_rows": n_live,
+        }

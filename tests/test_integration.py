@@ -90,6 +90,7 @@ class TestCompressionPipeline:
             assert g.shape == (t.in_dim, t.in_dim)
 
 
+@pytest.mark.slow
 class TestMoECalibration:
     def test_per_expert_grams_collected(self):
         cfg = get_config("moonshot-v1-16b-a3b").reduced()
@@ -137,6 +138,7 @@ class TestServingEngine:
             assert out[i] == ref, f"request {i}: batched != sequential"
 
 
+@pytest.mark.slow
 class TestTrainLoopResume:
     def test_checkpoint_resume_bitwise_data(self, tmp_path):
         from repro.launch.train import train_loop

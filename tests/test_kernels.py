@@ -29,6 +29,8 @@ class TestNestedLowRank:
         (4, 96, 24, 8, 192),     # non-128-aligned K
         (32, 256, 128, 16, 512), # multiple output tiles
         (8, 64, 16, 4, 100),     # N not divisible by block -> padded
+        (8, 64, 16, 4, 320),     # N > block and not divisible -> padded tiles
+        (4, 64, 16, 4, 130),     # N barely over one block
     ])
     @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
     def test_matches_oracle(self, m, kin, k1, k2, n, dtype):
@@ -41,6 +43,24 @@ class TestNestedLowRank:
         np.testing.assert_allclose(
             np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
         )
+
+    def test_linear_apply_routes_nested_through_ops(self):
+        """linear_apply's default dispatch (ops.py: kernel on TPU, oracle on
+        CPU) must agree with the explicit jnp path for nested params."""
+        from repro.core.lowrank import linear_apply
+
+        rng = np.random.default_rng(7)
+        params = {
+            "u": jnp.asarray(rng.standard_normal((64, 16)), jnp.float32),
+            "v": jnp.asarray(rng.standard_normal((16, 96)), jnp.float32),
+            "u2": jnp.asarray(rng.standard_normal((64, 4)), jnp.float32),
+            "v2": jnp.asarray(rng.standard_normal((4, 96)), jnp.float32),
+        }
+        x = jnp.asarray(rng.standard_normal((3, 5, 64)), jnp.float32)
+        auto = linear_apply(params, x)  # default: route through ops
+        plain = linear_apply(params, x, use_kernel=False)
+        np.testing.assert_allclose(np.asarray(auto), np.asarray(plain),
+                                   rtol=1e-6, atol=1e-6)
 
     def test_batched_leading_dims(self):
         rng = np.random.default_rng(1)
