@@ -1,10 +1,22 @@
-"""Serving-engine throughput benchmark: dense vs. NSVD-factored params.
+"""Serving-engine throughput benchmark: dense vs. NSVD params, dense-slab
+vs. paged KV cache.
 
 Drives the batched, sync-free ``ServingEngine`` on a synthetic request
-workload and reports tokens/sec plus decode step-time percentiles for the
-same small LM served dense and NSVD-compressed — the paper's deployment
-claim (Eq. 6: an NSVD model decodes at the cost of one rank-k ASVD) as a
-measurable serving number.
+workload and reports tokens/sec, decode step-time percentiles, and cache
+HBM bytes for the same small LM served four ways:
+
+    {dense params, NSVD-compressed params} x {dense-slab cache, paged cache}
+
+The params axis is the paper's deployment claim (Eq. 6: an NSVD model
+decodes at the cost of one rank-k ASVD); the cache axis is the engine's
+memory path: the paged pool is sized from the workload's worst-case live
+tokens (requests * blocks-per-request), so its HBM footprint scales with
+live tokens instead of max_batch * max_len while producing identical
+greedy outputs.
+
+Besides the human-readable table, writes ``BENCH_serving.json`` at the repo
+root — a machine-readable record (schema below) so the serving perf
+trajectory can be diffed across PRs.
 
     PYTHONPATH=src:. python -m benchmarks.serving_throughput
 """
@@ -12,12 +24,17 @@ measurable serving number.
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 from typing import Dict, List
 
 import numpy as np
 
-from .common import fmt_row, get_grams, save_table, train_small_lm
+from .common import get_grams, save_table, train_small_lm
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json")
+BENCH_SCHEMA = 1
 
 
 def _make_prompts(n: int, vocab: int, seed: int) -> List[np.ndarray]:
@@ -27,18 +44,24 @@ def _make_prompts(n: int, vocab: int, seed: int) -> List[np.ndarray]:
 
 
 def drive(model, params, prompts, label: str, max_batch: int, max_len: int,
-          max_new: int, warmup: int = 1) -> Dict[str, float]:
+          max_new: int, warmup: int = 1, paged: bool = False,
+          num_blocks=None, block_size: int = 16) -> Dict[str, float]:
     from repro.serving.engine import ServingEngine
 
-    # Warmup pass triggers all jit compilations (prefill buckets + decode)
-    # so the timed pass measures steady-state serving.
+    def make_engine():
+        return ServingEngine(model, params, max_batch=max_batch,
+                             max_len=max_len, paged=paged,
+                             num_blocks=num_blocks, block_size=block_size)
+
+    # Warmup pass triggers all jit compilations (prefill + decode) so the
+    # timed pass measures steady-state serving.
     for _ in range(warmup):
-        eng = ServingEngine(model, params, max_batch=max_batch, max_len=max_len)
+        eng = make_engine()
         for p in prompts[:max_batch]:
             eng.submit(p, max_new_tokens=2)
         eng.run()
 
-    eng = ServingEngine(model, params, max_batch=max_batch, max_len=max_len)
+    eng = make_engine()
     for p in prompts:
         eng.submit(p, max_new_tokens=max_new)
     t0 = time.perf_counter()
@@ -46,8 +69,10 @@ def drive(model, params, prompts, label: str, max_batch: int, max_len: int,
     dt = time.perf_counter() - t0
     n_tok = sum(len(v) for v in out.values())
     s = eng.stats()
+    cs = eng.cache_stats()
     row = {
         "label": label,
+        "cache": cs["layout"],
         "requests": len(out),
         "tokens": n_tok,
         "tok_per_s": n_tok / dt,
@@ -57,21 +82,31 @@ def drive(model, params, prompts, label: str, max_batch: int, max_len: int,
         "step_p90_ms": s.get("step_p90_s", 0.0) * 1e3,
         "step_p99_ms": s.get("step_p99_s", 0.0) * 1e3,
         "d2h_per_step": eng.decode_transfers / max(1, s.get("steps", 1)),
+        "cache_hbm_bytes": cs["cache_hbm_bytes"],
+        "cache_tokens_capacity": cs["tokens_capacity"],
     }
-    print(f"  [{label:<12}] {row['requests']} req, {n_tok} tok, "
+    if paged:
+        row["blocks_peak"] = cs["blocks_peak"]
+        row["block_size"] = cs["block_size"]
+    print(f"  [{label:<12}|{row['cache']:<5}] {row['requests']} req, {n_tok} tok, "
           f"{row['tok_per_s']:8.1f} tok/s | step p50={row['step_p50_ms']:.2f}ms "
-          f"p90={row['step_p90_ms']:.2f}ms p99={row['step_p99_ms']:.2f}ms")
+          f"p90={row['step_p90_ms']:.2f}ms | cache {cs['cache_hbm_bytes']/1e6:.2f}MB")
     return row
 
 
 def run(model_name: str = "small-llama", requests: int = 24, max_new: int = 24,
-        max_batch: int = 8, max_len: int = 256, ratio: float = 0.2):
+        max_batch: int = 8, max_len: int = 256, ratio: float = 0.2,
+        block_size: int = 16):
     from repro.core import CompressionConfig, build_plan, compress_params
 
     model, params, _ = train_small_lm(model_name)
     prompts = _make_prompts(requests, model.cfg.vocab_size, seed=0)
 
-    rows = [drive(model, params, prompts, "dense", max_batch, max_len, max_new)]
+    # Size the paged pool from the workload: worst-case live tokens are
+    # max_batch concurrent requests * (longest prompt + max_new) tokens —
+    # NOT max_batch * max_len, which is the dense slab's invariant cost.
+    per_req = -(-(max(len(p) for p in prompts) + max_new) // block_size)
+    num_blocks = max_batch * per_req
 
     grams = get_grams(model_name, model, params)
     plan = build_plan(
@@ -80,12 +115,42 @@ def run(model_name: str = "small-llama", requests: int = 24, max_new: int = 24,
                           use_randomized=False),
     )
     cparams = compress_params(params, plan, grams)
-    label = f"nsvd-{ratio:.0%}"
-    rows.append(drive(model, cparams, prompts, label, max_batch, max_len, max_new))
+    nsvd = f"nsvd-{ratio:.0%}"
 
-    save_table("serving_throughput", rows,
-               {"model": model_name, "ratio": ratio, "max_batch": max_batch,
-                "max_len": max_len, "max_new": max_new})
+    rows = []
+    for label, p in (("dense", params), (nsvd, cparams)):
+        rows.append(drive(model, p, prompts, label, max_batch, max_len,
+                          max_new, paged=False))
+        rows.append(drive(model, p, prompts, label, max_batch, max_len,
+                          max_new, paged=True, num_blocks=num_blocks,
+                          block_size=block_size))
+
+    meta = {"model": model_name, "ratio": ratio, "max_batch": max_batch,
+            "max_len": max_len, "max_new": max_new, "requests": requests,
+            "block_size": block_size, "num_blocks": num_blocks}
+    save_table("serving_throughput", rows, meta)
+
+    by = {(r["label"], r["cache"]): r for r in rows}
+    dense_b = by[("dense", "dense")]["cache_hbm_bytes"]
+    paged_b = by[("dense", "paged")]["cache_hbm_bytes"]
+    bench = {
+        "schema": BENCH_SCHEMA,
+        "generated_by": "benchmarks/serving_throughput.py",
+        "meta": meta,
+        "rows": rows,
+        "summary": {
+            "tok_per_s_dense_slab": by[(nsvd, "dense")]["tok_per_s"],
+            "tok_per_s_paged": by[(nsvd, "paged")]["tok_per_s"],
+            "cache_bytes_dense_slab": dense_b,
+            "cache_bytes_paged": paged_b,
+            "cache_bytes_ratio": dense_b / max(1, paged_b),
+        },
+    }
+    with open(BENCH_PATH, "w") as f:
+        json.dump(bench, f, indent=1)
+    print(f"  cache HBM: dense-slab {dense_b/1e6:.2f}MB vs paged "
+          f"{paged_b/1e6:.2f}MB ({bench['summary']['cache_bytes_ratio']:.1f}x)"
+          f" -> BENCH_serving.json")
     return rows
 
 
@@ -97,9 +162,10 @@ def main():
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--ratio", type=float, default=0.2)
+    ap.add_argument("--block-size", type=int, default=16)
     args = ap.parse_args()
     run(args.model, args.requests, args.max_new, args.max_batch,
-        args.max_len, args.ratio)
+        args.max_len, args.ratio, args.block_size)
 
 
 if __name__ == "__main__":

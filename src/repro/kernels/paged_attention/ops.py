@@ -1,0 +1,44 @@
+"""jit'd wrapper: backend dispatch for paged-attention decode.
+
+The Pallas kernel streams exactly the live KV pages on TPU; every other
+backend (and the dry-run lowering) uses the jnp gather oracle, which is also
+the bit-reference the serving equivalence tests pin against the dense-slab
+decode path.  ``interpret=True`` forces the kernel body through the Pallas
+interpreter (correctness tests on CPU)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from .paged_attention import paged_attention as _kernel_call
+from .ref import gather_pages, paged_attention_ref  # noqa: F401 (re-export)
+
+
+def paged_attention(
+    q,
+    k_pages,
+    v_pages,
+    block_tables,
+    lengths,
+    k_scales=None,
+    v_scales=None,
+    scale: Optional[float] = None,
+    interpret: bool = False,
+    use_kernel: Optional[bool] = None,
+):
+    """Public op; see ref.paged_attention_ref for the argument contract.
+
+    ``use_kernel=None`` picks the Pallas kernel on TPU and the oracle
+    elsewhere; pass True/False to force either side."""
+    if use_kernel is None:
+        use_kernel = interpret or jax.default_backend() == "tpu"
+    if not use_kernel:
+        return paged_attention_ref(
+            q, k_pages, v_pages, block_tables, lengths, k_scales, v_scales, scale
+        )
+    return _kernel_call(
+        q, k_pages, v_pages, block_tables, lengths, k_scales, v_scales,
+        scale=scale, interpret=interpret,
+    )

@@ -1,0 +1,152 @@
+"""Pallas TPU kernel: paged-attention decode over a block-pool KV cache.
+
+vLLM-style serving memory layout: K/V live in a shared pool of fixed-size
+blocks (num_blocks, block_size, Hkv, hd) and each batch row names its blocks
+through a block-table row.  Decode attends one query token per row over that
+row's logical prefix, so the hot loop is pure HBM traffic — the kernel's job
+is to stream exactly the live pages and nothing else (the dense-slab path
+reads the full (max_batch, max_len) slab every step regardless of occupancy).
+
+Schedule: grid = (batch,); the block table and per-row lengths ride scalar
+prefetch (SMEM) so the page loop can compute DMA source indices before any
+data lands.  Pools stay HBM-resident (memory_space=ANY); each iteration
+async-copies one (block_size, Hkv, hd) page (plus its (block_size, Hkv)
+dequant scales for int8 pools) into VMEM, accumulates online-softmax state
+in fp32, and stops after ceil(length / block_size) pages — freed or
+never-allocated tail blocks are never touched.
+
+All Hkv heads of a row are processed per page so one DMA feeds the whole
+(Hkv, G, block_size) score tile.  The (G, block_size) per-head tile is small
+for GQA decode; this kernel targets correctness + page-exact HBM traffic
+first (see ops.py for the dispatch contract; tests drive interpret mode).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(bt_ref, len_ref, q_ref, kp_ref, vp_ref, *rest, block_size, scale, quant):
+    if quant:
+        (ksp_ref, vsp_ref, o_ref, k_buf, v_buf, ks_buf, vs_buf,
+         sem_k, sem_v, sem_ks, sem_vs) = rest
+    else:
+        o_ref, k_buf, v_buf, sem_k, sem_v = rest
+    i = pl.program_id(0)
+    bs = block_size
+    length = len_ref[i]
+    q = q_ref[0].astype(jnp.float32)  # (Hkv, G, hd)
+    hkv, g, hd = q.shape
+    n_pages = (length + bs - 1) // bs
+
+    def body(p, carry):
+        acc, m, l = carry
+        page = jnp.maximum(bt_ref[i, p], 0)  # clamp freed rows' -1 sentinels
+        ck = pltpu.make_async_copy(kp_ref.at[page], k_buf, sem_k)
+        cv = pltpu.make_async_copy(vp_ref.at[page], v_buf, sem_v)
+        ck.start()
+        cv.start()
+        if quant:
+            cks = pltpu.make_async_copy(ksp_ref.at[page], ks_buf, sem_ks)
+            cvs = pltpu.make_async_copy(vsp_ref.at[page], vs_buf, sem_vs)
+            cks.start()
+            cvs.start()
+        ck.wait()
+        cv.wait()
+        k = k_buf[...].astype(jnp.float32)  # (bs, Hkv, hd)
+        v = v_buf[...].astype(jnp.float32)
+        if quant:
+            cks.wait()
+            cvs.wait()
+            k = k * ks_buf[...][..., None]
+            v = v * vs_buf[...][..., None]
+        s = jnp.einsum("kgd,tkd->kgt", q, k, preferred_element_type=jnp.float32)
+        s = s * scale
+        pos = p * bs + jax.lax.broadcasted_iota(jnp.int32, (1, 1, bs), 2)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        pexp = jnp.exp(s - m_new)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(pexp, axis=-1, keepdims=True)
+        acc_new = acc * corr + jnp.einsum(
+            "kgt,tkd->kgd", pexp, v, preferred_element_type=jnp.float32
+        )
+        return acc_new, m_new, l_new
+
+    acc0 = jnp.zeros((hkv, g, hd), jnp.float32)
+    m0 = jnp.full((hkv, g, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((hkv, g, 1), jnp.float32)
+    acc, _, l = jax.lax.fori_loop(0, n_pages, body, (acc0, m0, l0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "interpret")
+)
+def paged_attention(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_tables: jax.Array,
+    lengths: jax.Array,
+    k_scales: jax.Array | None = None,
+    v_scales: jax.Array | None = None,
+    scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (B, Hq, hd); pools (N, bs, Hkv, hd); block_tables (B, M) int32;
+    lengths (B,) valid tokens per row (cache_len + 1).  Returns (B, Hq, hd).
+    """
+    b, hq, hd = q.shape
+    _, bs, hkv, _ = k_pages.shape
+    g = hq // hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(hd)
+    quant = k_scales is not None
+
+    qg = q.reshape(b, hkv, g, hd)  # head h = kv * G + gi, matching _gqa layout
+    kernel = functools.partial(_kernel, block_size=bs, scale=scale, quant=quant)
+    in_specs = [
+        pl.BlockSpec((1, hkv, g, hd), lambda i, bt, ln: (i, 0, 0, 0)),
+        pl.BlockSpec(memory_space=pltpu.ANY),
+        pl.BlockSpec(memory_space=pltpu.ANY),
+    ]
+    scratch = [
+        pltpu.VMEM((bs, hkv, hd), k_pages.dtype),
+        pltpu.VMEM((bs, hkv, hd), v_pages.dtype),
+    ]
+    operands = [block_tables, lengths, qg, k_pages, v_pages]
+    if quant:
+        in_specs += [
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ]
+        scratch += [
+            pltpu.VMEM((bs, hkv), jnp.float32),
+            pltpu.VMEM((bs, hkv), jnp.float32),
+        ]
+        operands += [k_scales, v_scales]
+    scratch += [pltpu.SemaphoreType.DMA] * (4 if quant else 2)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, hkv, g, hd), lambda i, bt, ln: (i, 0, 0, 0)),
+        scratch_shapes=scratch,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, hd), q.dtype),
+        interpret=interpret,
+    )(*operands)
+    return out.reshape(b, hq, hd)

@@ -1,0 +1,76 @@
+"""Pure-jnp oracle for paged-attention decode.
+
+The KV cache lives in a shared block pool of shape (num_blocks, block_size,
+Hkv, hd); each batch row owns an ordered list of physical block ids (its
+block-table row), so logical position p of row b lives at
+``pool[block_tables[b, p // bs], p % bs]``.  The oracle gathers every row's
+pages into a dense (B, M*bs, Hkv, hd) view and runs the same masked-softmax
+math as the dense-slab decode path — it is the CPU twin the serving engine
+uses off-TPU and the reference the Pallas kernel is validated against.
+
+Block-table entries < 0 mark unallocated tail blocks (gather clamps them to
+block 0; the length mask hides whatever garbage that reads).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def gather_pages(pool: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """pool (N, bs, ...), block_tables (B, M) -> dense view (B, M*bs, ...).
+
+    Row-major over (logical block, offset): position p of row b lands at
+    index p in the output.  Negative table entries are clamped to block 0;
+    callers mask those positions by length."""
+    g = pool[jnp.maximum(block_tables, 0)]  # (B, M, bs, ...)
+    return g.reshape(g.shape[0], -1, *pool.shape[2:])
+
+
+def paged_attention_ref(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_tables: jax.Array,
+    lengths: jax.Array,
+    k_scales: Optional[jax.Array] = None,
+    v_scales: Optional[jax.Array] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Single-token paged GQA decode attention.
+
+    q: (B, Hq, hd) — the new token's query (already rope'd).
+    k_pages/v_pages: (N, bs, Hkv, hd) block pools (int8 when quantized).
+    k_scales/v_scales: (N, bs, Hkv) dequant scales for int8 pools.
+    block_tables: (B, M) int32 physical block ids, -1 beyond the allocation.
+    lengths: (B,) int32 valid token count per row (INCLUDING the token
+      written this step, i.e. cache_len + 1).
+    Returns (B, Hq, hd) in q.dtype.
+    """
+    b, hq, hd = q.shape
+    hkv = k_pages.shape[2]
+    g = hq // hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(hd)
+
+    k = gather_pages(k_pages, block_tables)  # (B, T, Hkv, hd)
+    v = gather_pages(v_pages, block_tables)
+    if k_scales is not None:
+        k = (k.astype(jnp.float32) * gather_pages(k_scales, block_tables)[..., None]).astype(q.dtype)
+        v = (v.astype(jnp.float32) * gather_pages(v_scales, block_tables)[..., None]).astype(q.dtype)
+
+    qg = q.reshape(b, hkv, g, hd)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg, k, preferred_element_type=jnp.float32)
+    scores = scores * scale
+    t = k.shape[1]
+    valid = jnp.arange(t)[None, :] < lengths[:, None]  # (B, T)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", probs.astype(v.dtype), v)
+    return out.reshape(b, hq, hd).astype(q.dtype)

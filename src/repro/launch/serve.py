@@ -25,6 +25,14 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--compress", type=float, default=None,
                     help="NSVD ratio (requires calibration pass)")
+    ap.add_argument("--paged", choices=("auto", "on", "off"), default="auto",
+                    help="KV-cache layout (auto: paged for attention models)")
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="paged pool size (default: dense-capacity parity)")
+    ap.add_argument("--prefill-chunk", type=int, default=64)
+    ap.add_argument("--eos", type=int, default=None,
+                    help="EOS token id (device-side early exit)")
     args = ap.parse_args()
 
     if args.arch.startswith("small-"):
@@ -53,7 +61,12 @@ def main():
         print(f"serving NSVD-compressed weights ({plan.achieved_ratio:.0%} removed)")
 
     eng = ServingEngine(model, params, max_batch=args.max_batch,
-                        max_len=args.max_len, seed=args.seed)
+                        max_len=args.max_len, seed=args.seed,
+                        paged={"auto": None, "on": True, "off": False}[args.paged],
+                        block_size=args.block_size,
+                        num_blocks=args.num_blocks,
+                        prefill_chunk=args.prefill_chunk,
+                        eos_id=args.eos)
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
         eng.submit(rng.integers(2, cfg.vocab_size // 2, size=8),
@@ -70,6 +83,11 @@ def main():
               f"p50={s['step_p50_s']*1e3:.2f}ms  "
               f"p90={s['step_p90_s']*1e3:.2f}ms  "
               f"p99={s['step_p99_s']*1e3:.2f}ms")
+    cs = eng.cache_stats()
+    extra = (f"  peak blocks={cs['blocks_peak']}/{cs['num_blocks']}"
+             if cs["layout"] == "paged" else "")
+    print(f"cache[{cs['layout']}]: {cs['cache_hbm_bytes']/1e6:.2f}MB, "
+          f"capacity {cs['tokens_capacity']} tok{extra}")
 
 
 if __name__ == "__main__":

@@ -127,10 +127,25 @@ def make_decode_step(model: Model) -> Callable:
 
 # ------------------------------------------------------- serving jit roots
 #
-# The serving engine keeps ALL per-slot state (cache, lengths, last tokens,
-# PRNG keys) on device; these two step builders are its only jit roots.
-# PRNG keys travel as raw (B, 2) uint32 key data so they scatter/gather with
-# plain .at indexing.
+# The serving engine keeps ALL per-slot state (cache/pools, lengths, last
+# tokens, active flags, PRNG keys) on device; these step builders are its
+# only jit roots.  PRNG keys travel as raw (B, 2) uint32 key data so they
+# scatter/gather with plain .at indexing.
+#
+# Every step donates its cache/state buffers (the *_DONATE argnum tuples
+# below plug into jax.jit(donate_argnums=...)): XLA aliases each donated
+# input to the same-shaped output, so the multi-MB cache is updated in place
+# instead of being copied every step.  Engine rule: host-originated arrays
+# (active mirror, temps, eos ids, admission token batches) are rebuilt per
+# call and never donated; device state is always reassigned from the step's
+# outputs, never reused.
+#
+# EOS early-exit happens ON DEVICE: the decode steps compare the sampled
+# token against each row's eos id and clear the row's active flag in the
+# same fused call, so a finished row stops sampling/writing on the very next
+# step with no host round-trip.  The host learns about it for free from the
+# token vector it already transfers, and composes its own view (admission,
+# max-token / max-len finishes) through the ``host_keep`` mask input.
 
 def sample_tokens(key_data: jax.Array, logits: jax.Array, temps: jax.Array):
     """Vectorized per-row sampling: greedy where temps <= 0, categorical at
@@ -166,26 +181,122 @@ def set_cache_rows(cache, rows, slots: jax.Array):
     return walk(cache, rows)
 
 
+def _sample_advance_exit(logits, last_token, cache_len, key_data, act,
+                         temps, eos):
+    """Shared decode-step tail: batched sampling, inactive-row masking,
+    per-row length advance, and the device-side EOS active-flag update.
+    Both decode builders (dense slab and paged) MUST share this so their
+    sampling/EOS semantics cannot diverge."""
+    key_data, sampled = sample_tokens(key_data, logits[:, 0], temps)
+    sampled = jnp.where(act, sampled, last_token)
+    cache_len = cache_len + act.astype(jnp.int32)
+    active = jnp.logical_and(act, sampled != eos)
+    return sampled, cache_len, key_data, active
+
+
+# donate: cache, last_token, cache_len, key_data, active
+DECODE_DONATE = (1, 2, 3, 4, 5)
+
+
 def make_decode_sample_step(model: Model) -> Callable:
-    """Fused decode + batched sampling: one jitted call per engine step and
-    zero host round-trips.  Inactive rows keep their last_token and
-    cache_len (their sampled garbage is masked out on device)."""
+    """Fused decode + batched sampling + device-side EOS exit: one jitted
+    call per engine step and zero host round-trips.  Inactive rows keep
+    their last_token and cache_len (their sampled garbage is masked out on
+    device).  ``eos`` is a per-row token id (-1 disables); a row that
+    samples its eos id drops out of ``active`` in the same call."""
 
     def decode_sample_step(params, cache, last_token, cache_len, key_data,
-                           active, temps):
+                           active, host_keep, temps, eos):
+        act = jnp.logical_and(active, host_keep)
         logits, cache, _ = model.apply(
             params, last_token[:, None], mode="decode",
             cache=cache, cache_len=cache_len,
         )
-        key_data, sampled = sample_tokens(key_data, logits[:, 0], temps)
-        sampled = jnp.where(active, sampled, last_token)
-        cache_len = cache_len + active.astype(jnp.int32)
-        return sampled, cache, cache_len, key_data
+        sampled, cache_len, key_data, active = _sample_advance_exit(
+            logits, last_token, cache_len, key_data, act, temps, eos
+        )
+        return sampled, cache, cache_len, key_data, active
 
     return decode_sample_step
 
 
-def make_prefill_admit_step(model: Model, max_len: int) -> Callable:
+# donate: pools, last_token, cache_len, key_data, active
+PAGED_DECODE_DONATE = (1, 3, 4, 5, 6)
+
+
+def make_paged_decode_step(model: Model) -> Callable:
+    """Paged twin of ``decode_sample_step``: the cache is a shared block
+    pool addressed through ``block_tables`` (see serving/kvcache).  Rows
+    that are not effectively active get their block-table row forced to -1
+    so their cache writes DROP — a freed slot's blocks may already belong to
+    another request, so masking the write (not just the sampled token) is a
+    correctness requirement, not an optimization."""
+
+    def paged_decode_step(params, pools, block_tables, last_token, cache_len,
+                          key_data, active, host_keep, temps, eos):
+        act = jnp.logical_and(active, host_keep)
+        bt_eff = jnp.where(act[:, None], block_tables, -1)
+        logits, pools, _ = model.apply(
+            params, last_token[:, None], mode="decode",
+            cache=pools, cache_len=cache_len, block_tables=bt_eff,
+        )
+        sampled, cache_len, key_data, active = _sample_advance_exit(
+            logits, last_token, cache_len, key_data, act, temps, eos
+        )
+        return sampled, pools, cache_len, key_data, active
+
+    return paged_decode_step
+
+
+# donate: pools, cache_len, last_token, key_data, active
+PAGED_PREFILL_DONATE = (1, 7, 8, 9, 11)
+
+
+def make_paged_prefill_chunk_step(model: Model) -> Callable:
+    """One chunk of streaming (chunked) prefill into the paged cache, for up
+    to R requests at once.  Each row r writes ``tokens[r]`` at logical
+    positions ``starts[r]..starts[r]+C-1`` of its block-table row and
+    attends causally over its own prefix — so a very long prompt is admitted
+    as a sequence of fixed-shape chunk calls interleaved with decode steps
+    instead of one monolithic prefill that stalls the running batch.
+
+    Only ``nvalid[r]`` leading tokens of a row's chunk are real; garbage
+    writes beyond them land at positions that are either masked by causality
+    / cache_len or overwritten before ever becoming visible, and writes past
+    the row's block reservation drop on the -1 table entries.  ``fslots[r]``
+    is the row's engine slot when this chunk FINISHES its prompt (>= nslots
+    otherwise): finishing rows commit cache_len/last_token/keys/active and
+    sample their first token from the last real position's logits.
+    Compiles exactly once — the (R, C) shape never changes."""
+
+    def paged_prefill_chunk_step(params, pools, bt_rows, tokens, starts,
+                                 nvalid, fslots, cache_len, last_token,
+                                 key_data, temps, active):
+        logits, pools, _ = model.apply(
+            params, tokens, mode="decode",
+            cache=pools, cache_len=starts, block_tables=bt_rows,
+        )
+        last = jnp.take_along_axis(
+            logits, jnp.maximum(nvalid - 1, 0)[:, None, None], axis=1
+        )
+        nslots = cache_len.shape[0]
+        row_keys = key_data[jnp.clip(fslots, 0, nslots - 1)]
+        row_keys, first = sample_tokens(row_keys, last[:, 0], temps)
+        cache_len = cache_len.at[fslots].set(starts + nvalid, mode="drop")
+        last_token = last_token.at[fslots].set(first, mode="drop")
+        key_data = key_data.at[fslots].set(row_keys, mode="drop")
+        active = active.at[fslots].set(True, mode="drop")
+        return first, pools, cache_len, last_token, key_data, active
+
+    return paged_prefill_chunk_step
+
+
+# donate: cache, cache_len, last_token, key_data, active
+PREFILL_ADMIT_DONATE = (1, 5, 6, 7, 9)
+
+
+def make_prefill_admit_step(model: Model, max_len: int,
+                            kv_quant: bool = False) -> Callable:
     """Batched multi-request admission in one jitted call: prefill R
     prompts (right-padded to a shared bucket length P), scatter their fresh
     row caches into the engine cache (replacing any previous occupant's
@@ -198,8 +309,9 @@ def make_prefill_admit_step(model: Model, max_len: int) -> Callable:
     """
 
     def prefill_admit_step(params, cache, tokens, plens, slots, cache_len,
-                           last_token, key_data, temps):
-        row_cache = model.init_cache(tokens.shape[0], max_len)
+                           last_token, key_data, temps, active):
+        row_cache = model.init_cache(tokens.shape[0], max_len,
+                                     kv_quant=kv_quant)
         logits, row_cache, _ = model.apply(
             params, tokens, mode="prefill", cache=row_cache
         )
@@ -212,7 +324,8 @@ def make_prefill_admit_step(model: Model, max_len: int) -> Callable:
         cache_len = cache_len.at[slots].set(plens, mode="drop")
         last_token = last_token.at[slots].set(first, mode="drop")
         key_data = key_data.at[slots].set(row_keys, mode="drop")
-        return first, cache, cache_len, last_token, key_data
+        active = active.at[slots].set(True, mode="drop")
+        return first, cache, cache_len, last_token, key_data, active
 
     return prefill_admit_step
 

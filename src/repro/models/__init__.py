@@ -1,6 +1,7 @@
 from .api import (
     Model,
     build_model,
+    cache_layout,
     cache_specs,
     count_active_params,
     count_params,

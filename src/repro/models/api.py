@@ -105,6 +105,32 @@ def has_recurrent_cache(model: Model) -> bool:
     return bool(cache_leaf_names(model) & RECURRENT_CACHE_LEAVES)
 
 
+# Cache leaves a block-pool (paged) layout can host: per-position attention
+# K/V plus their int8 dequant scales.  Anything else (recurrent state, MLA
+# latents, cross-attention memory) keeps the dense (max_batch, max_len) slab.
+PAGEABLE_CACHE_LEAVES = frozenset({"k", "v", "k_scale", "v_scale"})
+
+
+def cache_layout(model: Model) -> str:
+    """How the serving engine should lay out this model's decode cache.
+
+    "paged": every cache leaf is per-position attention K/V (pure-GQA
+    stacks), so the engine may use the block-table pool from
+    ``serving/kvcache`` with per-request max_len and chunked prefill.
+
+    "dense": one (max_batch, max_len) slab per leaf.  Recurrent caches
+    (SSM/RWKV) and token-choice MoE keep this path — the same families that
+    are pad-sensitive at prefill — as do MLA latents and enc-dec cross
+    caches, whose leaves are not plain paged K/V."""
+    if model.cfg.is_encdec:
+        return "dense"
+    if not prefill_pad_safe(model):
+        return "dense"
+    if not cache_leaf_names(model) <= PAGEABLE_CACHE_LEAVES:
+        return "dense"
+    return "paged"
+
+
 def prefill_pad_safe(model: Model) -> bool:
     """True when right-padding a prompt cannot change real positions'
     outputs, i.e. the serving engine may bucket prompt lengths.

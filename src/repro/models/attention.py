@@ -58,6 +58,25 @@ def init_kv_cache(
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
+def init_paged_kv_cache(
+    cfg: ModelConfig, num_blocks: int, block_size: int, dtype,
+    quant: bool = False,
+) -> Dict:
+    """Block-pool KV cache: K/V for ALL rows share (num_blocks, block_size)
+    pages; a block table (owned by the serving engine, passed per call) maps
+    each row's logical positions onto physical pages.  HBM footprint scales
+    with pool capacity — i.e. live tokens — not (max_batch, max_len)."""
+    shape = (num_blocks, block_size, cfg.num_kv_heads, cfg.head_dim)
+    if quant:
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros(shape[:3], jnp.float32),
+            "v_scale": jnp.zeros(shape[:3], jnp.float32),
+        }
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
 def _quantize_kv(x: jax.Array):
     """x: (..., hd) -> (int8, scale (...,)) symmetric per-vector."""
     scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
@@ -172,6 +191,76 @@ def chunked_causal_attention(
     return jnp.transpose(outs, (1, 0, 2, 3, 4)).reshape(b, s, hq, hd).astype(q.dtype)
 
 
+def _paged_decode_attend(q, k, v, cache, cache_len, block_tables, scale):
+    """Paged decode / chunked-prefill attention: scatter the S new K/V
+    positions into the shared block pool through the block table, then
+    attend each query over its row's logical prefix.
+
+    q/k/v: (B, S, H*, hd) fresh (rope'd) projections; cache leaves are block
+    pools (N, bs, ...); block_tables (B, M) int32 with -1 marking
+    unallocated (or force-masked) blocks — their writes DROP, which is how
+    inactive rows and admission padding rows are silenced without branching.
+    S == 1 is a decode step (Pallas kernel on TPU via ops dispatch); S > 1
+    is one chunk of streaming prefill (jnp gather path; compute-bound).
+
+    Quantized (int8) caches: decode attends the same dequantized view as
+    the dense-slab path (bit-identical inputs).  Chunked prefill, however,
+    attends the cache-consistent dequantized view of the prompt — the dense
+    prefill branch attends raw fp K/V and only quantizes for storage — so
+    prompt-end logits differ between layouts by the quantization error.
+    """
+    from repro.kernels.paged_attention.ops import gather_pages, paged_attention
+
+    b, s = q.shape[:2]
+    nb, bs = cache["k"].shape[:2]
+    m = block_tables.shape[1]
+    pos = cache_len[:, None] + jnp.arange(s, dtype=jnp.int32)  # (B, S) logical
+    blk = pos // bs
+    phys = jnp.take_along_axis(block_tables, jnp.minimum(blk, m - 1), axis=1)
+    # Sentinel must be a POSITIVE out-of-bounds index: .at[...].set(mode=
+    # "drop") normalizes negative indices NumPy-style BEFORE dropping, so -1
+    # would silently write the last pool slot instead of dropping.
+    flat = jnp.where((blk < m) & (phys >= 0), phys * bs + pos % bs, nb * bs)
+    flat = flat.reshape(-1)
+
+    def scat(pool, new):  # new: (B, S, ...) -> write at flat positions
+        pf = pool.reshape(nb * bs, *pool.shape[2:])
+        pf = pf.at[flat].set(
+            new.reshape(b * s, *new.shape[2:]).astype(pool.dtype), mode="drop"
+        )
+        return pf.reshape(pool.shape)
+
+    if "k_scale" in cache:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        new_cache = {
+            "k": scat(cache["k"], kq), "v": scat(cache["v"], vq),
+            "k_scale": scat(cache["k_scale"], ks),
+            "v_scale": scat(cache["v_scale"], vs),
+        }
+        k_sc, v_sc = new_cache["k_scale"], new_cache["v_scale"]
+    else:
+        new_cache = {"k": scat(cache["k"], k), "v": scat(cache["v"], v)}
+        k_sc = v_sc = None
+
+    if s == 1:
+        out = paged_attention(
+            q[:, 0], new_cache["k"], new_cache["v"], block_tables,
+            cache_len + 1, k_scales=k_sc, v_scales=v_sc, scale=scale,
+        )
+        return out[:, None], new_cache
+    # Chunked prefill: dense gathered view, causal vs each query's position.
+    kg = gather_pages(new_cache["k"], block_tables)
+    vg = gather_pages(new_cache["v"], block_tables)
+    if k_sc is not None:
+        kg = _dequantize_kv(kg, gather_pages(k_sc, block_tables), q.dtype)
+        vg = _dequantize_kv(vg, gather_pages(v_sc, block_tables), q.dtype)
+    t = kg.shape[1]
+    valid = jnp.arange(t)[None, None, :] <= pos[:, :, None]  # (B, S, T)
+    out = _naive_attention(q, kg, vg, valid[:, None, None], scale)
+    return out, new_cache
+
+
 def attention_apply(
     params: Mapping[str, Any],
     x: jax.Array,
@@ -185,6 +274,7 @@ def attention_apply(
     attn_chunk: int = 1024,
     taps: Optional[Dict] = None,
     tap_prefix: str = "",
+    block_tables: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Dict]]:
     """Returns (output (B,S,D), updated cache or None)."""
     b, s, _ = x.shape
@@ -211,7 +301,11 @@ def attention_apply(
         k = apply_rope(k, positions, inv_freq)
 
     new_cache = None
-    if mode == "decode":
+    if mode == "decode" and block_tables is not None:
+        out, new_cache = _paged_decode_attend(
+            q, k, v, cache, cache_len, block_tables, scale
+        )
+    elif mode == "decode":
         assert cache is not None and cache_len is not None and s == 1
         t_max = cache["k"].shape[1]
         # Write the new K/V at each row's current length.

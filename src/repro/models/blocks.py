@@ -142,6 +142,40 @@ def block_cache_init(
     return c
 
 
+def block_paged_cache_init(
+    spec: BlockSpec, cfg: ModelConfig, num_blocks: int, block_size: int,
+    dtype, kv_quant: bool = False,
+) -> Dict:
+    mixer, _ = spec
+    if mixer != "gqa":
+        raise ValueError(
+            f"paged KV cache requires attention (gqa) layers, got {mixer!r}; "
+            "see models.api.cache_layout"
+        )
+    return {
+        "attn": attn_mod.init_paged_kv_cache(
+            cfg, num_blocks, block_size, dtype, quant=kv_quant
+        )
+    }
+
+
+def group_paged_cache_init(
+    group: StackGroup, cfg: ModelConfig, num_blocks: int, block_size: int,
+    dtype, kv_quant: bool = False,
+) -> Dict:
+    c = {
+        f"sub{j}": block_paged_cache_init(
+            spec, cfg, num_blocks, block_size, dtype, kv_quant
+        )
+        for j, spec in enumerate(group.period)
+    }
+    if group.repeats == 1:
+        return c
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (group.repeats, *x.shape)), c
+    )
+
+
 def _moe_ffn(params_moe, h, cfg, par: Parallelism, taps, tp):
     """Dispatch MoE densely (single device) or via the EP shard_map."""
     if not par.active:
@@ -188,9 +222,12 @@ def block_apply(
     taps: Optional[Dict] = None,
     tap_prefix: str = "",
     encoder: bool = False,
+    block_tables: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
     """Returns (x, new_cache, aux_loss)."""
     mixer, ffn = spec
+    if block_tables is not None and mixer != "gqa":
+        raise ValueError(f"paged decode unsupported for mixer {mixer!r}")
     aux = jnp.zeros((), jnp.float32)
     new_cache: Dict[str, Any] = {}
 
@@ -203,6 +240,7 @@ def block_apply(
             cache=None if cache is None else cache.get("attn"),
             cache_len=cache_len,
             taps=taps, tap_prefix=f"{tap_prefix}.attn",
+            block_tables=block_tables,
         )
         if c is not None:
             new_cache["attn"] = c
@@ -359,6 +397,7 @@ def group_apply(
     encoder: bool = False,
     remat: bool = False,
     unroll: bool = False,
+    block_tables: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
     """Apply a stack group; scans when repeats > 1.  ``unroll=True`` fully
     unrolls the layer scan (roofline mode: exact HLO flop accounting —
@@ -375,6 +414,7 @@ def group_apply(
                 cache=None if cc is None else cc.get(f"sub{j}"),
                 cache_len=cache_len, memory=memory, par=par,
                 taps=taps, tap_prefix=tp, encoder=encoder,
+                block_tables=block_tables,
             )
             if nc is not None:
                 new_caches[f"sub{j}"] = nc

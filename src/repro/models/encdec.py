@@ -55,11 +55,13 @@ class EncDecLM:
             "unembed": linear_init(ks[5], cfg.d_model, cfg.vocab_size, self.dtype),
         }
 
-    def init_cache(self, batch: int, max_len: int, dtype=None) -> Dict:
+    def init_cache(self, batch: int, max_len: int, dtype=None,
+                   kv_quant: bool = False) -> Dict:
         dtype = dtype or self.dtype
         return {
             "decoder": group_cache_init(
-                self.dec_group, self.cfg, batch, max_len, dtype, cross=True
+                self.dec_group, self.cfg, batch, max_len, dtype, cross=True,
+                kv_quant=kv_quant,
             )
         }
 

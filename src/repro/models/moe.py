@@ -119,20 +119,25 @@ def _expert_ffn(experts: Mapping[str, Any], buf: Array) -> Array:
     """buf: (E, C, D) -> (E, C, D) through each expert's SwiGLU FFN.
 
     Supports dense (E, D, F) kernels or factored {u: (E, D, k), v: (E, k, F)}
-    (+ nested u2/v2) — the MoE twin of lowrank.linear_apply.
+    (+ nested u2/v2) — the MoE twin of lowrank.linear_apply.  Nested factors
+    dispatch through ``kernels.nested_lowrank.ops`` vmapped over the expert
+    dim (fused Pallas kernel per expert on TPU — the capacity buffer C is
+    decode-shaped — jnp oracle elsewhere), matching how dense/attention/MLP
+    layers already route.
     """
 
     def emm(p, hh):
         if "kernel" in p:
             return jnp.einsum("ecd,edf->ecf", hh, p["kernel"])
-        y = jnp.einsum(
+        if "u2" in p:
+            from repro.kernels.nested_lowrank import ops as nlr_ops
+
+            return jax.vmap(nlr_ops.nested_lowrank_matmul)(
+                hh, p["u"], p["v"], p["u2"], p["v2"]
+            )
+        return jnp.einsum(
             "eck,ekf->ecf", jnp.einsum("ecd,edk->eck", hh, p["u"]), p["v"]
         )
-        if "u2" in p:
-            y = y + jnp.einsum(
-                "eck,ekf->ecf", jnp.einsum("ecd,edk->eck", hh, p["u2"]), p["v2"]
-            )
-        return y
 
     h = jax.nn.silu(emm(experts["wg"], buf)) * emm(experts["wi"], buf)
     return emm(experts["wo"], h), h

@@ -95,6 +95,20 @@ class DecoderLM:
             for i, g in enumerate(self.groups)
         }
 
+    def init_paged_cache(self, num_blocks: int, block_size: int, dtype=None,
+                         kv_quant: bool = False) -> Dict:
+        """Block-pool KV cache shared by all rows (see attention.
+        init_paged_kv_cache); only valid for pure-attention stacks —
+        ``models.api.cache_layout`` reports which models qualify."""
+        dtype = dtype or self.dtype
+        from .blocks import group_paged_cache_init
+
+        return {
+            f"g{i}": group_paged_cache_init(g, self.cfg, num_blocks,
+                                            block_size, dtype, kv_quant)
+            for i, g in enumerate(self.groups)
+        }
+
     # -------------------------------------------------------------- apply
 
     def apply(
@@ -106,6 +120,7 @@ class DecoderLM:
         mode: str = "train",
         cache: Optional[Dict] = None,
         cache_len: Optional[jax.Array] = None,
+        block_tables: Optional[jax.Array] = None,
         taps: Optional[Dict] = None,
         output: str = "logits",
     ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
@@ -130,7 +145,9 @@ class DecoderLM:
 
         if mode == "decode":
             assert cache_len is not None
-            positions = cache_len[:, None]  # (B, 1)
+            # (B, S): one new token per row, or an S-token chunk streaming
+            # into the (paged) cache at each row's current length.
+            positions = cache_len[:, None] + jnp.arange(s, dtype=jnp.int32)
         else:
             positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
 
@@ -151,6 +168,7 @@ class DecoderLM:
                 par=par, taps=taps, tap_group=f"g{i}",
                 remat=self.remat and mode == "train",
                 unroll=self.unroll,
+                block_tables=block_tables,
             )
             x = par.constrain(x, par.dp, seq_axis, None)
             if nc is not None:

@@ -1,38 +1,55 @@
 """Batched, host-sync-free serving engine (continuous batching) over
-(compressed) weights.
+(compressed) weights, with a paged (block-table) KV cache for attention
+models and a dense (max_batch, max_len) slab fallback for everything else.
 
-Slot-based: a fixed (max_batch, max_len) cache; requests are admitted into
-free slots, every engine step decodes one token for all live rows, finished
-rows free their slots immediately — new requests join mid-flight without
-stalling the running batch.
+Slot-based: requests are admitted into free slots, every engine step decodes
+one token for all live rows, finished rows free their slot — and their KV
+blocks — immediately, so new requests join mid-flight without stalling the
+running batch.
 
-Hot-path design (the paper's Eq. 6 payoff is only real if the engine keeps
-up with the factored matmuls):
+Hot-path design (the paper's Eq. 6 payoff is only real if the engine's
+memory path keeps up with the factored matmuls):
 
-  * ALL per-slot state lives on device: cache, cache_len, last_token and a
-    per-slot PRNG key array.  The host mirrors only what it needs for
-    scheduling (active flags, lengths) and those mirrors are updated from
-    host-side bookkeeping, never by reading device buffers.
-  * ``step()`` is ONE jitted call (decode + batched greedy/temperature
-    sampling for every live row) followed by ONE device->host transfer of
-    the sampled token vector.  No per-slot ``int(...)`` syncs.
-  * Prefill compiles once per prompt-length BUCKET (powers of two), not
-    once per prompt length: prompts are right-padded to the bucket, the
-    causal mask keeps real positions exact, and the padded cache tail is
-    masked by cache_len until decode overwrites it.  Pad-sensitive models
-    — recurrent cache state (SSM/RWKV) and token-choice MoE (padding
-    tokens would compete for expert-capacity slots) — fall back to
-    exact-length prefill (detected via ``prefill_pad_safe``).
-  * Admission is batched: up to ``max_batch`` queued requests sharing a
-    bucket are prefilled in one call and scattered into their slots with
-    one multi-row cache write (padding rows carry an out-of-range slot
-    index, so their writes drop).
+  * ALL per-slot state lives on device: cache, cache_len, last_token,
+    active flags and a per-slot PRNG key array.  The host mirrors only what
+    it needs for scheduling, updated from host-side bookkeeping plus the one
+    token vector each step already transfers — never by extra syncs.
+  * Every jit root DONATES its cache/state buffers (``donate_argnums``), so
+    the multi-MB cache is aliased in place by XLA instead of being copied
+    every step.
+  * ``step()`` is ONE jitted call (decode + batched sampling + device-side
+    EOS early-exit for every live row) followed by ONE device->host transfer
+    of the sampled token vector.  A row that samples its eos id clears its
+    own active flag on device; the host learns from the tokens it already
+    has.
 
-Decode-time nested-lowrank matmuls of compressed dense/attention/MLP
-layers route through ``kernels/nested_lowrank/ops.py`` (fused Pallas
-kernel on TPU, jnp oracle on CPU) via ``linear_apply``'s default
-dispatch; MoE expert matmuls keep their own stacked-einsum twin
-(``moe._expert_ffn``) and are not kernel-routed yet.
+Paged path (``models.api.cache_layout(model) == "paged"``: pure-attention
+stacks — see serving/kvcache/):
+
+  * K/V live in a shared block pool (num_blocks, block_size, ...) instead of
+    a dense slab, addressed through per-slot block-table rows, so cache HBM
+    scales with pool capacity (live tokens), not max_batch * max_len.
+  * Admission reserves each request's worst-case blocks up front
+    (per-request max_len = prompt + max_new_tokens): exhaustion surfaces
+    only as admission backpressure, never mid-decode.
+  * Prefill is CHUNKED: prompts stream into their blocks ``prefill_chunk``
+    tokens per engine iteration through one fixed-shape jit root (compiles
+    exactly once), interleaved with decode steps so a very long prompt
+    cannot stall the running batch.
+  * Decode attends through ``kernels/paged_attention`` (Pallas kernel
+    streaming exactly the live pages on TPU, jnp gather oracle elsewhere),
+    honoring the int8 KV quantization of the dense path.
+
+Dense path (recurrent SSM/RWKV state, token-choice MoE, MLA latents,
+enc-dec): the PR-1 design — bucketed batched prefill-admission (pad-safe
+models compile once per power-of-two prompt-length bucket; pad-sensitive
+ones fall back to exact-length prefill) — now with donated jit roots and the
+same device-side EOS exit.
+
+Decode-time nested-lowrank matmuls of compressed layers (dense, attention,
+MLP, and the stacked MoE expert FFNs) route through
+``kernels/nested_lowrank/ops.py`` (fused Pallas kernel on TPU for
+decode-shaped rows, jnp oracle on CPU).
 """
 
 from __future__ import annotations
@@ -47,8 +64,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.launch.steps import make_decode_sample_step, make_prefill_admit_step
-from repro.models.api import Model, prefill_pad_safe
+from repro.launch.steps import (
+    DECODE_DONATE,
+    PAGED_DECODE_DONATE,
+    PAGED_PREFILL_DONATE,
+    PREFILL_ADMIT_DONATE,
+    make_decode_sample_step,
+    make_paged_decode_step,
+    make_paged_prefill_chunk_step,
+    make_prefill_admit_step,
+)
+from repro.models.api import Model, cache_layout, prefill_pad_safe
+from repro.serving.kvcache import PagedKVCache
 
 
 @dataclasses.dataclass
@@ -57,12 +84,21 @@ class Request:
     prompt: np.ndarray  # (S,) int32
     max_new_tokens: int = 32
     temperature: float = 0.0
+    eos_id: Optional[int] = None
     generated: List[int] = dataclasses.field(default_factory=list)
     slot: Optional[int] = None
 
     @property
     def done(self) -> bool:
         return len(self.generated) >= self.max_new_tokens
+
+
+@dataclasses.dataclass
+class _PrefillTask:
+    """A request streaming its prompt into reserved blocks, chunk by chunk."""
+    req: Request
+    slot: int
+    pos: int = 0  # next prompt position to feed
 
 
 class ServingEngine:
@@ -74,33 +110,73 @@ class ServingEngine:
         max_len: int = 512,
         seed: int = 0,
         bucket_min: int = 16,
+        paged: Optional[bool] = None,
+        block_size: int = 16,
+        num_blocks: Optional[int] = None,
+        prefill_chunk: int = 64,
+        eos_id: Optional[int] = None,
+        kv_quant: bool = False,
     ):
         self.model = model
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
+        self.eos_id = eos_id
+
+        layout = cache_layout(model)
+        self.paged = (layout == "paged") if paged is None else bool(paged)
+        if self.paged and layout != "paged":
+            raise ValueError(
+                f"model {model.cfg.name!r} has cache layout {layout!r}; "
+                "paging requires a pure-attention cache (models.api.cache_layout)"
+            )
 
         # Device-resident state (never read back except the sampled tokens).
-        self.cache = model.init_cache(max_batch, max_len)
         self.cache_len = jnp.zeros((max_batch,), jnp.int32)
         self.last_token = jnp.zeros((max_batch,), jnp.int32)
         self.key_data = jax.random.key_data(
             jax.random.split(jax.random.key(seed), max_batch)
         )
+        self._active_dev = jnp.zeros((max_batch,), bool)
 
-        # Host mirrors for scheduling (updated by bookkeeping, not syncs).
+        # Host mirrors for scheduling (updated by bookkeeping + the step's
+        # own token transfer, not extra syncs).
         self.active = np.zeros((max_batch,), bool)
         self.temps = np.zeros((max_batch,), np.float32)
+        self._eos = np.full((max_batch,), -1, np.int32)
         self._len_host = np.zeros((max_batch,), np.int64)
 
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.queue: deque[Request] = deque()
+        self._prefilling: List[_PrefillTask] = []
         self._uid = itertools.count()
-
-        self._decode = jax.jit(make_decode_sample_step(model))
-        self._prefill = jax.jit(make_prefill_admit_step(model, max_len))
         self._bucketed = prefill_pad_safe(model)
-        self._buckets = self._make_buckets(bucket_min, max_len)
+
+        if self.paged:
+            self.kv = PagedKVCache(
+                model, max_batch, max_len, block_size=block_size,
+                num_blocks=num_blocks, kv_quant=kv_quant,
+            )
+            self.prefill_chunk = prefill_chunk
+            self._decode = jax.jit(
+                make_paged_decode_step(model),
+                donate_argnums=PAGED_DECODE_DONATE,
+            )
+            self._chunk_step = jax.jit(
+                make_paged_prefill_chunk_step(model),
+                donate_argnums=PAGED_PREFILL_DONATE,
+            )
+        else:
+            self.cache = model.init_cache(max_batch, max_len,
+                                          kv_quant=kv_quant)
+            self._decode = jax.jit(
+                make_decode_sample_step(model), donate_argnums=DECODE_DONATE
+            )
+            self._prefill = jax.jit(
+                make_prefill_admit_step(model, max_len, kv_quant=kv_quant),
+                donate_argnums=PREFILL_ADMIT_DONATE,
+            )
+            self._buckets = self._make_buckets(bucket_min, max_len)
 
         # Telemetry: step() wall times (includes the one D2H sync).
         self.step_times: List[float] = []
@@ -109,7 +185,8 @@ class ServingEngine:
     # --------------------------------------------------------------- API
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
-               temperature: float = 0.0) -> int:
+               temperature: float = 0.0,
+               eos_id: Optional[int] = None) -> int:
         prompt = np.asarray(prompt, np.int32)
         if len(prompt) == 0:
             raise ValueError("empty prompt")
@@ -117,18 +194,19 @@ class ServingEngine:
             raise ValueError(
                 f"prompt length {len(prompt)} exceeds max_len-1={self.max_len - 1}"
             )
-        req = Request(next(self._uid), prompt, max_new_tokens, temperature)
+        req = Request(next(self._uid), prompt, max_new_tokens, temperature,
+                      eos_id if eos_id is not None else self.eos_id)
         self.queue.append(req)
         return req.uid
 
     def run(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
-        """Drive until queue + slots drain.  Returns uid -> generated."""
+        """Drive until queue + prefills + slots drain.  uid -> generated."""
         finished: Dict[int, List[int]] = {}
         for _ in range(max_steps):
             for req in self._admit():
                 finished[req.uid] = req.generated
             if not self.active.any():
-                if not self.queue:
+                if not self.queue and not self._prefilling:
                     break
                 continue
             for req in self.step():
@@ -136,6 +214,99 @@ class ServingEngine:
         return finished
 
     # ------------------------------------------------------------- admission
+
+    def _admit(self) -> List[Request]:
+        """Admit queued requests (returns any that finish at admission)."""
+        return self._admit_paged() if self.paged else self._admit_dense()
+
+    def _finish_or_activate(self, req: Request, slot: int, tok: int,
+                            finished: List[Request]) -> None:
+        """Shared post-prefill bookkeeping for a request's first token."""
+        req.slot = slot
+        req.generated.append(tok)
+        self.temps[slot] = req.temperature
+        self._eos[slot] = -1 if req.eos_id is None else req.eos_id
+        self._len_host[slot] = len(req.prompt)
+        if (req.done or self._len_host[slot] >= self.max_len - 1
+                or tok == self._eos[slot]):
+            finished.append(req)
+            if self.paged:
+                self.kv.free(slot)
+        else:
+            self.slots[slot] = req
+            self.active[slot] = True
+
+    # ---- paged: reserve blocks, stream prompts chunkwise
+
+    def _admit_paged(self) -> List[Request]:
+        finished: List[Request] = []
+        busy = {t.slot for t in self._prefilling}
+        while self.queue:
+            free = [i for i in range(self.max_batch)
+                    if not self.active[i] and i not in busy]
+            if not free:
+                break
+            req = self.queue[0]
+            need = min(self.max_len, len(req.prompt) + req.max_new_tokens)
+            if not self.kv.reserve(free[0], need):
+                if self.kv.alloc.in_use() == 0:
+                    raise RuntimeError(
+                        f"request {req.uid} needs {self.kv.blocks_for(need)} "
+                        f"blocks but the pool only has {self.kv.num_blocks}"
+                    )
+                break  # pool exhausted: FIFO backpressure until blocks free
+            self.queue.popleft()
+            busy.add(free[0])
+            self._prefilling.append(_PrefillTask(req, free[0]))
+        if self._prefilling:
+            finished.extend(self._prefill_tick())
+        return finished
+
+    def _prefill_tick(self) -> List[Request]:
+        """Advance every in-flight prefill by ONE chunk (single jit call).
+        run() interleaves these ticks with decode steps, so long prompts
+        stream in without stalling live rows."""
+        c = self.prefill_chunk
+        r_rows = self.max_batch
+        tasks = self._prefilling[:r_rows]
+        tokens = np.zeros((r_rows, c), np.int32)
+        starts = np.zeros((r_rows,), np.int32)
+        nvalid = np.ones((r_rows,), np.int32)
+        fslots = np.full((r_rows,), self.max_batch, np.int32)  # pad = dropped
+        temps = np.zeros((r_rows,), np.float32)
+        bt_rows = np.full((r_rows, self.kv.max_blocks_per_row), -1, np.int32)
+        fin: List[tuple] = []
+        for r, task in enumerate(tasks):
+            p = task.req.prompt
+            n = min(len(p) - task.pos, c)
+            tokens[r, :n] = p[task.pos: task.pos + n]
+            starts[r] = task.pos
+            nvalid[r] = n
+            temps[r] = task.req.temperature
+            bt_rows[r] = self.kv.table_np[task.slot]
+            task.pos += n
+            if task.pos >= len(p):
+                fslots[r] = task.slot
+                fin.append((r, task))
+        (first, self.kv.pools, self.cache_len, self.last_token,
+         self.key_data, self._active_dev) = self._chunk_step(
+            self.params, self.kv.pools, jnp.asarray(bt_rows),
+            jnp.asarray(tokens), jnp.asarray(starts), jnp.asarray(nvalid),
+            jnp.asarray(fslots), self.cache_len, self.last_token,
+            self.key_data, jnp.asarray(temps), self._active_dev,
+        )
+        finished: List[Request] = []
+        if fin:
+            toks = np.asarray(jax.device_get(first))
+            done_tasks = {id(t) for _, t in fin}
+            for r, task in fin:
+                self._finish_or_activate(task.req, task.slot, int(toks[r]),
+                                         finished)
+            self._prefilling = [t for t in self._prefilling
+                                if id(t) not in done_tasks]
+        return finished
+
+    # ---- dense: bucketed batched prefill-admission (PR 1 path)
 
     @staticmethod
     def _make_buckets(bucket_min: int, max_len: int) -> List[int]:
@@ -172,9 +343,7 @@ class ServingEngine:
         self.queue = rest
         return group
 
-    def _admit(self) -> List[Request]:
-        """Admit queued requests into free slots (batched per bucket).
-        Returns requests that finished at admission (max_new_tokens <= 1)."""
+    def _admit_dense(self) -> List[Request]:
         finished: List[Request] = []
         while self.queue:
             free = [i for i in range(self.max_batch) if not self.active[i]]
@@ -198,25 +367,16 @@ class ServingEngine:
                 plens[r] = len(req.prompt)
                 slots[r] = free[r]
                 temps[r] = req.temperature
-            first, self.cache, self.cache_len, self.last_token, self.key_data = (
-                self._prefill(
-                    self.params, self.cache, jnp.asarray(tokens),
-                    jnp.asarray(plens), jnp.asarray(slots), self.cache_len,
-                    self.last_token, self.key_data, jnp.asarray(temps),
-                )
+            (first, self.cache, self.cache_len, self.last_token,
+             self.key_data, self._active_dev) = self._prefill(
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(plens), jnp.asarray(slots), self.cache_len,
+                self.last_token, self.key_data, jnp.asarray(temps),
+                self._active_dev,
             )
             toks = np.asarray(jax.device_get(first))
             for r, req in enumerate(group):
-                slot = free[r]
-                req.slot = slot
-                req.generated.append(int(toks[r]))
-                self.temps[slot] = req.temperature
-                self._len_host[slot] = len(req.prompt)
-                if req.done or self._len_host[slot] >= self.max_len - 1:
-                    finished.append(req)
-                else:
-                    self.slots[slot] = req
-                    self.active[slot] = True
+                self._finish_or_activate(req, free[r], int(toks[r]), finished)
         return finished
 
     # --------------------------------------------------------------- decode
@@ -227,10 +387,22 @@ class ServingEngine:
         Exactly one device->host transfer: the sampled token vector."""
         t0 = time.perf_counter()
         active = self.active.copy()
-        sampled, self.cache, self.cache_len, self.key_data = self._decode(
-            self.params, self.cache, self.last_token, self.cache_len,
-            self.key_data, jnp.asarray(active), jnp.asarray(self.temps),
-        )
+        host_keep = jnp.asarray(active)
+        temps = jnp.asarray(self.temps)
+        eos = jnp.asarray(self._eos)
+        if self.paged:
+            (sampled, self.kv.pools, self.cache_len, self.key_data,
+             self._active_dev) = self._decode(
+                self.params, self.kv.pools, self.kv.table_device(),
+                self.last_token, self.cache_len, self.key_data,
+                self._active_dev, host_keep, temps, eos,
+            )
+        else:
+            (sampled, self.cache, self.cache_len, self.key_data,
+             self._active_dev) = self._decode(
+                self.params, self.cache, self.last_token, self.cache_len,
+                self.key_data, self._active_dev, host_keep, temps, eos,
+            )
         self.last_token = sampled
         self._len_host += active
         toks = np.asarray(jax.device_get(sampled))  # the step's single D2H
@@ -239,11 +411,15 @@ class ServingEngine:
         for slot, req in enumerate(self.slots):
             if req is None or not active[slot]:
                 continue
-            req.generated.append(int(toks[slot]))
-            if req.done or self._len_host[slot] >= self.max_len - 1:
+            tok = int(toks[slot])
+            req.generated.append(tok)
+            if (req.done or self._len_host[slot] >= self.max_len - 1
+                    or tok == self._eos[slot]):
                 finished.append(req)
                 self.slots[slot] = None
                 self.active[slot] = False
+                if self.paged:
+                    self.kv.free(slot)  # blocks reusable immediately
         self.step_times.append(time.perf_counter() - t0)
         return finished
 
@@ -263,3 +439,26 @@ class ServingEngine:
             "step_p99_s": float(np.percentile(ts, 99)),
             "live_rows": n_live,
         }
+
+    def cache_stats(self) -> Dict[str, float]:
+        """Cache memory accounting: HBM bytes + live/reserved tokens."""
+        live = int((self._len_host * self.active).sum())
+        if self.paged:
+            s = dict(self.kv.stats(), layout="paged")
+        else:
+            s = {
+                "layout": "dense",
+                "tokens_capacity": self.max_batch * self.max_len,
+                "cache_hbm_bytes": int(sum(
+                    leaf.nbytes for leaf in jax.tree.leaves(self.cache)
+                )),
+            }
+        s["live_tokens"] = live
+        return s
+
+    def defrag(self) -> int:
+        """Compact live blocks to the lowest pool ids (paged only).
+        Returns the number of blocks moved."""
+        if not self.paged:
+            return 0
+        return len(self.kv.defrag())

@@ -1,0 +1,10 @@
+"""Paged KV-cache subsystem: block-table allocator + device block pools.
+
+Host bookkeeping (BlockAllocator) is authoritative; PagedKVCache mirrors it
+onto the device as a block pool pytree plus a per-step block-table upload.
+See serving/engine.py for how the pieces are driven."""
+
+from .allocator import BlockAllocator
+from .paged import PagedKVCache
+
+__all__ = ["BlockAllocator", "PagedKVCache"]

@@ -1,0 +1,77 @@
+"""Host-side block allocator for the paged KV cache.
+
+Pure bookkeeping — no device arrays.  Physical blocks are integer ids into
+the device block pool; the allocator hands contiguous-in-ID-order *lists*
+(not contiguous memory — the block table absorbs any fragmentation) to
+owners (engine slots) and reclaims them when a request finishes.
+
+``defrag()`` compacts live blocks into the lowest ids and returns the move
+map; the engine applies the same permutation to the device pools and block
+table.  With block tables, compaction is never needed for correctness —
+it exists so a pool can be shrunk (or a snapshot taken) from a prefix."""
+
+from __future__ import annotations
+
+from typing import Dict, Hashable, List, Optional
+
+
+class BlockAllocator:
+    def __init__(self, num_blocks: int):
+        if num_blocks <= 0:
+            raise ValueError(f"num_blocks must be positive, got {num_blocks}")
+        self.num_blocks = num_blocks
+        # Ascending free list; allocation pops the lowest ids first, which
+        # keeps live blocks clustered and defrag moves small.
+        self._free: List[int] = list(range(num_blocks))
+        self._owned: Dict[Hashable, List[int]] = {}
+        self.peak_in_use = 0
+
+    # ------------------------------------------------------------ queries
+
+    def in_use(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def owned_by(self, owner: Hashable) -> List[int]:
+        return list(self._owned.get(owner, ()))
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    # ------------------------------------------------------------ mutation
+
+    def alloc(self, owner: Hashable, n: int) -> Optional[List[int]]:
+        """Allocate n blocks for owner (appending to any it already holds).
+        Returns the new block ids, or None (and no state change) when the
+        pool cannot satisfy the request — admission backpressure."""
+        if n < 0:
+            raise ValueError(f"negative block count {n}")
+        if n > len(self._free):
+            return None
+        ids = self._free[:n]
+        del self._free[:n]
+        self._owned.setdefault(owner, []).extend(ids)
+        self.peak_in_use = max(self.peak_in_use, self.in_use())
+        return ids
+
+    def free(self, owner: Hashable) -> List[int]:
+        """Release all blocks held by owner (no-op for unknown owners)."""
+        ids = self._owned.pop(owner, [])
+        if ids:
+            self._free.extend(ids)
+            self._free.sort()
+        return ids
+
+    def defrag(self) -> Dict[int, int]:
+        """Compact live blocks into ids [0, in_use): returns {old: new} for
+        every moved block and rewrites the per-owner lists in place."""
+        live = sorted(b for ids in self._owned.values() for b in ids)
+        moves = {old: new for new, old in enumerate(live) if old != new}
+        if moves:
+            for ids in self._owned.values():
+                ids[:] = [moves.get(b, b) for b in ids]
+            n_live = len(live)
+            self._free = list(range(n_live, self.num_blocks))
+        return moves

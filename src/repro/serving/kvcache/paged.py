@@ -1,0 +1,135 @@
+"""PagedKVCache: device block pools + host block-table bookkeeping.
+
+The device side is a pytree of per-layer block pools (see
+``models.attention.init_paged_kv_cache``) whose leaves all share one
+physical block id space, plus nothing else — the block table itself is a
+small host numpy array (max_batch, max_blocks_per_row) mirrored to device
+as a fresh 2 KB-ish H2D upload on every step (async; the engine's
+sync-free contract counts D2H transfers, and this is not one).
+
+Host bookkeeping is authoritative: ``reserve`` grabs a request's worst-case
+block count at admission (per-request max_len = prompt + max_new, NOT the
+engine-wide max_len slab), so decode can never run out of blocks mid-flight
+and exhaustion surfaces only as admission backpressure.  ``free`` returns a
+finished request's blocks immediately.  ``defrag`` compacts live blocks to
+the lowest pool ids and permutes the device pools to match."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .allocator import BlockAllocator
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+class PagedKVCache:
+    def __init__(self, model, max_batch: int, max_len: int,
+                 block_size: int = 16, num_blocks: int | None = None,
+                 kv_quant: bool = False):
+        if num_blocks is None:
+            # Capacity parity with the dense slab by default; size it down
+            # (expected live tokens / block_size) to realize the HBM win.
+            num_blocks = _ceil_div(max_batch * max_len, block_size)
+        self.block_size = block_size
+        self.num_blocks = num_blocks
+        self.max_blocks_per_row = _ceil_div(max_len, block_size)
+        self.pools = model.init_paged_cache(num_blocks, block_size,
+                                            kv_quant=kv_quant)
+        self.alloc = BlockAllocator(num_blocks)
+        self.table_np = np.full((max_batch, self.max_blocks_per_row), -1,
+                                np.int32)
+
+        # Per-leaf block axis, found structurally: grow num_blocks by one in
+        # an eval_shape probe and see which dim moved (scanned layer stacks
+        # carry a leading (repeats,) dim, so the axis is not fixed — and
+        # shape sniffing would misfire when repeats == num_blocks).
+        probe = jax.eval_shape(
+            lambda: model.init_paged_cache(num_blocks + 1, block_size,
+                                           kv_quant=kv_quant)
+        )
+        block_axes = jax.tree.map(
+            lambda leaf, p: next(
+                i for i, (a, b) in enumerate(zip(leaf.shape, p.shape)) if a != b
+            ),
+            self.pools, probe,
+        )
+
+        self._permute = jax.jit(
+            lambda pools, perm: jax.tree.map(
+                lambda leaf, ax: jnp.take(leaf, perm, axis=ax),
+                pools, block_axes,
+            ),
+            donate_argnums=(0,),
+        )
+
+    # ----------------------------------------------------------- blocks
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return _ceil_div(max(1, n_tokens), self.block_size)
+
+    def can_reserve(self, n_tokens: int) -> bool:
+        return self.alloc.can_alloc(self.blocks_for(n_tokens))
+
+    def reserve(self, slot: int, n_tokens: int) -> bool:
+        """Reserve blocks covering n_tokens for engine slot ``slot``.
+        False (no state change) when the pool is exhausted."""
+        n = self.blocks_for(n_tokens)
+        if n > self.max_blocks_per_row:
+            raise ValueError(
+                f"{n_tokens} tokens need {n} blocks > "
+                f"max_blocks_per_row={self.max_blocks_per_row}"
+            )
+        if self.alloc.alloc(slot, n) is None:
+            return False
+        owned = self.alloc.owned_by(slot)  # appends compose correctly
+        self.table_np[slot, :] = -1
+        self.table_np[slot, : len(owned)] = owned
+        return True
+
+    def free(self, slot: int) -> List[int]:
+        """Release a finished slot's blocks immediately for reuse."""
+        self.table_np[slot, :] = -1
+        return self.alloc.free(slot)
+
+    def table_device(self) -> jax.Array:
+        return jnp.asarray(self.table_np)
+
+    # ----------------------------------------------------------- defrag
+
+    def defrag(self) -> Dict[int, int]:
+        """Compact live blocks to pool ids [0, in_use); permutes the device
+        pools (donated gather) and rewrites the host block table."""
+        moves = self.alloc.defrag()
+        if not moves:
+            return moves
+        perm = np.arange(self.num_blocks)
+        for old, new in moves.items():
+            perm[new] = old
+        self.pools = self._permute(self.pools, jnp.asarray(perm))
+        remap = np.vectorize(lambda b: moves.get(b, b))
+        live = self.table_np >= 0
+        self.table_np[live] = remap(self.table_np[live])
+        return moves
+
+    # ------------------------------------------------------------ stats
+
+    def hbm_bytes(self) -> int:
+        return int(sum(leaf.nbytes for leaf in jax.tree.leaves(self.pools)))
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "block_size": self.block_size,
+            "num_blocks": self.num_blocks,
+            "blocks_in_use": self.alloc.in_use(),
+            "blocks_peak": self.alloc.peak_in_use,
+            "tokens_capacity": self.num_blocks * self.block_size,
+            "tokens_reserved": self.alloc.in_use() * self.block_size,
+            "cache_hbm_bytes": self.hbm_bytes(),
+        }

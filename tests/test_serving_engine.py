@@ -91,12 +91,17 @@ class TestBatchedSampling:
 
 
 class TestPrefillBuckets:
+    """Bucketed prefill is the DENSE-slab admission path (attention models
+    default to the paged engine, whose fixed-shape chunked prefill compiles
+    exactly once — see test_paged_kvcache.py); pin paged=False here."""
+
     def test_compilations_bounded_by_buckets_not_lengths(self, tiny_lm):
         """Prompts of lengths {7, 9, 250} span two power-of-two buckets
         (16 and 256): the prefill step must compile at most twice."""
         model, params = tiny_lm
         rng = np.random.default_rng(5)
-        eng = ServingEngine(model, params, max_batch=2, max_len=512)
+        eng = ServingEngine(model, params, max_batch=2, max_len=512,
+                            paged=False)
         for n in (7, 9, 250):
             eng.submit(rng.integers(2, 200, size=n), max_new_tokens=2)
         out = eng.run()
@@ -108,7 +113,8 @@ class TestPrefillBuckets:
     def test_same_bucket_requests_prefill_together(self, tiny_lm):
         model, params = tiny_lm
         rng = np.random.default_rng(6)
-        eng = ServingEngine(model, params, max_batch=4, max_len=64)
+        eng = ServingEngine(model, params, max_batch=4, max_len=64,
+                            paged=False)
         for n in (5, 7, 9, 11):  # all bucket 16
             eng.submit(rng.integers(2, 200, size=n), max_new_tokens=2)
         eng.run()
@@ -157,8 +163,25 @@ class TestPadSensitiveFallback:
 
     def test_attention_models_bucket(self, tiny_lm):
         model, params = tiny_lm
-        eng = ServingEngine(model, params, max_batch=2, max_len=64)
+        eng = ServingEngine(model, params, max_batch=2, max_len=64,
+                            paged=False)
         assert eng._bucketed
+
+    def test_attention_models_default_to_paged(self, tiny_lm):
+        model, params = tiny_lm
+        eng = ServingEngine(model, params, max_batch=2, max_len=64)
+        assert eng.paged
+
+    def test_pad_sensitive_models_default_to_dense(self):
+        from repro.configs import get_config
+
+        cfg = get_config("moonshot-v1-16b-a3b").reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        eng = ServingEngine(model, params, max_batch=2, max_len=64)
+        assert not eng.paged
+        with pytest.raises(ValueError, match="cache layout"):
+            ServingEngine(model, params, max_batch=2, max_len=64, paged=True)
 
 
 class TestSyncFreeDecode:
