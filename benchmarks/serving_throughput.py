@@ -1,22 +1,24 @@
 """Serving-engine throughput benchmark: dense vs. NSVD params, dense-slab
-vs. paged KV cache.
+vs. paged KV cache, and target vs. target+speculative decoding.
 
 Drives the batched, sync-free ``ServingEngine`` on a synthetic request
 workload and reports tokens/sec, decode step-time percentiles, and cache
-HBM bytes for the same small LM served four ways:
+HBM bytes for the same small LM served five ways:
 
     {dense params, NSVD-compressed params} x {dense-slab cache, paged cache}
+    + {NSVD target + higher-ratio NSVD draft, speculative, paged}
 
 The params axis is the paper's deployment claim (Eq. 6: an NSVD model
 decodes at the cost of one rank-k ASVD); the cache axis is the engine's
-memory path: the paged pool is sized from the workload's worst-case live
-tokens (requests * blocks-per-request), so its HBM footprint scales with
-live tokens instead of max_batch * max_len while producing identical
-greedy outputs.
+memory path; the speculative row is the compression sweep's free lunch —
+the same checkpoint at a higher ratio drafts k tokens per step and the
+target verifies them in one chunk call (acceptance rate reported per row).
 
-Besides the human-readable table, writes ``BENCH_serving.json`` at the repo
-root — a machine-readable record (schema below) so the serving perf
-trajectory can be diffed across PRs.
+Besides the human-readable table, APPENDS a run entry to
+``BENCH_serving.json`` at the repo root: each entry is stamped with the git
+SHA and a hash of the benchmark config, so the cross-PR serving perf
+trajectory is machine-readable (history is never clobbered; older
+single-entry schema-1 files are wrapped into the history on first touch).
 
     PYTHONPATH=src:. python -m benchmarks.serving_throughput
 """
@@ -24,17 +26,60 @@ trajectory can be diffed across PRs.
 from __future__ import annotations
 
 import argparse
+import hashlib
 import json
 import os
+import subprocess
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import numpy as np
 
 from .common import get_grams, save_table, train_small_lm
 
 BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json")
-BENCH_SCHEMA = 1
+BENCH_SCHEMA = 2
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short=12", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def _config_hash(meta: Dict) -> str:
+    blob = json.dumps(meta, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()[:12]
+
+
+def append_history(entry: Dict, path: str = BENCH_PATH) -> Dict:
+    """Append a stamped run entry to the bench file's history (creating or
+    migrating it as needed) and return the written document."""
+    history: List[Dict] = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                prev = json.load(f)
+            if isinstance(prev.get("history"), list):
+                history = prev["history"]
+            elif prev.get("rows"):  # schema 1: one clobbered entry
+                history = [prev]
+        except (json.JSONDecodeError, OSError):
+            history = []
+    history.append(entry)
+    doc = {
+        "schema": BENCH_SCHEMA,
+        "generated_by": "benchmarks/serving_throughput.py",
+        "history": history,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    return doc
 
 
 def _make_prompts(n: int, vocab: int, seed: int) -> List[np.ndarray]:
@@ -45,13 +90,15 @@ def _make_prompts(n: int, vocab: int, seed: int) -> List[np.ndarray]:
 
 def drive(model, params, prompts, label: str, max_batch: int, max_len: int,
           max_new: int, warmup: int = 1, paged: bool = False,
-          num_blocks=None, block_size: int = 16) -> Dict[str, float]:
+          num_blocks=None, block_size: int = 16,
+          spec_config=None) -> Dict[str, float]:
     from repro.serving.engine import ServingEngine
 
     def make_engine():
         return ServingEngine(model, params, max_batch=max_batch,
                              max_len=max_len, paged=paged,
-                             num_blocks=num_blocks, block_size=block_size)
+                             num_blocks=num_blocks, block_size=block_size,
+                             spec_config=spec_config)
 
     # Warmup pass triggers all jit compilations (prefill + decode) so the
     # timed pass measures steady-state serving.
@@ -88,16 +135,28 @@ def drive(model, params, prompts, label: str, max_batch: int, max_len: int,
     if paged:
         row["blocks_peak"] = cs["blocks_peak"]
         row["block_size"] = cs["block_size"]
-    print(f"  [{label:<12}|{row['cache']:<5}] {row['requests']} req, {n_tok} tok, "
+    extra = ""
+    if spec_config is not None:
+        ss = eng.spec_stats()
+        row["spec_k"] = ss["k"]
+        row["acceptance_rate"] = ss["acceptance_rate"]
+        row["committed_per_row_step"] = ss["committed_per_row_step"]
+        row["draft_hbm_bytes"] = ss["draft_hbm_bytes"]
+        extra = (f" | accept={ss['acceptance_rate']:.0%} "
+                 f"commit/step={ss['committed_per_row_step']:.2f}")
+    print(f"  [{label:<16}|{row['cache']:<5}] {row['requests']} req, {n_tok} tok, "
           f"{row['tok_per_s']:8.1f} tok/s | step p50={row['step_p50_ms']:.2f}ms "
-          f"p90={row['step_p90_ms']:.2f}ms | cache {cs['cache_hbm_bytes']/1e6:.2f}MB")
+          f"p90={row['step_p90_ms']:.2f}ms | cache {cs['cache_hbm_bytes']/1e6:.2f}MB"
+          f"{extra}")
     return row
 
 
 def run(model_name: str = "small-llama", requests: int = 24, max_new: int = 24,
         max_batch: int = 8, max_len: int = 256, ratio: float = 0.2,
-        block_size: int = 16):
+        block_size: int = 16, draft_ratio: float = 0.6, spec_k: int = 4):
     from repro.core import CompressionConfig, build_plan, compress_params
+    from repro.models.api import build_draft_params
+    from repro.serving.spec import SpecConfig
 
     model, params, _ = train_small_lm(model_name)
     prompts = _make_prompts(requests, model.cfg.vocab_size, seed=0)
@@ -125,32 +184,48 @@ def run(model_name: str = "small-llama", requests: int = 24, max_new: int = 24,
                           max_new, paged=True, num_blocks=num_blocks,
                           block_size=block_size))
 
-    meta = {"model": model_name, "ratio": ratio, "max_batch": max_batch,
-            "max_len": max_len, "max_new": max_new, "requests": requests,
+    # target vs target+spec: the NSVD target verifies proposals from its
+    # own higher-ratio twin (same Grams, one extra training-free pass).
+    draft_params = build_draft_params(model, params, grams, draft_ratio)
+    rows.append(drive(
+        model, cparams, prompts, f"{nsvd}+spec", max_batch, max_len, max_new,
+        paged=True, num_blocks=num_blocks, block_size=block_size,
+        spec_config=SpecConfig(draft_params=draft_params, k=spec_k),
+    ))
+
+    meta = {"model": model_name, "ratio": ratio, "draft_ratio": draft_ratio,
+            "spec_k": spec_k, "max_batch": max_batch, "max_len": max_len,
+            "max_new": max_new, "requests": requests,
             "block_size": block_size, "num_blocks": num_blocks}
     save_table("serving_throughput", rows, meta)
 
     by = {(r["label"], r["cache"]): r for r in rows}
     dense_b = by[("dense", "dense")]["cache_hbm_bytes"]
     paged_b = by[("dense", "paged")]["cache_hbm_bytes"]
-    bench = {
-        "schema": BENCH_SCHEMA,
-        "generated_by": "benchmarks/serving_throughput.py",
+    spec_row = by[(f"{nsvd}+spec", "paged")]
+    entry = {
+        "git_sha": _git_sha(),
+        "config_hash": _config_hash(meta),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
         "meta": meta,
         "rows": rows,
         "summary": {
             "tok_per_s_dense_slab": by[(nsvd, "dense")]["tok_per_s"],
             "tok_per_s_paged": by[(nsvd, "paged")]["tok_per_s"],
+            "tok_per_s_spec": spec_row["tok_per_s"],
+            "spec_acceptance_rate": spec_row["acceptance_rate"],
+            "spec_committed_per_row_step": spec_row["committed_per_row_step"],
             "cache_bytes_dense_slab": dense_b,
             "cache_bytes_paged": paged_b,
             "cache_bytes_ratio": dense_b / max(1, paged_b),
         },
     }
-    with open(BENCH_PATH, "w") as f:
-        json.dump(bench, f, indent=1)
+    doc = append_history(entry)
     print(f"  cache HBM: dense-slab {dense_b/1e6:.2f}MB vs paged "
-          f"{paged_b/1e6:.2f}MB ({bench['summary']['cache_bytes_ratio']:.1f}x)"
-          f" -> BENCH_serving.json")
+          f"{paged_b/1e6:.2f}MB ({entry['summary']['cache_bytes_ratio']:.1f}x) "
+          f"| spec accept={spec_row['acceptance_rate']:.0%} "
+          f"-> BENCH_serving.json [{entry['git_sha']} "
+          f"{entry['config_hash']}, {len(doc['history'])} run(s)]")
     return rows
 
 
@@ -163,9 +238,13 @@ def main():
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--ratio", type=float, default=0.2)
     ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--draft-ratio", type=float, default=0.6,
+                    help="compression ratio of the self-speculative draft")
+    ap.add_argument("--spec-k", type=int, default=4)
     args = ap.parse_args()
     run(args.model, args.requests, args.max_new, args.max_batch,
-        args.max_len, args.ratio, args.block_size)
+        args.max_len, args.ratio, args.block_size, args.draft_ratio,
+        args.spec_k)
 
 
 if __name__ == "__main__":

@@ -33,6 +33,13 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=64)
     ap.add_argument("--eos", type=int, default=None,
                     help="EOS token id (device-side early exit)")
+    ap.add_argument("--spec-ratio", type=float, default=None,
+                    help="enable self-speculative decoding with a draft "
+                         "compressed at this (higher) NSVD ratio")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="speculation window: draft tokens per step")
+    ap.add_argument("--spec-dynamic-k", action="store_true",
+                    help="per-row adaptive speculation windows")
     args = ap.parse_args()
 
     if args.arch.startswith("small-"):
@@ -47,6 +54,7 @@ def main():
         model = build_model(cfg)
         params = model.init(jax.random.key(0))
 
+    base_params = params
     if args.compress is not None:
         from benchmarks.common import get_grams
         from repro.core import CompressionConfig, build_plan, compress_params
@@ -57,8 +65,23 @@ def main():
             CompressionConfig(method="nsvd1", ratio=args.compress,
                               dtype="float32", use_randomized=False),
         )
-        params = compress_params(params, plan, grams)
+        params = compress_params(base_params, plan, grams)
         print(f"serving NSVD-compressed weights ({plan.achieved_ratio:.0%} removed)")
+
+    spec_config = None
+    if args.spec_ratio is not None:
+        from benchmarks.common import get_grams
+        from repro.models.api import build_draft_params
+        from repro.serving.spec import SpecConfig
+
+        grams = get_grams(args.arch, model, base_params)
+        draft_params = build_draft_params(model, base_params, grams,
+                                          args.spec_ratio)
+        spec_config = SpecConfig(draft_params=draft_params, k=args.spec_k,
+                                 dynamic_k=args.spec_dynamic_k)
+        print(f"speculative decoding: nsvd-{args.spec_ratio:.0%} draft, "
+              f"k={args.spec_k}"
+              + (" (dynamic per-row)" if args.spec_dynamic_k else ""))
 
     eng = ServingEngine(model, params, max_batch=args.max_batch,
                         max_len=args.max_len, seed=args.seed,
@@ -66,7 +89,8 @@ def main():
                         block_size=args.block_size,
                         num_blocks=args.num_blocks,
                         prefill_chunk=args.prefill_chunk,
-                        eos_id=args.eos)
+                        eos_id=args.eos,
+                        spec_config=spec_config)
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
         eng.submit(rng.integers(2, cfg.vocab_size // 2, size=8),
@@ -88,6 +112,11 @@ def main():
              if cs["layout"] == "paged" else "")
     print(f"cache[{cs['layout']}]: {cs['cache_hbm_bytes']/1e6:.2f}MB, "
           f"capacity {cs['tokens_capacity']} tok{extra}")
+    ss = eng.spec_stats()
+    if ss:
+        print(f"spec[k={ss['k']}]: acceptance {ss['acceptance_rate']:.0%}, "
+              f"{ss['committed_per_row_step']:.2f} committed tok/row-step, "
+              f"draft cache {ss['draft_hbm_bytes']/1e6:.2f}MB")
 
 
 if __name__ == "__main__":

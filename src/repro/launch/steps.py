@@ -330,6 +330,159 @@ def make_prefill_admit_step(model: Model, max_len: int,
     return prefill_admit_step
 
 
+# ------------------------------------------------- speculative decoding
+#
+# Self-speculative roots (serving/spec/): the draft root runs K+1 sequential
+# cheap decodes over the DRAFT cache in one jitted call (no per-token host
+# round-trips; the proposal matrix and draft probs stay on device and flow
+# straight into the verify root), and the verify root feeds the K proposals
+# through the same S>1 chunk-decode path chunked prefill uses, then performs
+# batched accept/resample (serving/spec/verify.py) and rolls the per-row
+# cache lengths to the accepted prefix — the length rollback IS the cache
+# rollback: stale entries past cache_len are invisible to attention and get
+# overwritten by the next chunk.  Both roots take ``block_tables=None`` for
+# the dense-slab layout (the dense decode path accepts S >= 1 chunks).
+
+
+# donate: pools (draft), key_data (draft)
+SPEC_DRAFT_DONATE = (1, 5)
+
+
+def make_spec_draft_step(model: Model, k: int) -> Callable:
+    """Fused draft-K root: K+1 sequential single-token decodes of the DRAFT
+    model (feed t0, sample d_1; ... feed d_{K-1}, sample d_K; feed d_K to
+    cache it), emitting the (B, K) proposal matrix and the (B, K, V) draft
+    probs the verifier's accept/resample needs.  Feeding all K+1 tokens —
+    one more than it samples — keeps the draft cache a superset of every
+    committable prefix, so draft and target lengths stay equal and no
+    catch-up chunk ever exists.  Inactive rows' paged writes drop via the
+    -1-forced block table; dense writes land past their own row's frozen
+    cache_len, where admission's wholesale row rewrite erases them."""
+
+    def spec_draft_step(params, pools, block_tables, last_token, cache_len,
+                        key_data, active, host_keep, temps):
+        act = jnp.logical_and(active, host_keep)
+        bt_eff = None
+        if block_tables is not None:
+            bt_eff = jnp.where(act[:, None], block_tables, -1)
+
+        def body(carry, i):
+            tok, pools, kd = carry
+            logits, pools, _ = model.apply(
+                params, tok[:, None], mode="decode", cache=pools,
+                cache_len=cache_len + i, block_tables=bt_eff,
+            )
+            lg = logits[:, 0]
+            q = jax.nn.softmax(
+                lg.astype(jnp.float32)
+                / jnp.maximum(temps, 1e-6)[:, None], axis=-1
+            )
+            kd, nxt = sample_tokens(kd, lg, temps)
+            return (nxt, pools, kd), (nxt, q)
+
+        (_, pools, key_data), (toks, qs) = jax.lax.scan(
+            body, (last_token, pools, key_data),
+            jnp.arange(k + 1, dtype=jnp.int32),
+        )
+        proposals = toks[:k].T  # (B, K); the (K+1)-th sample is discarded
+        q_probs = jnp.moveaxis(qs[:k], 0, 1)  # (B, K, V)
+        return proposals, q_probs, pools, key_data
+
+    return spec_draft_step
+
+
+# donate: pools (target), last_token, cache_len, key_data, active
+SPEC_VERIFY_DONATE = (1, 3, 6, 7, 8)
+
+
+def make_spec_verify_step(model: Model, k: int) -> Callable:
+    """Chunk-verification root: run the target on [t0, d_1..d_K] (one S=K+1
+    chunk decode against the cache — the paged S>1 path, or the dense slab's
+    chunked twin), accept/resample on device (greedy = exact prefix match;
+    temperature = Leviathan accept u < p/q + residual resample, preserving
+    the target distribution exactly), advance each row's cache_len by the
+    m+1 committed entries [t0, d_1..d_m] — the cache-rollback contract —
+    and fuse the device-side EOS scan over the committed tokens.
+
+    Returns a single packed int32 matrix for the step's ONE D2H transfer:
+    ``[out_tokens (K+1) | n_commit | m]`` per row, where out_tokens is
+    [d_1..d_m, t_new, fill], n_commit truncates at the first committed EOS,
+    and m is the raw acceptance count for the engine's accounting."""
+
+    from repro.serving.spec.verify import verify_tail
+
+    def spec_verify_step(params, pools, block_tables, last_token, proposals,
+                         q_probs, cache_len, key_data, active, host_keep,
+                         temps, eos, k_row):
+        act = jnp.logical_and(active, host_keep)
+        bt_eff = None
+        if block_tables is not None:
+            bt_eff = jnp.where(act[:, None], block_tables, -1)
+        chunk = jnp.concatenate([last_token[:, None], proposals], axis=1)
+        logits, pools, _ = model.apply(
+            params, chunk, mode="decode", cache=pools, cache_len=cache_len,
+            block_tables=bt_eff,
+        )
+        key_data, m, t_new, out_tokens = verify_tail(
+            key_data, logits, q_probs, proposals, temps, k_row
+        )
+        t_new = jnp.where(act, t_new, last_token)
+        n_raw = jnp.where(act, m + 1, 0)
+        cache_len = cache_len + n_raw
+        idx = jnp.arange(k + 1, dtype=jnp.int32)[None, :]
+        committed = idx < n_raw[:, None]
+        is_eos = jnp.logical_and(out_tokens == eos[:, None], committed)
+        any_eos = is_eos.any(axis=1)
+        n_commit = jnp.where(any_eos, jnp.argmax(is_eos, axis=1) + 1, n_raw)
+        active = jnp.logical_and(act, jnp.logical_not(any_eos))
+        pack = jnp.concatenate(
+            [out_tokens.astype(jnp.int32), n_commit[:, None].astype(jnp.int32),
+             jnp.where(act, m, 0)[:, None].astype(jnp.int32)], axis=1,
+        )
+        return pack, pools, cache_len, t_new, key_data, active
+
+    return spec_verify_step
+
+
+# donate: pools (draft)
+DRAFT_PREFILL_DONATE = (1,)
+
+
+def make_paged_draft_prefill_step(model: Model) -> Callable:
+    """Draft twin of the paged prefill chunk root: stream the SAME token
+    chunk into the draft pools — no sampling, no engine-state writes (the
+    engine's cache_len/last_token already describe both caches).  Garbage
+    tokens past a row's nvalid follow the target root's argument: masked by
+    causality/cache_len or overwritten before visible; writes past the
+    row's draft reservation drop on -1 table entries."""
+
+    def paged_draft_prefill_step(params, pools, bt_rows, tokens, starts):
+        _, pools, _ = model.apply(
+            params, tokens, mode="decode", cache=pools, cache_len=starts,
+            block_tables=bt_rows, output="hidden",
+        )
+        return pools
+
+    return paged_draft_prefill_step
+
+
+def make_dense_draft_prefill_step(model: Model, max_len: int,
+                                  kv_quant: bool = False) -> Callable:
+    """Draft twin of the dense prefill-admit root: prefill the prompt batch
+    through the DRAFT params and scatter the fresh rows into the draft
+    slab (pad slots >= max_batch drop, exactly like admission)."""
+
+    def dense_draft_prefill_step(params, cache, tokens, slots):
+        row_cache = model.init_cache(tokens.shape[0], max_len,
+                                     kv_quant=kv_quant)
+        _, row_cache, _ = model.apply(
+            params, tokens, mode="prefill", cache=row_cache, output="hidden"
+        )
+        return set_cache_rows(cache, row_cache, slots)
+
+    return dense_draft_prefill_step
+
+
 # -------------------------------------------------------------- shardings
 
 # KV caches are SEQUENCE-sharded over the model axis (context parallelism):

@@ -145,6 +145,30 @@ def prefill_pad_safe(model: Model) -> bool:
     return getattr(model.cfg, "moe", None) is None
 
 
+def build_draft_params(model: Model, params: Any, grams: Any, ratio: float,
+                       method: str = "nsvd1") -> Any:
+    """Draft construction from a compression plan: factor ``params`` at a
+    HIGHER compression ratio than the serving target, yielding the
+    self-speculative draft checkpoint (same architecture, cheaper matmuls
+    — the factored leaves dispatch through ``linear_apply`` unchanged).
+
+    NSVD is training-free, so the draft costs one extra ``build_plan`` +
+    ``compress_params`` pass over the same calibration Grams the target's
+    compression already collected — the compression sweep ships its own
+    draft models for free.  Pass the result as
+    ``SpecConfig(draft_params=...)`` (serving/spec)."""
+    from repro.core import CompressionConfig, build_plan, compress_params
+
+    if not 0.0 < ratio < 1.0:
+        raise ValueError(f"draft compression ratio must be in (0, 1), got {ratio}")
+    plan = build_plan(
+        model.compressible_targets(),
+        CompressionConfig(method=method, ratio=ratio, dtype="float32",
+                          use_randomized=False),
+    )
+    return compress_params(params, plan, grams)
+
+
 def param_specs(cfg: ModelConfig, seed: int = 0) -> Any:
     """ShapeDtypeStructs of the model params (no allocation)."""
     model = build_model(cfg)

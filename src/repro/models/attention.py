@@ -306,28 +306,34 @@ def attention_apply(
             q, k, v, cache, cache_len, block_tables, scale
         )
     elif mode == "decode":
-        assert cache is not None and cache_len is not None and s == 1
+        assert cache is not None and cache_len is not None
         t_max = cache["k"].shape[1]
-        # Write the new K/V at each row's current length.
+        # Write the S new K/V entries at each row's current length.  S == 1
+        # is the classic decode step; S > 1 is a dense-slab chunk step
+        # (speculative verification / catch-up decode): query i attends
+        # positions <= cache_len + i, exactly mirroring the paged chunk
+        # path.  Writes past max_len drop — they can only affect tokens the
+        # engine truncates at its max_len/max_new budget anyway.
         idx = cache_len  # (B,)
+        pos = idx[:, None] + jnp.arange(s, dtype=jnp.int32)  # (B, S)
         if "k_scale" in cache:  # int8-quantized cache
-            kq, ks = _quantize_kv(k[:, 0])
-            vq, vs = _quantize_kv(v[:, 0])
-            rows = jnp.arange(k.shape[0])
+            kq, ks = _quantize_kv(k)
+            vq, vs = _quantize_kv(v)
+            rows = jnp.arange(k.shape[0])[:, None]
             new_cache = {
-                "k": _scatter_rows(cache["k"], kq, idx),
-                "v": _scatter_rows(cache["v"], vq, idx),
-                "k_scale": cache["k_scale"].at[rows, idx].set(ks),
-                "v_scale": cache["v_scale"].at[rows, idx].set(vs),
+                "k": _scatter_chunk(cache["k"], kq, pos),
+                "v": _scatter_chunk(cache["v"], vq, pos),
+                "k_scale": cache["k_scale"].at[rows, pos].set(ks, mode="drop"),
+                "v_scale": cache["v_scale"].at[rows, pos].set(vs, mode="drop"),
             }
             k_cache = _dequantize_kv(new_cache["k"], new_cache["k_scale"], q.dtype)
             v_cache = _dequantize_kv(new_cache["v"], new_cache["v_scale"], q.dtype)
         else:
-            k_cache = _scatter_rows(cache["k"], k[:, 0], idx)
-            v_cache = _scatter_rows(cache["v"], v[:, 0], idx)
+            k_cache = _scatter_chunk(cache["k"], k, pos)
+            v_cache = _scatter_chunk(cache["v"], v, pos)
             new_cache = {"k": k_cache, "v": v_cache}
-        valid = jnp.arange(t_max)[None, :] <= idx[:, None]  # (B, T)
-        mask = valid[:, None, None, None, :]  # (B,1,1,1,T)
+        valid = jnp.arange(t_max)[None, None, :] <= pos[:, :, None]  # (B,S,T)
+        mask = valid[:, None, None]  # (B,1,1,S,T)
         out = _naive_attention(q, k_cache, v_cache, mask, scale)
     elif mode == "cross":
         t = k.shape[1]
@@ -369,7 +375,11 @@ def attention_apply(
     return y, new_cache
 
 
-def _scatter_rows(cache: jax.Array, new: jax.Array, idx: jax.Array) -> jax.Array:
-    """cache: (B, T, H, d), new: (B, H, d), idx: (B,) -> write new at [b, idx[b]]."""
+def _scatter_chunk(cache: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
+    """cache: (B, T, H, d), new: (B, S, H, d), pos: (B, S) -> write new[b, i]
+    at cache[b, pos[b, i]].  Positions >= T drop (positive OOB only — the
+    engine never produces negative write positions)."""
     b = cache.shape[0]
-    return cache.at[jnp.arange(b), idx].set(new.astype(cache.dtype))
+    return cache.at[jnp.arange(b)[:, None], pos].set(
+        new.astype(cache.dtype), mode="drop"
+    )

@@ -50,6 +50,17 @@ Decode-time nested-lowrank matmuls of compressed layers (dense, attention,
 MLP, and the stacked MoE expert FFNs) route through
 ``kernels/nested_lowrank/ops.py`` (fused Pallas kernel on TPU for
 decode-shaped rows, jnp oracle on CPU).
+
+Speculative decoding (``spec_config``, serving/spec/): a higher-compression
+NSVD twin of the weights drafts ``k`` tokens per step in one fused jit root
+(K+1 sequential cheap decodes over the draft's own paged/dense cache); the
+target verifies the whole proposal matrix through the same S>1 chunk-decode
+path chunked prefill uses and commits the accepted prefix plus one
+correction/bonus token via on-device accept/resample — greedy is
+token-identical to non-speculative decode, temperature>0 preserves the
+target distribution exactly.  Both caches' per-row lengths roll back to the
+committed prefix on device; a step is still exactly two jitted calls and
+ONE D2H transfer (the packed committed-token matrix).
 """
 
 from __future__ import annotations
@@ -66,16 +77,24 @@ import numpy as np
 
 from repro.launch.steps import (
     DECODE_DONATE,
+    DRAFT_PREFILL_DONATE,
     PAGED_DECODE_DONATE,
     PAGED_PREFILL_DONATE,
     PREFILL_ADMIT_DONATE,
+    SPEC_DRAFT_DONATE,
+    SPEC_VERIFY_DONATE,
     make_decode_sample_step,
+    make_dense_draft_prefill_step,
     make_paged_decode_step,
+    make_paged_draft_prefill_step,
     make_paged_prefill_chunk_step,
     make_prefill_admit_step,
+    make_spec_draft_step,
+    make_spec_verify_step,
 )
 from repro.models.api import Model, cache_layout, prefill_pad_safe
 from repro.serving.kvcache import PagedKVCache
+from repro.serving.spec import DraftState, SpecConfig
 
 
 @dataclasses.dataclass
@@ -87,10 +106,17 @@ class Request:
     eos_id: Optional[int] = None
     generated: List[int] = dataclasses.field(default_factory=list)
     slot: Optional[int] = None
+    # Speculative-decoding accounting (spec_config engines only).
+    spec_proposed: int = 0
+    spec_accepted: int = 0
 
     @property
     def done(self) -> bool:
         return len(self.generated) >= self.max_new_tokens
+
+    @property
+    def acceptance_rate(self) -> float:
+        return self.spec_accepted / max(1, self.spec_proposed)
 
 
 @dataclasses.dataclass
@@ -116,6 +142,7 @@ class ServingEngine:
         prefill_chunk: int = 64,
         eos_id: Optional[int] = None,
         kv_quant: bool = False,
+        spec_config: Optional[SpecConfig] = None,
     ):
         self.model = model
         self.params = params
@@ -129,6 +156,14 @@ class ServingEngine:
             raise ValueError(
                 f"model {model.cfg.name!r} has cache layout {layout!r}; "
                 "paging requires a pure-attention cache (models.api.cache_layout)"
+            )
+        self.spec = spec_config
+        if self.spec is not None and layout != "paged":
+            raise ValueError(
+                f"model {model.cfg.name!r} has cache layout {layout!r}; "
+                "speculative decoding needs pure-attention caches (chunk "
+                "verification and length rollback have no recurrent/MoE/MLA "
+                "form)"
             )
 
         # Device-resident state (never read back except the sampled tokens).
@@ -178,6 +213,41 @@ class ServingEngine:
             )
             self._buckets = self._make_buckets(bucket_min, max_len)
 
+        if self.spec is not None:
+            self.draft = DraftState(
+                model, self.spec.draft_params, max_batch, max_len,
+                paged=self.paged, block_size=block_size,
+                num_blocks=num_blocks, kv_quant=kv_quant,
+                seed=self.spec.seed,
+            )
+            self._spec_draft = jax.jit(
+                make_spec_draft_step(model, self.spec.k),
+                donate_argnums=SPEC_DRAFT_DONATE,
+            )
+            self._spec_verify = jax.jit(
+                make_spec_verify_step(model, self.spec.k),
+                donate_argnums=SPEC_VERIFY_DONATE,
+            )
+            if self.paged:
+                self._draft_prefill = jax.jit(
+                    make_paged_draft_prefill_step(model),
+                    donate_argnums=DRAFT_PREFILL_DONATE,
+                )
+            else:
+                self._draft_prefill = jax.jit(
+                    make_dense_draft_prefill_step(model, max_len,
+                                                  kv_quant=kv_quant),
+                    donate_argnums=DRAFT_PREFILL_DONATE,
+                )
+            # Per-row speculation windows (all k unless dynamic_k shrinks).
+            self._k_row = np.full((max_batch,), self.spec.k, np.int32)
+            self.spec_proposed = 0
+            self.spec_accepted = 0
+            self.spec_committed = 0
+            self.spec_step_rows = 0
+        else:
+            self.draft = None
+
         # Telemetry: step() wall times (includes the one D2H sync).
         self.step_times: List[float] = []
         self.decode_transfers = 0
@@ -190,10 +260,26 @@ class ServingEngine:
         prompt = np.asarray(prompt, np.int32)
         if len(prompt) == 0:
             raise ValueError("empty prompt")
+        if max_new_tokens <= 0:
+            raise ValueError(
+                f"max_new_tokens must be positive, got {max_new_tokens}"
+            )
         if len(prompt) > self.max_len - 1:
             raise ValueError(
                 f"prompt length {len(prompt)} exceeds max_len-1={self.max_len - 1}"
             )
+        if self.paged:
+            # Admission reserves the worst case up front; a request whose
+            # worst case exceeds the TOTAL pool could never be admitted and
+            # would stall the FIFO head forever — fail fast at submit.
+            need = min(self.max_len, len(prompt) + max_new_tokens)
+            n_blocks = self.kv.blocks_for(need)
+            if n_blocks > self.kv.num_blocks:
+                raise ValueError(
+                    f"request needs {n_blocks} blocks worst-case "
+                    f"(prompt {len(prompt)} + max_new {max_new_tokens}) but "
+                    f"the pool only has {self.kv.num_blocks}"
+                )
         req = Request(next(self._uid), prompt, max_new_tokens, temperature,
                       eos_id if eos_id is not None else self.eos_id)
         self.queue.append(req)
@@ -227,11 +313,15 @@ class ServingEngine:
         self.temps[slot] = req.temperature
         self._eos[slot] = -1 if req.eos_id is None else req.eos_id
         self._len_host[slot] = len(req.prompt)
+        if self.spec is not None:
+            self._k_row[slot] = self.spec.k  # fresh speculation window
         if (req.done or self._len_host[slot] >= self.max_len - 1
                 or tok == self._eos[slot]):
             finished.append(req)
             if self.paged:
                 self.kv.free(slot)
+            if self.spec is not None:
+                self.draft.free(slot)
         else:
             self.slots[slot] = req
             self.active[slot] = True
@@ -255,6 +345,11 @@ class ServingEngine:
                         f"blocks but the pool only has {self.kv.num_blocks}"
                     )
                 break  # pool exhausted: FIFO backpressure until blocks free
+            if self.spec is not None and not self.draft.reserve(free[0], need):
+                # Draft pool is reserved in lockstep with the target's: on
+                # failure roll the target reservation back and wait.
+                self.kv.free(free[0])
+                break
             self.queue.popleft()
             busy.add(free[0])
             self._prefilling.append(_PrefillTask(req, free[0]))
@@ -275,6 +370,8 @@ class ServingEngine:
         fslots = np.full((r_rows,), self.max_batch, np.int32)  # pad = dropped
         temps = np.zeros((r_rows,), np.float32)
         bt_rows = np.full((r_rows, self.kv.max_blocks_per_row), -1, np.int32)
+        d_bt = (np.full((r_rows, self.kv.max_blocks_per_row), -1, np.int32)
+                if self.spec is not None else None)
         fin: List[tuple] = []
         for r, task in enumerate(tasks):
             p = task.req.prompt
@@ -284,17 +381,27 @@ class ServingEngine:
             nvalid[r] = n
             temps[r] = task.req.temperature
             bt_rows[r] = self.kv.table_np[task.slot]
+            if d_bt is not None:
+                d_bt[r] = self.draft.kv.table_np[task.slot]
             task.pos += n
             if task.pos >= len(p):
                 fslots[r] = task.slot
                 fin.append((r, task))
+        tok_dev, starts_dev = jnp.asarray(tokens), jnp.asarray(starts)
         (first, self.kv.pools, self.cache_len, self.last_token,
          self.key_data, self._active_dev) = self._chunk_step(
             self.params, self.kv.pools, jnp.asarray(bt_rows),
-            jnp.asarray(tokens), jnp.asarray(starts), jnp.asarray(nvalid),
+            tok_dev, starts_dev, jnp.asarray(nvalid),
             jnp.asarray(fslots), self.cache_len, self.last_token,
             self.key_data, jnp.asarray(temps), self._active_dev,
         )
+        if self.spec is not None:
+            # Stream the same chunk into the draft pools (its own block
+            # tables; lengths/last tokens are shared with the target).
+            self.draft.pools = self._draft_prefill(
+                self.draft.params, self.draft.pools, jnp.asarray(d_bt),
+                tok_dev, starts_dev,
+            )
         finished: List[Request] = []
         if fin:
             toks = np.asarray(jax.device_get(first))
@@ -374,6 +481,11 @@ class ServingEngine:
                 self.last_token, self.key_data, jnp.asarray(temps),
                 self._active_dev,
             )
+            if self.spec is not None:
+                self.draft.cache = self._draft_prefill(
+                    self.draft.params, self.draft.cache,
+                    jnp.asarray(tokens), jnp.asarray(slots),
+                )
             toks = np.asarray(jax.device_get(first))
             for r, req in enumerate(group):
                 self._finish_or_activate(req, free[r], int(toks[r]), finished)
@@ -384,7 +496,10 @@ class ServingEngine:
     def step(self) -> List[Request]:
         """One decode step for all live rows; returns requests finished.
 
-        Exactly one device->host transfer: the sampled token vector."""
+        Exactly one device->host transfer: the sampled token vector (or, in
+        speculative mode, the packed committed-token matrix)."""
+        if self.spec is not None:
+            return self._step_spec()
         t0 = time.perf_counter()
         active = self.active.copy()
         host_keep = jnp.asarray(active)
@@ -423,6 +538,81 @@ class ServingEngine:
         self.step_times.append(time.perf_counter() - t0)
         return finished
 
+    def _step_spec(self) -> List[Request]:
+        """One speculative step: draft k proposals (fused K+1-decode root
+        over the draft cache), verify them through the target's chunk-decode
+        root with on-device accept/resample and length rollback, then commit
+        1..k+1 tokens per live row from the step's single D2H transfer."""
+        t0 = time.perf_counter()
+        k = self.spec.k
+        active = self.active.copy()
+        host_keep = jnp.asarray(active)
+        temps = jnp.asarray(self.temps)
+        eos = jnp.asarray(self._eos)
+        k_row = jnp.asarray(self._k_row)
+
+        (proposals, q_probs, self.draft.pools,
+         self.draft.key_data) = self._spec_draft(
+            self.draft.params, self.draft.pools, self.draft.table_device(),
+            self.last_token, self.cache_len, self.draft.key_data,
+            self._active_dev, host_keep, temps,
+        )
+        target_cache = self.kv.pools if self.paged else self.cache
+        bt = self.kv.table_device() if self.paged else None
+        (pack, target_cache, self.cache_len, self.last_token, self.key_data,
+         self._active_dev) = self._spec_verify(
+            self.params, target_cache, bt, self.last_token, proposals,
+            q_probs, self.cache_len, self.key_data, self._active_dev,
+            host_keep, temps, eos, k_row,
+        )
+        if self.paged:
+            self.kv.pools = target_cache
+        else:
+            self.cache = target_cache
+
+        out = np.asarray(jax.device_get(pack))  # the step's single D2H
+        self.decode_transfers += 1
+        toks_mat, n_commit, m_acc = out[:, : k + 1], out[:, k + 1], out[:, k + 2]
+
+        finished: List[Request] = []
+        for slot, req in enumerate(self.slots):
+            if req is None or not active[slot]:
+                continue
+            m = int(m_acc[slot])
+            k_eff = int(self._k_row[slot])
+            req.spec_proposed += k_eff
+            req.spec_accepted += m
+            self.spec_proposed += k_eff
+            self.spec_accepted += m
+            self.spec_step_rows += 1
+            self._len_host[slot] += m + 1  # entries committed to cache
+            if self.spec.dynamic_k:
+                if m == k_eff:
+                    self._k_row[slot] = min(k, k_eff + 1)
+                elif m == 0:
+                    self._k_row[slot] = max(1, k_eff - 1)
+            done = False
+            base_len = self._len_host[slot] - (m + 1)
+            for j in range(int(n_commit[slot])):
+                tok = int(toks_mat[slot, j])
+                req.generated.append(tok)
+                self.spec_committed += 1
+                # Sequential-decode finish semantics: cached length after
+                # this token is base_len + j + 1.
+                if (req.done or base_len + j + 1 >= self.max_len - 1
+                        or tok == self._eos[slot]):
+                    done = True
+                    break
+            if done:
+                finished.append(req)
+                self.slots[slot] = None
+                self.active[slot] = False
+                if self.paged:
+                    self.kv.free(slot)
+                self.draft.free(slot)
+        self.step_times.append(time.perf_counter() - t0)
+        return finished
+
     # ------------------------------------------------------------ telemetry
 
     def stats(self) -> Dict[str, float]:
@@ -440,6 +630,23 @@ class ServingEngine:
             "live_rows": n_live,
         }
 
+    def spec_stats(self) -> Dict[str, float]:
+        """Speculative-decoding accounting: acceptance rate and committed
+        tokens per live row-step (>= 1.0; the speedup proxy)."""
+        if self.spec is None:
+            return {}
+        return {
+            "k": self.spec.k,
+            "dynamic_k": bool(self.spec.dynamic_k),
+            "proposed": self.spec_proposed,
+            "accepted": self.spec_accepted,
+            "committed": self.spec_committed,
+            "acceptance_rate": self.spec_accepted / max(1, self.spec_proposed),
+            "committed_per_row_step":
+                self.spec_committed / max(1, self.spec_step_rows),
+            "draft_hbm_bytes": self.draft.hbm_bytes(),
+        }
+
     def cache_stats(self) -> Dict[str, float]:
         """Cache memory accounting: HBM bytes + live/reserved tokens."""
         live = int((self._len_host * self.active).sum())
@@ -454,11 +661,16 @@ class ServingEngine:
                 )),
             }
         s["live_tokens"] = live
+        if self.spec is not None:
+            s["draft_hbm_bytes"] = self.draft.hbm_bytes()
         return s
 
     def defrag(self) -> int:
         """Compact live blocks to the lowest pool ids (paged only).
-        Returns the number of blocks moved."""
+        Returns the number of blocks moved (target + draft pools)."""
         if not self.paged:
             return 0
-        return len(self.kv.defrag())
+        moved = len(self.kv.defrag())
+        if self.spec is not None:
+            moved += len(self.draft.kv.defrag())
+        return moved

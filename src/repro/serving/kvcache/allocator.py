@@ -64,6 +64,23 @@ class BlockAllocator:
             self._free.sort()
         return ids
 
+    def release_suffix(self, owner: Hashable, n_keep: int) -> List[int]:
+        """Shrink an owner to its FIRST n_keep blocks, returning the freed
+        suffix.  The block table maps logical positions to blocks in owned
+        order, so a per-row length rollback frees exactly this suffix —
+        the allocator half of the cache-rollback API."""
+        if n_keep < 0:
+            raise ValueError(f"negative n_keep {n_keep}")
+        ids = self._owned.get(owner, [])
+        freed = ids[n_keep:]
+        if freed:
+            self._owned[owner] = ids[:n_keep]
+            if not self._owned[owner]:
+                del self._owned[owner]
+            self._free.extend(freed)
+            self._free.sort()
+        return freed
+
     def defrag(self) -> Dict[int, int]:
         """Compact live blocks into ids [0, in_use): returns {old: new} for
         every moved block and rewrites the per-owner lists in place."""

@@ -98,6 +98,26 @@ class PagedKVCache:
         self.table_np[slot, :] = -1
         return self.alloc.free(slot)
 
+    def rollback(self, slot: int, n_tokens: int) -> List[int]:
+        """Cache-rollback API: shrink a slot's reservation to cover only
+        ``n_tokens`` logical positions, freeing the block suffix and
+        clearing its table entries.  Device pools need no touch — entries
+        past a row's cache_len are already invisible to attention; the
+        block table is the paged layout's write cursor.
+
+        Speculative decoding's per-step rollback is pure length arithmetic
+        (worst-case reservations stay put for the request's lifetime);
+        this entry point is for callers that shrink a row's WORST CASE
+        mid-flight — e.g. allocate-on-demand admission or preemption.
+        ``n_tokens == 0`` releases everything (victim eviction)."""
+        n_keep = 0 if n_tokens <= 0 else self.blocks_for(n_tokens)
+        freed = self.alloc.release_suffix(slot, n_keep)
+        if freed:
+            owned = self.alloc.owned_by(slot)
+            self.table_np[slot, :] = -1
+            self.table_np[slot, : len(owned)] = owned
+        return freed
+
     def table_device(self) -> jax.Array:
         return jnp.asarray(self.table_np)
 

@@ -1,0 +1,25 @@
+"""Self-speculative decoding subsystem.
+
+NSVD's training-free compression sweep gives every checkpoint a free draft
+model: the same weights at a higher compression ratio.  This package pairs
+that draft with the target inside the serving engine — the draft proposes
+``k`` tokens per step (one fused jit root, K sequential cheap decodes), the
+target verifies them in a single S>1 chunk-decode call (the same root shape
+chunked prefill uses), and batched accept/resample on device commits the
+accepted prefix plus one correction/bonus token, rolling both caches' per-
+row lengths back to the committed prefix.
+
+Pieces:
+  config.SpecConfig  — k, dynamic per-row windows, draft params/seed
+  draft.DraftState   — draft-side cache (paged or dense) + PRNG keys
+  verify.verify_tail — batched greedy / Leviathan accept-resample math
+
+The jit roots live in launch/steps.py (make_spec_draft_step /
+make_spec_verify_step / the draft prefill twins); serving/engine.py wires
+them into step() and admission."""
+
+from .config import SpecConfig
+from .draft import DraftState
+from .verify import verify_tail
+
+__all__ = ["SpecConfig", "DraftState", "verify_tail"]

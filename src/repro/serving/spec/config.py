@@ -1,0 +1,39 @@
+"""Speculative-decoding configuration for the serving engine."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+
+@dataclasses.dataclass
+class SpecConfig:
+    """Self-speculative decoding: a higher-compression NSVD twin (or any
+    same-architecture params pytree) drafts ``k`` tokens per engine step;
+    the target verifies them in one chunk-decode call and commits the
+    accepted prefix plus one correction/bonus token.
+
+    draft_params: params pytree for the draft forward pass.  Same model
+        object as the target — NSVD-factored leaves dispatch through
+        ``linear_apply`` like any compressed checkpoint.  Build one from a
+        compression plan with ``models.api.build_draft_params``.
+    k: speculation window — draft tokens proposed per engine step.  Each
+        step commits between 1 and k+1 tokens.
+    dynamic_k: per-row adaptive window.  Rows start at ``k``; a step that
+        accepts its whole window grows the row's window by one (capped at
+        ``k``), a step that accepts nothing shrinks it (floored at 1).
+        Shapes stay fixed — the window masks acceptance, it does not shrink
+        the draft loop — so this trades committed tokens for acceptance
+        rate, not FLOPs.
+    seed: draft-side PRNG seed (independent of the target's sampling keys:
+        proposals consume draft keys, accept/resample consumes target keys).
+    """
+
+    draft_params: Any
+    k: int = 4
+    dynamic_k: bool = False
+    seed: int = 1234
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"spec k must be >= 1, got {self.k}")

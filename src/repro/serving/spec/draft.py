@@ -1,0 +1,78 @@
+"""DraftState: the draft model's serving-side state.
+
+The draft runs the SAME architecture as the target (self-speculative NSVD:
+identical shapes, cheaper factored matmuls), so its cache leaves are
+shape-identical to the target's and it can mirror the engine's slot layout
+one-for-one.  Three invariants keep the state tiny:
+
+  * ``cache_len`` and ``last_token`` are SHARED with the target engine —
+    they are equal by construction after prefill (both caches hold the
+    prompt; the first sampled token is pending) and after every spec step
+    (the verify step rolls BOTH caches' lengths to the accepted prefix
+    n + m + 1 and both feed the same correction/bonus token next).  The
+    draft-K root feeds all k+1 drafted tokens through the draft (one more
+    forward than it samples), so the draft cache always holds an entry for
+    every committed token — no catch-up chunk is ever needed.
+  * Only the cache itself and the draft PRNG keys are draft-private.
+  * Paged mode reserves blocks in lockstep with the target: a request is
+    admitted only when BOTH pools can hold its worst case, so neither side
+    can run out mid-flight.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.serving.kvcache import PagedKVCache
+
+
+class DraftState:
+    def __init__(self, model, params: Any, max_batch: int, max_len: int,
+                 paged: bool, block_size: int = 16,
+                 num_blocks: Optional[int] = None, kv_quant: bool = False,
+                 seed: int = 1234):
+        self.params = params
+        self.paged = paged
+        if paged:
+            self.kv = PagedKVCache(model, max_batch, max_len,
+                                   block_size=block_size,
+                                   num_blocks=num_blocks, kv_quant=kv_quant)
+            self.cache = None
+        else:
+            self.kv = None
+            self.cache = model.init_cache(max_batch, max_len,
+                                          kv_quant=kv_quant)
+        self.key_data = jax.random.key_data(
+            jax.random.split(jax.random.key(seed), max_batch)
+        )
+
+    # ---------------------------------------------------------- block ops
+
+    def reserve(self, slot: int, n_tokens: int) -> bool:
+        return self.kv.reserve(slot, n_tokens) if self.paged else True
+
+    def free(self, slot: int) -> None:
+        if self.paged:
+            self.kv.free(slot)
+
+    def hbm_bytes(self) -> int:
+        leaves = jax.tree.leaves(self.kv.pools if self.paged else self.cache)
+        return int(sum(leaf.nbytes for leaf in leaves))
+
+    def table_device(self) -> Optional[jax.Array]:
+        return self.kv.table_device() if self.paged else None
+
+    @property
+    def pools(self):
+        """The draft cache pytree, whichever layout backs it."""
+        return self.kv.pools if self.paged else self.cache
+
+    @pools.setter
+    def pools(self, value):
+        if self.paged:
+            self.kv.pools = value
+        else:
+            self.cache = value

@@ -1,0 +1,83 @@
+"""Device-side speculative verification: batched accept/resample.
+
+Pure jnp functions shared by the ``make_spec_verify_step`` jit root
+(launch/steps.py) and the distribution tests — the statistical guarantee
+(temperature > 0 rejection sampling preserves the target distribution
+exactly, Leviathan et al. 2023) is pinned against ``verify_tail`` directly.
+
+Chunk indexing convention (K = number of draft proposals):
+
+    chunk fed to the target = [t0, d_1, ..., d_K]        (B, K+1) tokens
+    target logits L_i at chunk index i = distribution of the token AFTER
+    the prefix ending at chunk[i]; so P_{i-1} = softmax(L_{i-1}/tau) is the
+    target distribution d_i is judged against, and q[i-1] (0-based) is the
+    draft distribution d_i was sampled from.
+
+Acceptance: greedy rows (temp <= 0) accept d_i iff argmax(L_{i-1}) == d_i
+(exact prefix match — token-identical to non-speculative greedy decode by
+induction).  Temperature rows accept d_i with probability
+min(1, P_{i-1}(d_i)/q_{i-1}(d_i)), drawn as u * q < p to avoid the divide.
+After the accepted prefix of length m: a probabilistic rejection resamples
+from norm(max(P_m - q_m, 0)); a full window (m == min(K, k_row), no
+rejection event) samples the bonus token from P_m directly — the k_row
+cutoff is a scheduling decision, not a rejection, so the residual formula
+would bias it.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _row_verify(kd, logits_r, q_r, d_r, temp, kr):
+    """Single-row accept/resample.  logits_r: (K+1, V) target logits over
+    the chunk, q_r: (K, V) draft probs, d_r: (K,) proposals, kr: row's
+    speculation window (1..K).  Returns (new key_data, m, t_new)."""
+    k = d_r.shape[0]
+    ar = jnp.arange(k)
+    greedy_tok = jnp.argmax(logits_r, axis=-1).astype(jnp.int32)  # (K+1,)
+    p = jax.nn.softmax(
+        logits_r.astype(jnp.float32) / jnp.maximum(temp, 1e-6), axis=-1
+    )  # (K+1, V)
+
+    key, sub = jax.random.split(jax.random.wrap_key_data(kd))
+    k_u, k_r = jax.random.split(sub)
+    u = jax.random.uniform(k_u, (k,))
+
+    p_d = p[ar, d_r]  # P_{i-1}(d_i)
+    q_d = q_r[ar, d_r]  # q_{i-1}(d_i)
+    acc = jnp.where(temp > 0.0, u * q_d < p_d, greedy_tok[:k] == d_r)
+    acc = jnp.logical_and(acc, ar < kr)
+    m = jnp.cumprod(acc.astype(jnp.int32)).sum()  # accepted prefix length
+
+    p_m = p[m]  # target dist after the accepted prefix
+    q_m = q_r[jnp.minimum(m, k - 1)]  # draft dist of the REJECTED position
+    resid = jnp.maximum(p_m - q_m, 0.0)
+    resid = jnp.where(resid.sum() > 0.0, resid, p_m)  # numerical guard
+    full = m == jnp.minimum(kr, k)  # window exhausted, no rejection event
+    dist = jnp.where(full, p_m, resid)
+    drawn = jax.random.categorical(k_r, jnp.log(dist + 1e-30)).astype(jnp.int32)
+    t_new = jnp.where(temp > 0.0, drawn, greedy_tok[m])
+    return jax.random.key_data(key), m, t_new
+
+
+def verify_tail(key_data, logits, q_probs, proposals, temps, k_row):
+    """Batched accept/resample over a verification chunk.
+
+    key_data: (B, 2) uint32, logits: (B, K+1, V) target logits over
+    [t0, d_1..d_K], q_probs: (B, K, V) draft probs, proposals: (B, K),
+    temps: (B,), k_row: (B,) per-row speculation window.
+
+    Returns (new key_data, m (B,) accepted counts, t_new (B,) the
+    correction/bonus token, out_tokens (B, K+1) the committed-token matrix
+    [d_1..d_m, t_new, <t_new fill>]).
+    """
+    key_data, m, t_new = jax.vmap(_row_verify)(
+        key_data, logits, q_probs, proposals, temps, k_row
+    )
+    k = proposals.shape[1]
+    idx = jnp.arange(k + 1)[None, :]
+    padded = jnp.concatenate([proposals, proposals[:, -1:]], axis=1)
+    out_tokens = jnp.where(idx < m[:, None], padded, t_new[:, None])
+    return key_data, m, t_new, out_tokens

@@ -216,6 +216,26 @@ class TestPagedDenseEquivalence:
 
         assert run(True) == run(False)
 
+    @pytest.mark.parametrize("plen,chunk,why", [
+        (24, 24, "prompt exactly one prefill chunk"),
+        (48, 24, "prompt exactly two prefill chunks"),
+        (32, 24, "prompt a multiple of block_size (16), mid-chunk"),
+        (16, 24, "prompt exactly one block, shorter than a chunk"),
+        (7, 24, "prompt shorter than one chunk and one block"),
+    ])
+    def test_chunk_boundary_prompts_match_dense(self, tiny_lm, plen, chunk,
+                                                why):
+        """Chunked-prefill boundary cases: a prompt landing exactly on the
+        prefill-chunk edge, exactly on a block_size multiple, or inside a
+        single chunk must all produce the dense-slab greedy tokens (the
+        last chunk's nvalid/causality masking is where off-by-ones live)."""
+        model, params = tiny_lm
+        rng = np.random.default_rng(20 + plen)
+        p = rng.integers(2, 200, size=plen)
+        dense = _solo(model, params, p, 6, paged=False)
+        paged = _solo(model, params, p, 6, paged=True, prefill_chunk=chunk)
+        assert dense == paged, why
+
     def test_chunked_prefill_compiles_once(self, tiny_lm):
         """The fixed-shape chunk step compiles exactly once regardless of
         prompt-length mix (the dense path compiles once per bucket)."""
@@ -250,13 +270,14 @@ class TestBlockPool:
         for uid, p in zip(uids, prompts):
             assert out[uid] == _solo(model, params, p, 13)
 
-    def test_oversized_request_raises(self, tiny_lm):
+    def test_oversized_request_rejected_at_submit(self, tiny_lm):
+        """A worst case exceeding the TOTAL pool can never be admitted;
+        submit() fails fast instead of letting it stall the FIFO head."""
         model, params = tiny_lm
         eng = ServingEngine(model, params, max_batch=1, max_len=64,
                             paged=True, num_blocks=1)
-        eng.submit(np.arange(2, 22), max_new_tokens=13)  # needs 3 blocks
-        with pytest.raises(RuntimeError, match="blocks"):
-            eng.run()
+        with pytest.raises(ValueError, match="blocks"):
+            eng.submit(np.arange(2, 22), max_new_tokens=13)  # needs 3 blocks
 
     def test_blocks_freed_and_reused_after_completion(self, tiny_lm):
         model, params = tiny_lm

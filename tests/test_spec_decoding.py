@@ -1,0 +1,352 @@
+"""Self-speculative decoding tests: greedy token-equivalence with plain
+decoding on both cache layouts (across block/chunk boundaries and under
+continuous batching), the statistical guarantee that temperature>0
+accept/resample preserves the target distribution, device-side EOS inside a
+committed chunk, dynamic per-row windows, acceptance accounting, the
+one-D2H-per-step contract, draft-pool lockstep reservation, the submit()
+admission bugfixes, and the kvcache length-rollback API."""
+
+from unittest import mock
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import small_lm
+from repro.models import build_model
+from repro.serving.engine import ServingEngine
+from repro.serving.kvcache import BlockAllocator, PagedKVCache
+from repro.serving.spec import SpecConfig
+from repro.serving.spec.verify import verify_tail
+
+VOCAB = 256
+
+
+@pytest.fixture(scope="module")
+def tiny_lm():
+    cfg = small_lm(name="tiny-spec", vocab_size=VOCAB, num_layers=2,
+                   d_model=64, d_ff=96, num_heads=4)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return model, params
+
+
+@pytest.fixture(scope="module")
+def draft_params(tiny_lm):
+    """A nearby-but-different draft: perturbed weights stand in for a
+    higher-ratio NSVD twin (same pytree structure, different logits —
+    exercises real rejections without a calibration pass)."""
+    _, params = tiny_lm
+    k = jax.random.key(99)
+    return jax.tree.map(
+        lambda x: x + 0.02 * jax.random.normal(k, x.shape, x.dtype)
+        if x.ndim >= 2 else x,
+        params,
+    )
+
+
+def _solo(model, params, prompt, max_new, max_len=64, **kw):
+    eng = ServingEngine(model, params, max_batch=1, max_len=max_len, **kw)
+    uid = eng.submit(prompt, max_new_tokens=max_new)
+    return eng.run()[uid]
+
+
+def _spec(draft, k=3, **kw):
+    return SpecConfig(draft_params=draft, k=k, **kw)
+
+
+# ------------------------------------------------------ greedy equivalence
+
+
+class TestSpecGreedyEquivalence:
+    @pytest.mark.parametrize("paged", [True, False])
+    def test_identical_across_block_and_chunk_boundaries(self, tiny_lm,
+                                                         draft_params, paged):
+        """Speculative greedy decode must be token-identical to plain greedy
+        decode on both layouts, for prompt lengths straddling block (16)
+        and prefill-chunk boundaries."""
+        model, params = tiny_lm
+        rng = np.random.default_rng(1)
+        for plen in (1, 15, 16, 17, 31, 33):
+            p = rng.integers(2, 200, size=plen)
+            plain = _solo(model, params, p, 8, paged=paged)
+            spec = _solo(model, params, p, 8, paged=paged, prefill_chunk=16,
+                         spec_config=_spec(draft_params))
+            assert plain == spec, f"plen={plen} paged={paged}"
+
+    @pytest.mark.parametrize("paged", [True, False])
+    def test_batched_mid_flight_admission_identical(self, tiny_lm,
+                                                    draft_params, paged):
+        """Continuous batching with staggered finishes: every request's
+        speculative greedy output matches its solo plain-decode run (paged
+        chunked prefill AND dense bucketed admission feed the draft)."""
+        model, params = tiny_lm
+        rng = np.random.default_rng(2)
+        prompts = [rng.integers(2, 200, size=n) for n in (6, 18, 7, 5)]
+        lens = [9, 3, 6, 4]
+        eng = ServingEngine(model, params, max_batch=2, max_len=64,
+                            paged=paged, spec_config=_spec(draft_params))
+        uids = [eng.submit(p, max_new_tokens=m) for p, m in zip(prompts, lens)]
+        out = eng.run()
+        for uid, p, m in zip(uids, prompts, lens):
+            assert out[uid] == _solo(model, params, p, m, paged=paged), uid
+
+    def test_perfect_draft_accepts_everything(self, tiny_lm):
+        """Draft == target: every greedy proposal matches, so each step
+        commits k+1 tokens and the acceptance rate is exactly 1."""
+        model, params = tiny_lm
+        rng = np.random.default_rng(3)
+        p = rng.integers(2, 200, size=6)
+        eng = ServingEngine(model, params, max_batch=1, max_len=64,
+                            spec_config=_spec(params, k=3))
+        uid = eng.submit(p, max_new_tokens=9)
+        out = eng.run()
+        assert out[uid] == _solo(model, params, p, 9)
+        ss = eng.spec_stats()
+        assert ss["acceptance_rate"] == 1.0
+        assert ss["committed_per_row_step"] == 4.0  # k+1 per step
+
+
+# ------------------------------------------------- distribution preservation
+
+
+class TestSpecDistribution:
+    def test_accept_resample_preserves_target_distribution(self):
+        """Leviathan guarantee, pinned statistically: the marginal of the
+        FIRST committed token equals the target distribution P0 exactly,
+        whatever draft distribution the proposals came from."""
+        V, K, N = 8, 2, 20000
+        rng = np.random.default_rng(0)
+        temp = 1.3
+        t_logits = jnp.asarray(rng.standard_normal((1, K + 1, V)) * 1.5,
+                               jnp.float32)
+        q_logits = rng.standard_normal((K, V)) * 1.5
+        q = np.exp(q_logits / temp)
+        q /= q.sum(-1, keepdims=True)
+        q_dev = jnp.asarray(q[None], jnp.float32)
+        temps = jnp.asarray([temp])
+        k_row = jnp.asarray([K])
+
+        def one(key):
+            kq, kv = jax.random.split(key)
+            props = jax.vmap(jax.random.categorical)(
+                jax.random.split(kq, K), jnp.asarray(q_logits) / temp
+            )[None].astype(jnp.int32)
+            kd = jax.random.key_data(kv)[None]
+            _, _, _, out = verify_tail(kd, t_logits, q_dev, props, temps,
+                                       k_row)
+            return out[0, 0]
+
+        toks = jax.vmap(one)(jax.random.split(jax.random.key(42), N))
+        emp = np.bincount(np.asarray(toks), minlength=V) / N
+        p0 = np.asarray(jax.nn.softmax(t_logits[0, 0] / temp))
+        tv = 0.5 * np.abs(emp - p0).sum()
+        assert tv < 0.03, f"total-variation distance {tv:.4f}"
+
+    def test_greedy_rows_exact_prefix_match(self):
+        """Greedy verification is deterministic: accept exactly the longest
+        argmax-matching prefix, then commit the argmax correction."""
+        V, K = 6, 3
+        logits = np.full((1, K + 1, V), -5.0, np.float32)
+        for i, t in enumerate((2, 4, 1, 3)):  # target argmax path
+            logits[0, i, t] = 5.0
+        proposals = jnp.asarray([[2, 4, 0]], jnp.int32)  # diverges at i=3
+        kd = jax.random.key_data(jax.random.split(jax.random.key(0), 1))
+        _, m, t_new, out = verify_tail(
+            kd, jnp.asarray(logits), jnp.ones((1, K, V)) / V, proposals,
+            jnp.asarray([0.0]), jnp.asarray([K]),
+        )
+        assert int(m[0]) == 2
+        assert int(t_new[0]) == 1  # argmax after the accepted prefix
+        assert np.asarray(out)[0, :3].tolist() == [2, 4, 1]
+
+    def test_temperature_sampling_reproducible_and_in_vocab(self, tiny_lm,
+                                                            draft_params):
+        model, params = tiny_lm
+        rng = np.random.default_rng(4)
+        prompts = [rng.integers(2, 200, size=6) for _ in range(3)]
+
+        def once():
+            eng = ServingEngine(model, params, max_batch=2, max_len=64,
+                                seed=9, spec_config=_spec(draft_params))
+            uids = [eng.submit(p, max_new_tokens=6, temperature=0.7)
+                    for p in prompts]
+            out = eng.run()
+            return [out[u] for u in uids]
+
+        a, b = once(), once()
+        assert a == b
+        assert all(0 <= t < VOCAB for toks in a for t in toks)
+
+
+# ----------------------------------------------------- EOS + dynamic windows
+
+
+class TestSpecEosAndWindows:
+    @pytest.mark.parametrize("paged", [True, False])
+    def test_eos_inside_committed_chunk_truncates(self, tiny_lm,
+                                                  draft_params, paged):
+        """An EOS anywhere in a step's committed prefix must truncate the
+        output at (and including) the EOS and stop the row — identical to
+        plain decoding with the same eos id."""
+        model, params = tiny_lm
+        rng = np.random.default_rng(5)
+        p = rng.integers(2, 200, size=7)
+        full = _solo(model, params, p, 8, paged=paged)
+        eos = full[2]
+        spec = _solo(model, params, p, 8, paged=paged,
+                     spec_config=_spec(draft_params), eos_id=eos)
+        assert spec == full[:3]
+
+    def test_dynamic_k_adapts_within_bounds_and_stays_exact(self, tiny_lm,
+                                                            draft_params):
+        model, params = tiny_lm
+        rng = np.random.default_rng(6)
+        prompts = [rng.integers(2, 200, size=n) for n in (6, 9)]
+        eng = ServingEngine(model, params, max_batch=2, max_len=64,
+                            spec_config=_spec(draft_params, k=4,
+                                              dynamic_k=True))
+        uids = [eng.submit(p, max_new_tokens=10) for p in prompts]
+        out = eng.run()
+        assert (eng._k_row >= 1).all() and (eng._k_row <= 4).all()
+        for uid, p in zip(uids, prompts):
+            assert out[uid] == _solo(model, params, p, 10), uid
+
+    def test_acceptance_accounting_per_request(self, tiny_lm, draft_params):
+        model, params = tiny_lm
+        rng = np.random.default_rng(7)
+        eng = ServingEngine(model, params, max_batch=1, max_len=64,
+                            spec_config=_spec(draft_params, k=3))
+        eng.submit(rng.integers(2, 200, size=6), max_new_tokens=8)
+        eng._admit()
+        req = next(r for r in eng.slots if r is not None)
+        eng.run()
+        assert req.spec_proposed > 0
+        assert 0 <= req.spec_accepted <= req.spec_proposed
+        assert req.acceptance_rate == req.spec_accepted / req.spec_proposed
+        ss = eng.spec_stats()
+        assert ss["proposed"] == req.spec_proposed
+        assert ss["accepted"] == req.spec_accepted
+        # Every generated token beyond each request's admission token was
+        # committed by a spec step.
+        assert ss["committed"] == len(req.generated) - 1
+
+
+# ------------------------------------------------------- engine contracts
+
+
+class TestSpecEngineContracts:
+    def test_exactly_one_device_to_host_transfer_per_step(self, tiny_lm,
+                                                          draft_params):
+        """Draft + verify are two jitted calls but ONE packed D2H."""
+        model, params = tiny_lm
+        rng = np.random.default_rng(8)
+        eng = ServingEngine(model, params, max_batch=2, max_len=64,
+                            spec_config=_spec(draft_params))
+        for _ in range(2):
+            eng.submit(rng.integers(2, 200, size=6), max_new_tokens=12)
+        eng._admit()
+
+        real = jax.device_get
+        calls = []
+
+        def counting(x):
+            calls.append(1)
+            return real(x)
+
+        with mock.patch.object(jax, "device_get", side_effect=counting):
+            for _ in range(3):
+                eng.step()
+        assert len(calls) == 3
+
+    def test_draft_pool_reserved_and_freed_in_lockstep(self, tiny_lm,
+                                                       draft_params):
+        model, params = tiny_lm
+        rng = np.random.default_rng(9)
+        eng = ServingEngine(model, params, max_batch=2, max_len=64,
+                            spec_config=_spec(draft_params))
+        eng.submit(rng.integers(2, 200, size=9), max_new_tokens=4)
+        eng._admit()
+        assert eng.draft.kv.alloc.in_use() == eng.kv.alloc.in_use() > 0
+        eng.run()
+        assert eng.kv.alloc.in_use() == 0
+        assert eng.draft.kv.alloc.in_use() == 0
+        assert (eng.draft.kv.table_np == -1).all()
+
+    def test_spec_rejects_non_attention_models(self):
+        from repro.configs import get_config
+
+        cfg = get_config("rwkv6-1.6b").reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        with pytest.raises(ValueError, match="speculative"):
+            ServingEngine(model, params, max_batch=1, max_len=64,
+                          spec_config=_spec(params))
+
+    def test_spec_config_rejects_bad_k(self, tiny_lm):
+        _, params = tiny_lm
+        with pytest.raises(ValueError, match="k must be"):
+            SpecConfig(draft_params=params, k=0)
+
+
+# ------------------------------------------------- submit() admission fixes
+
+
+class TestSubmitAdmissionFixes:
+    def test_rejects_nonpositive_max_new_tokens(self, tiny_lm):
+        model, params = tiny_lm
+        eng = ServingEngine(model, params, max_batch=1, max_len=64)
+        for bad in (0, -3):
+            with pytest.raises(ValueError, match="max_new_tokens"):
+                eng.submit(np.arange(2, 8), max_new_tokens=bad)
+
+    def test_rejects_worst_case_exceeding_total_pool(self, tiny_lm):
+        """A request whose worst-case reservation exceeds the WHOLE pool
+        could never be admitted — it must fail at submit() instead of
+        parking at the FIFO head and stalling admission forever."""
+        model, params = tiny_lm
+        eng = ServingEngine(model, params, max_batch=1, max_len=64,
+                            paged=True, num_blocks=1)
+        with pytest.raises(ValueError, match="blocks"):
+            eng.submit(np.arange(2, 22), max_new_tokens=13)  # needs 3 blocks
+
+    def test_pool_sized_request_still_admits(self, tiny_lm):
+        model, params = tiny_lm
+        eng = ServingEngine(model, params, max_batch=1, max_len=64,
+                            paged=True, num_blocks=3)
+        uid = eng.submit(np.arange(2, 22), max_new_tokens=13)
+        out = eng.run()
+        assert len(out[uid]) == 13
+
+
+# --------------------------------------------------- cache rollback API
+
+
+class TestCacheRollbackAPI:
+    def test_allocator_release_suffix(self):
+        a = BlockAllocator(8)
+        a.alloc("r", 5)
+        assert a.release_suffix("r", 2) == [2, 3, 4]
+        assert a.owned_by("r") == [0, 1]
+        assert a.free_blocks() == 6
+        assert a.release_suffix("r", 2) == []  # idempotent at the bound
+        assert a.release_suffix("r", 0) == [0, 1]
+        assert a.owned_by("r") == [] and a.in_use() == 0
+
+    def test_paged_rollback_trims_table_and_blocks(self, tiny_lm):
+        model, _ = tiny_lm
+        kv = PagedKVCache(model, max_batch=2, max_len=64, block_size=16,
+                          num_blocks=4)
+        assert kv.reserve(0, 50)  # 4 blocks
+        freed = kv.rollback(0, 17)  # 2 blocks cover 17 tokens
+        assert len(freed) == 2
+        assert (kv.table_np[0, :2] >= 0).all()
+        assert (kv.table_np[0, 2:] == -1).all()
+        assert kv.alloc.free_blocks() == 2
+        # The freed suffix is immediately reusable by another slot.
+        assert kv.reserve(1, 20)
+        # Rolling back to zero tokens evicts the row entirely.
+        assert len(kv.rollback(0, 0)) == 2
+        assert (kv.table_np[0] == -1).all()
+        assert kv.alloc.owned_by(0) == []
