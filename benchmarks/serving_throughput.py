@@ -16,11 +16,16 @@ target verifies them in one chunk call (acceptance rate reported per row).
 
 Besides the human-readable table, APPENDS a run entry to
 ``BENCH_serving.json`` at the repo root: each entry is stamped with the git
-SHA and a hash of the benchmark config, so the cross-PR serving perf
-trajectory is machine-readable (history is never clobbered; older
-single-entry schema-1 files are wrapped into the history on first touch).
+SHA, a hash of the benchmark config, the serving MESH shape (dp, tp,
+devices) and per-device cache bytes — so the cross-PR serving perf
+trajectory stays machine-readable and HBM-truthful once pools shard over a
+mesh (history is never clobbered; schema-1 single entries and schema-2
+mesh-less entries are auto-migrated on first touch).
 
-    PYTHONPATH=src:. python -m benchmarks.serving_throughput
+    PYTHONPATH=src:. python -m benchmarks.serving_throughput [--dp N --tp M]
+
+Sharded runs on CPU need XLA_FLAGS=--xla_force_host_platform_device_count
+>= dp*tp, or the mesh falls back to (1, 1) with a warning.
 """
 
 from __future__ import annotations
@@ -38,7 +43,23 @@ import numpy as np
 from .common import get_grams, save_table, train_small_lm
 
 BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json")
-BENCH_SCHEMA = 2
+BENCH_SCHEMA = 3
+
+_UNSHARDED_MESH = {"dp": 1, "tp": 1, "devices": 1}
+
+
+def _migrate_entry(entry: Dict) -> Dict:
+    """Schema 2 -> 3: pre-mesh entries ran single-device, so stamp the
+    (1, 1) mesh and per-device bytes == global bytes (the identity the
+    sharded engine reduces to on one device)."""
+    if "mesh" not in entry:
+        entry = dict(entry, mesh=dict(_UNSHARDED_MESH))
+        entry["rows"] = [
+            dict(r, per_device_cache_bytes=r.get("cache_hbm_bytes"))
+            if "per_device_cache_bytes" not in r else r
+            for r in entry.get("rows", [])
+        ]
+    return entry
 
 
 def _git_sha() -> str:
@@ -71,6 +92,7 @@ def append_history(entry: Dict, path: str = BENCH_PATH) -> Dict:
                 history = [prev]
         except (json.JSONDecodeError, OSError):
             history = []
+    history = [_migrate_entry(e) for e in history]
     history.append(entry)
     doc = {
         "schema": BENCH_SCHEMA,
@@ -91,14 +113,15 @@ def _make_prompts(n: int, vocab: int, seed: int) -> List[np.ndarray]:
 def drive(model, params, prompts, label: str, max_batch: int, max_len: int,
           max_new: int, warmup: int = 1, paged: bool = False,
           num_blocks=None, block_size: int = 16,
-          spec_config=None) -> Dict[str, float]:
+          spec_config=None, parallelism=None) -> Dict[str, float]:
     from repro.serving.engine import ServingEngine
 
     def make_engine():
         return ServingEngine(model, params, max_batch=max_batch,
                              max_len=max_len, paged=paged,
                              num_blocks=num_blocks, block_size=block_size,
-                             spec_config=spec_config)
+                             spec_config=spec_config,
+                             parallelism=parallelism)
 
     # Warmup pass triggers all jit compilations (prefill + decode) so the
     # timed pass measures steady-state serving.
@@ -130,11 +153,15 @@ def drive(model, params, prompts, label: str, max_batch: int, max_len: int,
         "step_p99_ms": s.get("step_p99_s", 0.0) * 1e3,
         "d2h_per_step": eng.decode_transfers / max(1, s.get("steps", 1)),
         "cache_hbm_bytes": cs["cache_hbm_bytes"],
+        "per_device_cache_bytes": cs["per_device_cache_hbm_bytes"],
         "cache_tokens_capacity": cs["tokens_capacity"],
+        "mesh": cs["mesh"],
     }
     if paged:
         row["blocks_peak"] = cs["blocks_peak"]
         row["block_size"] = cs["block_size"]
+        if cs.get("blocks_peak_by_shard"):
+            row["blocks_peak_by_shard"] = cs["blocks_peak_by_shard"]
     extra = ""
     if spec_config is not None:
         ss = eng.spec_stats()
@@ -153,10 +180,25 @@ def drive(model, params, prompts, label: str, max_batch: int, max_len: int,
 
 def run(model_name: str = "small-llama", requests: int = 24, max_new: int = 24,
         max_batch: int = 8, max_len: int = 256, ratio: float = 0.2,
-        block_size: int = 16, draft_ratio: float = 0.6, spec_k: int = 4):
+        block_size: int = 16, draft_ratio: float = 0.6, spec_k: int = 4,
+        dp: int = 1, tp: int = 1):
     from repro.core import CompressionConfig, build_plan, compress_params
     from repro.models.api import build_draft_params
     from repro.serving.spec import SpecConfig
+
+    parallelism = None
+    mesh_meta = dict(_UNSHARDED_MESH)
+    if dp * tp > 1:
+        from repro.launch.mesh import make_serving_mesh
+        from repro.parallel.sharding import make_parallelism
+
+        mesh = make_serving_mesh(dp, tp)
+        parallelism = make_parallelism(mesh)
+        mesh_meta = {"dp": int(mesh.shape["data"]),
+                     "tp": int(mesh.shape["model"]),
+                     "devices": int(mesh.size)}
+        print(f"  serving mesh: dp={mesh_meta['dp']} tp={mesh_meta['tp']} "
+              f"({mesh_meta['devices']} device(s))")
 
     model, params, _ = train_small_lm(model_name)
     prompts = _make_prompts(requests, model.cfg.vocab_size, seed=0)
@@ -179,10 +221,10 @@ def run(model_name: str = "small-llama", requests: int = 24, max_new: int = 24,
     rows = []
     for label, p in (("dense", params), (nsvd, cparams)):
         rows.append(drive(model, p, prompts, label, max_batch, max_len,
-                          max_new, paged=False))
+                          max_new, paged=False, parallelism=parallelism))
         rows.append(drive(model, p, prompts, label, max_batch, max_len,
                           max_new, paged=True, num_blocks=num_blocks,
-                          block_size=block_size))
+                          block_size=block_size, parallelism=parallelism))
 
     # target vs target+spec: the NSVD target verifies proposals from its
     # own higher-ratio twin (same Grams, one extra training-free pass).
@@ -191,12 +233,14 @@ def run(model_name: str = "small-llama", requests: int = 24, max_new: int = 24,
         model, cparams, prompts, f"{nsvd}+spec", max_batch, max_len, max_new,
         paged=True, num_blocks=num_blocks, block_size=block_size,
         spec_config=SpecConfig(draft_params=draft_params, k=spec_k),
+        parallelism=parallelism,
     ))
 
     meta = {"model": model_name, "ratio": ratio, "draft_ratio": draft_ratio,
             "spec_k": spec_k, "max_batch": max_batch, "max_len": max_len,
             "max_new": max_new, "requests": requests,
-            "block_size": block_size, "num_blocks": num_blocks}
+            "block_size": block_size, "num_blocks": num_blocks,
+            "dp": mesh_meta["dp"], "tp": mesh_meta["tp"]}
     save_table("serving_throughput", rows, meta)
 
     by = {(r["label"], r["cache"]): r for r in rows}
@@ -207,9 +251,12 @@ def run(model_name: str = "small-llama", requests: int = 24, max_new: int = 24,
         "git_sha": _git_sha(),
         "config_hash": _config_hash(meta),
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "mesh": mesh_meta,
         "meta": meta,
         "rows": rows,
         "summary": {
+            "per_device_cache_bytes_paged":
+                by[(nsvd, "paged")]["per_device_cache_bytes"],
             "tok_per_s_dense_slab": by[(nsvd, "dense")]["tok_per_s"],
             "tok_per_s_paged": by[(nsvd, "paged")]["tok_per_s"],
             "tok_per_s_spec": spec_row["tok_per_s"],
@@ -241,10 +288,14 @@ def main():
     ap.add_argument("--draft-ratio", type=float, default=0.6,
                     help="compression ratio of the self-speculative draft")
     ap.add_argument("--spec-k", type=int, default=4)
+    ap.add_argument("--dp", type=int, default=1,
+                    help="data-parallel mesh axis (slots + KV pools)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel mesh axis (weights)")
     args = ap.parse_args()
     run(args.model, args.requests, args.max_new, args.max_batch,
         args.max_len, args.ratio, args.block_size, args.draft_ratio,
-        args.spec_k)
+        args.spec_k, args.dp, args.tp)
 
 
 if __name__ == "__main__":

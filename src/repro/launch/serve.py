@@ -1,4 +1,20 @@
-"""Serving launcher: load (or compress) a model and run batched requests."""
+"""Serving launcher: load (or compress) a model and run batched requests.
+
+Mesh-sharded serving (``--dp``/``--tp``): the engine runs its decode /
+chunked-prefill / speculative roots SPMD over a (dp, tp) mesh — weights
+tensor-parallel, slots + KV pools data-parallel.  A (1, 1) mesh (or no
+flags) is bit-for-bit the single-device engine.  Examples:
+
+    # 4-chip host: 2-way data x 2-way tensor parallel, paged cache
+    python -m repro.launch.serve --dp 2 --tp 2 --max-batch 8
+
+    # emulate the same on CPU
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        python -m repro.launch.serve --dp 2 --tp 2 --max-batch 8
+
+``--max-batch`` should be a multiple of ``--dp`` (otherwise per-slot state
+stays replicated and only the weights shard); ``--num-blocks`` rounds up
+to a multiple of ``--dp`` so every shard holds an equal sub-pool."""
 
 from __future__ import annotations
 
@@ -40,6 +56,18 @@ def main():
                     help="speculation window: draft tokens per step")
     ap.add_argument("--spec-dynamic-k", action="store_true",
                     help="per-row adaptive speculation windows")
+    ap.add_argument("--dp", type=int, default=1,
+                    help="data-parallel mesh axis: slots, per-slot state "
+                         "and KV pools shard over dp devices (max-batch "
+                         "should divide it)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel mesh axis: weights shard over tp "
+                         "devices (factored NSVD layers all-reduce rank-k "
+                         "partials, so TP collectives shrink with "
+                         "compression). dp*tp must fit jax.device_count() "
+                         "or the mesh falls back to (1,1) with a warning; "
+                         "use XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N to emulate on CPU")
     args = ap.parse_args()
 
     if args.arch.startswith("small-"):
@@ -83,6 +111,16 @@ def main():
               f"k={args.spec_k}"
               + (" (dynamic per-row)" if args.spec_dynamic_k else ""))
 
+    parallelism = None
+    if args.dp * args.tp > 1:
+        from repro.launch.mesh import make_serving_mesh
+        from repro.parallel.sharding import make_parallelism
+
+        mesh = make_serving_mesh(args.dp, args.tp)
+        parallelism = make_parallelism(mesh)
+        print(f"serving mesh: dp={mesh.shape['data']} "
+              f"tp={mesh.shape['model']} ({mesh.size} device(s))")
+
     eng = ServingEngine(model, params, max_batch=args.max_batch,
                         max_len=args.max_len, seed=args.seed,
                         paged={"auto": None, "on": True, "off": False}[args.paged],
@@ -90,7 +128,8 @@ def main():
                         num_blocks=args.num_blocks,
                         prefill_chunk=args.prefill_chunk,
                         eos_id=args.eos,
-                        spec_config=spec_config)
+                        spec_config=spec_config,
+                        parallelism=parallelism)
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
         eng.submit(rng.integers(2, cfg.vocab_size // 2, size=8),
@@ -110,7 +149,13 @@ def main():
     cs = eng.cache_stats()
     extra = (f"  peak blocks={cs['blocks_peak']}/{cs['num_blocks']}"
              if cs["layout"] == "paged" else "")
-    print(f"cache[{cs['layout']}]: {cs['cache_hbm_bytes']/1e6:.2f}MB, "
+    if cs.get("blocks_peak_by_shard"):
+        extra += f"  per-shard peaks={cs['blocks_peak_by_shard']}"
+    mesh_s = cs["mesh"]
+    per_dev = (f" ({cs['per_device_cache_hbm_bytes']/1e6:.2f}MB/device, "
+               f"dp={mesh_s['dp']} tp={mesh_s['tp']})"
+               if mesh_s["devices"] > 1 else "")
+    print(f"cache[{cs['layout']}]: {cs['cache_hbm_bytes']/1e6:.2f}MB{per_dev}, "
           f"capacity {cs['tokens_capacity']} tok{extra}")
     ss = eng.spec_stats()
     if ss:

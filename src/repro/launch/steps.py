@@ -599,6 +599,121 @@ def named(tree_pspec, mesh):
     )
 
 
+# ------------------------------------------------- serving root shardings
+#
+# ServingShardings pins EXPLICIT in/out NamedShardings for every serving
+# jit root over a DP x TP serving mesh (launch/mesh.make_serving_mesh):
+#
+#   * weights: TP-sharded via the existing param_pspecs (factored NSVD
+#     layers all-reduce rank-k partials instead of d_model — the
+#     compression shrinks the TP collective),
+#   * per-slot state (last_token, cache_len, key_data, active flags) and
+#     every host-built (B, ...) input (temps, eos, token chunks, block
+#     tables): data-parallel over slots,
+#   * the cache: dense slab over its batch dim, paged pools over their
+#     block dim (models.api.serving_cache_pspecs), replicated over TP.
+#
+# Explicitness matters twice: donated buffers alias only when the donated
+# input's sharding equals its output's (both pinned here, keeping the
+# engine's in-place-cache contract), and unpinned outputs would let GSPMD
+# pick a different layout than the next step's input — a silent recompile
+# per step.  On a (1, 1) mesh every spec below is a no-op layout, so the
+# sharded engine reproduces the single-device path bit-for-bit.
+
+def _dp_entry(par: Parallelism, max_batch: int):
+    """Spec entry for slot-indexed dims; None when slots don't divide DP
+    (jit boundaries need exact divisibility — the engine then also keeps
+    its block pools unsharded so host bookkeeping matches the layout)."""
+    n = _axis_size(par.mesh, par.dp)
+    return par.dp if max_batch % n == 0 else None
+
+
+class ServingShardings:
+    """NamedSharding bundles for the serving engine's jit roots.
+
+    ``cache`` is the layout-aware cache sharding tree (dense slab or paged
+    pools — models.api.serving_cache_pspecs); the draft cache shares it by
+    construction (same arch, same pool geometry)."""
+
+    def __init__(self, par: Parallelism, params, cache_shardings,
+                 max_batch: int):
+        mesh = par.mesh
+        dp = _dp_entry(par, max_batch)
+        ns = lambda *spec: NamedSharding(mesh, P(*spec))  # noqa: E731
+        self.par = par
+        self.rep = ns()              # scalars / replicated host inputs
+        self.row = ns(dp)            # (B,) per-slot state
+        self.mat = ns(dp, None)      # (B, X): keys, tables, token chunks
+        self.mat3 = ns(dp, None, None)  # (B, K, V) draft probs
+        self.params = self.tree(params)
+        self.cache = cache_shardings  # NamedSharding tree (layout-aware)
+
+    def tree(self, shapes):
+        """Param shardings for a (possibly factored/compressed) params
+        pytree: the existing param_pspecs rules, sanitized against the
+        actual leaf shapes (jit boundaries need exact divisibility)."""
+        specs = sanitize_pspecs(param_pspecs(shapes), shapes, self.par.mesh)
+        return named(specs, self.par.mesh)
+
+    # Per-root (in_shardings, out_shardings); argument orders mirror the
+    # step builders above.  ``params`` defaults to the target's tree — spec
+    # roots pass the draft's (factored leaves shard identically by rule,
+    # but shapes differ, so sanitization must see the right tree).
+
+    def decode(self, params=None):
+        p = params or self.params
+        return ((p, self.cache, self.row, self.row, self.mat, self.row,
+                 self.row, self.row, self.row),
+                (self.row, self.cache, self.row, self.mat, self.row))
+
+    def paged_decode(self, params=None):
+        p = params or self.params
+        return ((p, self.cache, self.mat, self.row, self.row, self.mat,
+                 self.row, self.row, self.row, self.row),
+                (self.row, self.cache, self.row, self.mat, self.row))
+
+    def paged_prefill_chunk(self):
+        return ((self.params, self.cache, self.mat, self.mat, self.row,
+                 self.row, self.row, self.row, self.row, self.mat, self.row,
+                 self.row),
+                (self.row, self.cache, self.row, self.row, self.mat,
+                 self.row))
+
+    def prefill_admit(self, bucketed: bool = True):
+        """``bucketed=False`` (pad-sensitive archs): admission batches are
+        exact-length with rows=1, which cannot split over DP — the (R, ...)
+        admission inputs and the sampled-token output stay replicated while
+        cache/state keep their slot sharding (the scatter crosses shards
+        under GSPMD)."""
+        r = self.row if bucketed else self.rep
+        m = self.mat if bucketed else self.rep
+        return ((self.params, self.cache, m, r, r,
+                 self.row, self.row, self.mat, r, self.row),
+                (r, self.cache, self.row, self.row, self.mat,
+                 self.row))
+
+    def spec_draft(self, draft_params, paged: bool):
+        bt = self.mat if paged else None
+        return ((draft_params, self.cache, bt, self.row, self.row, self.mat,
+                 self.row, self.row, self.row),
+                (self.mat, self.mat3, self.cache, self.mat))
+
+    def spec_verify(self, paged: bool):
+        bt = self.mat if paged else None
+        return ((self.params, self.cache, bt, self.row, self.mat, self.mat3,
+                 self.row, self.mat, self.row, self.row, self.row, self.row,
+                 self.row),
+                (self.mat, self.cache, self.row, self.row, self.mat,
+                 self.row))
+
+    def draft_prefill_paged(self, draft_params):
+        return ((draft_params, self.cache, self.mat, self.mat, self.row),
+                self.cache)
+
+    def draft_prefill_dense(self, draft_params):
+        return ((draft_params, self.cache, self.mat, self.row), self.cache)
+
+
 def train_shardings(params_shape, par: Parallelism, batch_shapes, fsdp: bool = False):
     """(in_shardings, out_shardings) pspec trees for the train step."""
     p_specs = param_pspecs(params_shape, fsdp_axes=par.dp_axes if fsdp else None)

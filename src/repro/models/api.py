@@ -131,6 +131,101 @@ def cache_layout(model: Model) -> str:
     return "paged"
 
 
+# ------------------------------------------------- serving cache sharding
+#
+# The serving engine's mesh story (launch/steps.ServingShardings): weights
+# are TP-sharded over "model" via param_pspecs, while the decode cache is
+# DATA-parallel — the dense slab shards over its batch (slot) dim, paged
+# block pools over their block dim — and replicates over TP.  The functions
+# below find the right dim STRUCTURALLY (scanned layer stacks carry leading
+# repeat dims, so the axis is not fixed per leaf — and shape sniffing would
+# misfire when repeats equals the probed size) and emit the cache_layout-
+# aware PartitionSpec tree the engine plugs into its jit roots.
+
+
+def _grown_axes(tree_a: Any, tree_b: Any) -> Any:
+    """Per leaf: the single dim index whose size differs between the two
+    shape probes."""
+    return jax.tree.map(
+        lambda a, b: next(
+            i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y
+        ),
+        tree_a, tree_b,
+    )
+
+
+def paged_cache_block_axes(model: Model, num_blocks: int, block_size: int,
+                           kv_quant: bool = False) -> Any:
+    """Per-leaf block axis of the paged pools (eval_shape probe: grow
+    num_blocks by one and see which dim moved)."""
+    a = jax.eval_shape(lambda: model.init_paged_cache(
+        num_blocks, block_size, kv_quant=kv_quant))
+    b = jax.eval_shape(lambda: model.init_paged_cache(
+        num_blocks + 1, block_size, kv_quant=kv_quant))
+    return _grown_axes(a, b)
+
+
+def dense_cache_batch_axes(model: Model, max_batch: int, max_len: int,
+                           kv_quant: bool = False) -> Any:
+    """Per-leaf batch (slot) axis of the dense serving slab."""
+    a = jax.eval_shape(lambda: model.init_cache(
+        max_batch, max_len, kv_quant=kv_quant))
+    b = jax.eval_shape(lambda: model.init_cache(
+        max_batch + 1, max_len, kv_quant=kv_quant))
+    return _grown_axes(a, b)
+
+
+def serving_cache_pspecs(model: Model, par: Parallelism, *,
+                         max_batch: Optional[int] = None,
+                         max_len: Optional[int] = None,
+                         num_blocks: Optional[int] = None,
+                         block_size: Optional[int] = None,
+                         kv_quant: bool = False,
+                         axes: Any = None, shapes: Any = None) -> Any:
+    """cache_layout-aware PartitionSpec tree for the serving decode cache.
+
+    Pass (num_blocks, block_size) for the paged layout — block dim sharded
+    over the DP axes — or (max_batch, max_len) for the dense slab — batch
+    dim sharded over the DP axes.  Dims not divisible by the DP size stay
+    replicated (jit boundaries require exact divisibility), as does
+    everything on the TP axis: the cache is pure data-parallel state.
+
+    ``axes``/``shapes``: optional precomputed axis tree + cache (shape)
+    tree — callers that already probed (PagedKVCache keeps its block axes)
+    pass them to skip re-tracing the cache init."""
+    import numpy as _np
+    from jax.sharding import PartitionSpec as _P
+
+    if (num_blocks is None) == (max_batch is None):
+        raise ValueError(
+            "pass exactly one of num_blocks (paged) or max_batch (dense)"
+        )
+    if axes is None:
+        axes = (paged_cache_block_axes(model, num_blocks, block_size,
+                                       kv_quant=kv_quant)
+                if num_blocks is not None else
+                dense_cache_batch_axes(model, max_batch, max_len,
+                                       kv_quant=kv_quant))
+    if shapes is None:
+        shapes = jax.eval_shape(
+            (lambda: model.init_paged_cache(num_blocks, block_size,
+                                            kv_quant=kv_quant))
+            if num_blocks is not None else
+            (lambda: model.init_cache(max_batch, max_len,
+                                      kv_quant=kv_quant)))
+    dp_size = 1
+    if par.mesh is not None:
+        dp_size = int(_np.prod([par.mesh.shape[a] for a in par.dp_axes]))
+
+    def spec(leaf, ax):
+        entries = [None] * len(leaf.shape)
+        if par.mesh is not None and leaf.shape[ax] % dp_size == 0:
+            entries[ax] = par.dp
+        return _P(*entries)
+
+    return jax.tree.map(spec, shapes, axes)
+
+
 def prefill_pad_safe(model: Model) -> bool:
     """True when right-padding a prompt cannot change real positions'
     outputs, i.e. the serving engine may bucket prompt lengths.

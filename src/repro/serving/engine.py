@@ -61,6 +61,21 @@ token-identical to non-speculative decode, temperature>0 preserves the
 target distribution exactly.  Both caches' per-row lengths roll back to the
 committed prefix on device; a step is still exactly two jitted calls and
 ONE D2H transfer (the packed committed-token matrix).
+
+Mesh sharding (``parallelism=`` over a launch/mesh.make_serving_mesh DP x TP
+mesh): every jit root runs SPMD with explicit in/out NamedShardings
+(launch/steps.ServingShardings) — weights TP-sharded via the existing
+param_pspecs (factored NSVD layers all-reduce rank-k partials, not
+d_model), per-slot state and host-built (B, ...) inputs data-parallel over
+slots, the dense slab sharded over its batch dim and the paged block pools
+over their block dim with PER-SHARD block id ranges: slot s maps to DP
+shard s*dp/max_batch, its reservations come from that shard's range, and
+admission/free/defrag/rollback stay host-authoritative per shard
+(serving/kvcache).  The donation and one-D2H-per-step contracts are
+unchanged — sampled tokens leave via ONE sharded transfer, and a (1, 1)
+mesh reproduces the meshless single-device engine bit-for-bit (pinned by
+tests/test_sharded_serving.py).  When max_batch does not divide the DP
+size, slot/pool sharding falls back to replicated (weights stay TP).
 """
 
 from __future__ import annotations
@@ -83,6 +98,7 @@ from repro.launch.steps import (
     PREFILL_ADMIT_DONATE,
     SPEC_DRAFT_DONATE,
     SPEC_VERIFY_DONATE,
+    ServingShardings,
     make_decode_sample_step,
     make_dense_draft_prefill_step,
     make_paged_decode_step,
@@ -91,8 +107,16 @@ from repro.launch.steps import (
     make_prefill_admit_step,
     make_spec_draft_step,
     make_spec_verify_step,
+    named,
 )
-from repro.models.api import Model, cache_layout, prefill_pad_safe
+from repro.models.api import (
+    Model,
+    build_model,
+    cache_layout,
+    prefill_pad_safe,
+    serving_cache_pspecs,
+)
+from repro.parallel.sharding import Parallelism
 from repro.serving.kvcache import PagedKVCache
 from repro.serving.spec import DraftState, SpecConfig
 
@@ -143,7 +167,24 @@ class ServingEngine:
         eos_id: Optional[int] = None,
         kv_quant: bool = False,
         spec_config: Optional[SpecConfig] = None,
+        parallelism: Optional[Parallelism] = None,
     ):
+        par = (parallelism
+               if parallelism is not None and parallelism.active else None)
+        self.par = par
+        if par is not None:
+            # Rebuild the model facade against the mesh so its internal
+            # activation constraints (batch DP, logits TP) apply inside
+            # every root; params/caches are plain pytrees, so the rebuilt
+            # facade is interchangeable with the caller's.
+            model = build_model(model.cfg, par)
+            dp_size = int(np.prod([par.mesh.shape[a] for a in par.dp_axes]))
+            # Slots (and with them the paged pools' block ranges) shard
+            # over DP only when they divide it; otherwise per-slot state
+            # and the cache stay replicated while weights keep TP.
+            self.dp_shards = dp_size if max_batch % dp_size == 0 else 1
+        else:
+            self.dp_shards = 1
         self.model = model
         self.params = params
         self.max_batch = max_batch
@@ -191,53 +232,103 @@ class ServingEngine:
             self.kv = PagedKVCache(
                 model, max_batch, max_len, block_size=block_size,
                 num_blocks=num_blocks, kv_quant=kv_quant,
+                dp_shards=self.dp_shards, par=par,
             )
             self.prefill_chunk = prefill_chunk
-            self._decode = jax.jit(
-                make_paged_decode_step(model),
-                donate_argnums=PAGED_DECODE_DONATE,
+            self._sh = (ServingShardings(par, params, self.kv.shardings,
+                                         max_batch)
+                        if par is not None else None)
+            if par is not None:
+                self.params = params = jax.device_put(params,
+                                                      self._sh.params)
+            self._decode = self._jit(
+                make_paged_decode_step(model), PAGED_DECODE_DONATE,
+                self._sh.paged_decode() if self._sh else None,
             )
-            self._chunk_step = jax.jit(
-                make_paged_prefill_chunk_step(model),
-                donate_argnums=PAGED_PREFILL_DONATE,
+            self._chunk_step = self._jit(
+                make_paged_prefill_chunk_step(model), PAGED_PREFILL_DONATE,
+                self._sh.paged_prefill_chunk() if self._sh else None,
             )
         else:
             self.cache = model.init_cache(max_batch, max_len,
                                           kv_quant=kv_quant)
-            self._decode = jax.jit(
-                make_decode_sample_step(model), donate_argnums=DECODE_DONATE
+            self._sh = None
+            if par is not None:
+                cache_sh = named(
+                    serving_cache_pspecs(model, par, max_batch=max_batch,
+                                         max_len=max_len,
+                                         kv_quant=kv_quant,
+                                         shapes=self.cache),
+                    par.mesh,
+                )
+                self._sh = ServingShardings(par, params, cache_sh,
+                                            max_batch)
+                self.params = params = jax.device_put(params,
+                                                      self._sh.params)
+                self.cache = jax.device_put(self.cache, cache_sh)
+            self._decode = self._jit(
+                make_decode_sample_step(model), DECODE_DONATE,
+                self._sh.decode() if self._sh else None,
             )
-            self._prefill = jax.jit(
+            self._prefill = self._jit(
                 make_prefill_admit_step(model, max_len, kv_quant=kv_quant),
-                donate_argnums=PREFILL_ADMIT_DONATE,
+                PREFILL_ADMIT_DONATE,
+                (self._sh.prefill_admit(bucketed=self._bucketed)
+                 if self._sh else None),
             )
             self._buckets = self._make_buckets(bucket_min, max_len)
 
+        if self._sh is not None:
+            # Per-slot device state lives sharded from birth so the roots'
+            # donated buffers alias in place (resharding would copy).
+            self.cache_len = jax.device_put(self.cache_len, self._sh.row)
+            self.last_token = jax.device_put(self.last_token, self._sh.row)
+            self.key_data = jax.device_put(self.key_data, self._sh.mat)
+            self._active_dev = jax.device_put(self._active_dev,
+                                              self._sh.row)
+
         if self.spec is not None:
+            draft_params = self.spec.draft_params
+            dparams_sh = None
+            if self._sh is not None:
+                # Draft weights follow the same TP rules (factored leaves
+                # shard by the u/v orientation rules); the draft cache
+                # inherits the target's shardings by construction.
+                dparams_sh = self._sh.tree(draft_params)
+                draft_params = jax.device_put(draft_params, dparams_sh)
             self.draft = DraftState(
-                model, self.spec.draft_params, max_batch, max_len,
+                model, draft_params, max_batch, max_len,
                 paged=self.paged, block_size=block_size,
                 num_blocks=num_blocks, kv_quant=kv_quant,
-                seed=self.spec.seed,
+                seed=self.spec.seed, dp_shards=self.dp_shards, par=par,
+                cache_shardings=(None if self.paged or self._sh is None
+                                 else self._sh.cache),
+                key_sharding=self._sh.mat if self._sh else None,
             )
-            self._spec_draft = jax.jit(
-                make_spec_draft_step(model, self.spec.k),
-                donate_argnums=SPEC_DRAFT_DONATE,
+            self._spec_draft = self._jit(
+                make_spec_draft_step(model, self.spec.k), SPEC_DRAFT_DONATE,
+                (self._sh.spec_draft(dparams_sh, self.paged)
+                 if self._sh else None),
             )
-            self._spec_verify = jax.jit(
+            self._spec_verify = self._jit(
                 make_spec_verify_step(model, self.spec.k),
-                donate_argnums=SPEC_VERIFY_DONATE,
+                SPEC_VERIFY_DONATE,
+                self._sh.spec_verify(self.paged) if self._sh else None,
             )
             if self.paged:
-                self._draft_prefill = jax.jit(
+                self._draft_prefill = self._jit(
                     make_paged_draft_prefill_step(model),
-                    donate_argnums=DRAFT_PREFILL_DONATE,
+                    DRAFT_PREFILL_DONATE,
+                    (self._sh.draft_prefill_paged(dparams_sh)
+                     if self._sh else None),
                 )
             else:
-                self._draft_prefill = jax.jit(
+                self._draft_prefill = self._jit(
                     make_dense_draft_prefill_step(model, max_len,
                                                   kv_quant=kv_quant),
-                    donate_argnums=DRAFT_PREFILL_DONATE,
+                    DRAFT_PREFILL_DONATE,
+                    (self._sh.draft_prefill_dense(dparams_sh)
+                     if self._sh else None),
                 )
             # Per-row speculation windows (all k unless dynamic_k shrinks).
             self._k_row = np.full((max_batch,), self.spec.k, np.int32)
@@ -251,6 +342,17 @@ class ServingEngine:
         # Telemetry: step() wall times (includes the one D2H sync).
         self.step_times: List[float] = []
         self.decode_transfers = 0
+
+    @staticmethod
+    def _jit(fn, donate, shardings=None):
+        """jit a serving root: donation always; explicit in/out shardings
+        when the engine runs on a mesh (pinning donated-buffer aliasing and
+        step-to-step layout stability)."""
+        if shardings is None:
+            return jax.jit(fn, donate_argnums=donate)
+        in_sh, out_sh = shardings
+        return jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                       donate_argnums=donate)
 
     # --------------------------------------------------------------- API
 
@@ -270,15 +372,18 @@ class ServingEngine:
             )
         if self.paged:
             # Admission reserves the worst case up front; a request whose
-            # worst case exceeds the TOTAL pool could never be admitted and
-            # would stall the FIFO head forever — fail fast at submit.
+            # worst case exceeds one DP shard's sub-pool (== the total pool
+            # when unsharded) could never be admitted and would stall the
+            # FIFO head forever — fail fast at submit.
             need = min(self.max_len, len(prompt) + max_new_tokens)
             n_blocks = self.kv.blocks_for(need)
-            if n_blocks > self.kv.num_blocks:
+            if n_blocks > self.kv.blocks_per_shard:
                 raise ValueError(
                     f"request needs {n_blocks} blocks worst-case "
                     f"(prompt {len(prompt)} + max_new {max_new_tokens}) but "
-                    f"the pool only has {self.kv.num_blocks}"
+                    f"a pool shard only has {self.kv.blocks_per_shard} "
+                    f"(num_blocks={self.kv.num_blocks} over "
+                    f"{self.kv.dp_shards} DP shard(s))"
                 )
         req = Request(next(self._uid), prompt, max_new_tokens, temperature,
                       eos_id if eos_id is not None else self.eos_id)
@@ -338,21 +443,36 @@ class ServingEngine:
                 break
             req = self.queue[0]
             need = min(self.max_len, len(req.prompt) + req.max_new_tokens)
-            if not self.kv.reserve(free[0], need):
-                if self.kv.alloc.in_use() == 0:
-                    raise RuntimeError(
-                        f"request {req.uid} needs {self.kv.blocks_for(need)} "
-                        f"blocks but the pool only has {self.kv.num_blocks}"
-                    )
-                break  # pool exhausted: FIFO backpressure until blocks free
-            if self.spec is not None and not self.draft.reserve(free[0], need):
-                # Draft pool is reserved in lockstep with the target's: on
-                # failure roll the target reservation back and wait.
-                self.kv.free(free[0])
+            # Block reservations are per DP shard (slot s -> shard
+            # s*dp/max_batch), so the FIFO head tries every free slot —
+            # different slots may land on shards with different headroom.
+            # Unsharded pools reduce to the old single-attempt semantics
+            # (every slot shares one shard, so one failure implies all).
+            slot = None
+            for cand in free:
+                if not self.kv.reserve(cand, need):
+                    if self.kv.alloc.in_use(self.kv.slot_shard(cand)) == 0:
+                        raise RuntimeError(
+                            f"request {req.uid} needs "
+                            f"{self.kv.blocks_for(need)} blocks but an idle "
+                            f"pool shard only has "
+                            f"{self.kv.blocks_per_shard}"
+                        )
+                    continue
+                if (self.spec is not None
+                        and not self.draft.reserve(cand, need)):
+                    # Draft pool is reserved in lockstep with the target's:
+                    # on failure roll the target reservation back and try
+                    # the next shard (or wait).
+                    self.kv.free(cand)
+                    continue
+                slot = cand
                 break
+            if slot is None:
+                break  # every shard exhausted: FIFO backpressure
             self.queue.popleft()
-            busy.add(free[0])
-            self._prefilling.append(_PrefillTask(req, free[0]))
+            busy.add(slot)
+            self._prefilling.append(_PrefillTask(req, slot))
         if self._prefilling:
             finished.extend(self._prefill_tick())
         return finished
@@ -647,19 +767,36 @@ class ServingEngine:
             "draft_hbm_bytes": self.draft.hbm_bytes(),
         }
 
+    def mesh_shape(self) -> Dict[str, int]:
+        """The serving mesh as {dp, tp, devices} ((1, 1, 1) when meshless
+        — the layout every sharded stat reduces to on one device)."""
+        if self.par is None:
+            return {"dp": 1, "tp": 1, "devices": 1}
+        m = self.par.mesh
+        dp = int(np.prod([m.shape[a] for a in self.par.dp_axes]))
+        tp = int(m.shape[self.par.tp_axis]) if self.par.tp_axis else 1
+        return {"dp": dp, "tp": tp, "devices": int(m.size)}
+
     def cache_stats(self) -> Dict[str, float]:
-        """Cache memory accounting: HBM bytes + live/reserved tokens."""
+        """Cache memory accounting: HBM bytes (global + per device) +
+        live/reserved tokens."""
         live = int((self._len_host * self.active).sum())
         if self.paged:
             s = dict(self.kv.stats(), layout="paged")
         else:
+            slab = int(sum(
+                leaf.nbytes for leaf in jax.tree.leaves(self.cache)
+            ))
             s = {
                 "layout": "dense",
                 "tokens_capacity": self.max_batch * self.max_len,
-                "cache_hbm_bytes": int(sum(
-                    leaf.nbytes for leaf in jax.tree.leaves(self.cache)
-                )),
+                "cache_hbm_bytes": slab,
+                "dp_shards": self.dp_shards,
+                # The slab shards over its batch dim: each device holds
+                # max_batch / dp rows (the whole slab when unsharded).
+                "per_device_cache_hbm_bytes": slab // self.dp_shards,
             }
+        s["mesh"] = self.mesh_shape()
         s["live_tokens"] = live
         if self.spec is not None:
             s["draft_hbm_bytes"] = self.draft.hbm_bytes()

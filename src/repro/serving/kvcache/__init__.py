@@ -2,6 +2,9 @@
 
 Host bookkeeping (BlockAllocator) is authoritative; PagedKVCache mirrors it
 onto the device as a block pool pytree plus a per-step block-table upload.
+Under a DP x TP serving mesh the pools shard over their block dim and the
+block id space partitions into per-DP-shard ranges, with the allocator
+authoritative per shard (its own free list, backpressure, and peak).
 See serving/engine.py for how the pieces are driven."""
 
 from .allocator import BlockAllocator

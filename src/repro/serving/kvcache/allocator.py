@@ -5,10 +5,20 @@ the device block pool; the allocator hands contiguous-in-ID-order *lists*
 (not contiguous memory — the block table absorbs any fragmentation) to
 owners (engine slots) and reclaims them when a request finishes.
 
-``defrag()`` compacts live blocks into the lowest ids and returns the move
-map; the engine applies the same permutation to the device pools and block
-table.  With block tables, compaction is never needed for correctness —
-it exists so a pool can be shrunk (or a snapshot taken) from a prefix."""
+Sharding: when the device pools are sharded over their block dim across a
+DP mesh axis (``num_shards > 1``), block id space is partitioned into
+``num_shards`` contiguous ranges — block ``b`` lives on device shard
+``b // blocks_per_shard`` — and every allocation is pinned to one shard so
+a slot's reads/writes stay device-local.  The allocator stays fully
+host-authoritative per shard: each shard has its own free list, its own
+backpressure, and its own peak, with ``num_shards == 1`` reproducing the
+unsharded behavior exactly.
+
+``defrag()`` compacts live blocks into the lowest ids OF THEIR SHARD RANGE
+and returns the move map; moves never cross shards, so the engine's device
+permutation is block-diagonal over the mesh (no cross-device traffic).
+With block tables, compaction is never needed for correctness — it exists
+so a pool can be shrunk (or a snapshot taken) from a per-shard prefix."""
 
 from __future__ import annotations
 
@@ -16,53 +26,93 @@ from typing import Dict, Hashable, List, Optional
 
 
 class BlockAllocator:
-    def __init__(self, num_blocks: int):
+    def __init__(self, num_blocks: int, num_shards: int = 1):
         if num_blocks <= 0:
             raise ValueError(f"num_blocks must be positive, got {num_blocks}")
+        if num_shards <= 0:
+            raise ValueError(f"num_shards must be positive, got {num_shards}")
+        if num_blocks % num_shards != 0:
+            raise ValueError(
+                f"num_blocks={num_blocks} not divisible by "
+                f"num_shards={num_shards}"
+            )
         self.num_blocks = num_blocks
-        # Ascending free list; allocation pops the lowest ids first, which
-        # keeps live blocks clustered and defrag moves small.
-        self._free: List[int] = list(range(num_blocks))
+        self.num_shards = num_shards
+        self.blocks_per_shard = num_blocks // num_shards
+        # Ascending free list per shard; allocation pops the lowest ids
+        # first, which keeps live blocks clustered and defrag moves small.
+        self._free: List[List[int]] = [
+            list(range(s * self.blocks_per_shard,
+                       (s + 1) * self.blocks_per_shard))
+            for s in range(num_shards)
+        ]
         self._owned: Dict[Hashable, List[int]] = {}
+        # Peak accounting: aggregate (all shards, the historical metric) AND
+        # per shard — per-DEVICE HBM truthfulness when pools are sharded.
         self.peak_in_use = 0
+        self.peak_by_shard: List[int] = [0] * num_shards
 
     # ------------------------------------------------------------ queries
 
-    def in_use(self) -> int:
-        return self.num_blocks - len(self._free)
+    def home_shard(self, block: int) -> int:
+        return block // self.blocks_per_shard
 
-    def free_blocks(self) -> int:
-        return len(self._free)
+    def in_use(self, shard: Optional[int] = None) -> int:
+        if shard is None:
+            return self.num_blocks - sum(len(f) for f in self._free)
+        return self.blocks_per_shard - len(self._free[shard])
+
+    def free_blocks(self, shard: Optional[int] = None) -> int:
+        if shard is None:
+            return sum(len(f) for f in self._free)
+        return len(self._free[shard])
 
     def owned_by(self, owner: Hashable) -> List[int]:
         return list(self._owned.get(owner, ()))
 
-    def can_alloc(self, n: int) -> bool:
-        return n <= len(self._free)
+    def can_alloc(self, n: int, shard: int = 0) -> bool:
+        return n <= len(self._free[shard])
 
     # ------------------------------------------------------------ mutation
 
-    def alloc(self, owner: Hashable, n: int) -> Optional[List[int]]:
-        """Allocate n blocks for owner (appending to any it already holds).
-        Returns the new block ids, or None (and no state change) when the
-        pool cannot satisfy the request — admission backpressure."""
+    def _note_peaks(self) -> None:
+        self.peak_in_use = max(self.peak_in_use, self.in_use())
+        for s in range(self.num_shards):
+            self.peak_by_shard[s] = max(self.peak_by_shard[s], self.in_use(s))
+
+    def alloc(self, owner: Hashable, n: int, shard: int = 0) -> Optional[List[int]]:
+        """Allocate n blocks for owner from one shard's range (appending to
+        any it already holds).  Returns the new block ids, or None (and no
+        state change) when the shard cannot satisfy the request — admission
+        backpressure is per shard."""
         if n < 0:
             raise ValueError(f"negative block count {n}")
-        if n > len(self._free):
+        free = self._free[shard]
+        if n > len(free):
             return None
-        ids = self._free[:n]
-        del self._free[:n]
+        ids = free[:n]
+        del free[:n]
         self._owned.setdefault(owner, []).extend(ids)
-        self.peak_in_use = max(self.peak_in_use, self.in_use())
+        self._note_peaks()
         return ids
 
     def free(self, owner: Hashable) -> List[int]:
-        """Release all blocks held by owner (no-op for unknown owners)."""
+        """Release all blocks held by owner to their home shards (no-op for
+        unknown owners)."""
         ids = self._owned.pop(owner, [])
-        if ids:
-            self._free.extend(ids)
-            self._free.sort()
+        self._return(ids)
         return ids
+
+    def _return(self, ids: List[int]) -> None:
+        if not ids:
+            return
+        touched = set()
+        for b in ids:
+            s = self.home_shard(b)
+            self._free[s].append(b)
+            touched.add(s)
+        for s in touched:
+            self._free[s].sort()
 
     def release_suffix(self, owner: Hashable, n_keep: int) -> List[int]:
         """Shrink an owner to its FIRST n_keep blocks, returning the freed
@@ -77,18 +127,24 @@ class BlockAllocator:
             self._owned[owner] = ids[:n_keep]
             if not self._owned[owner]:
                 del self._owned[owner]
-            self._free.extend(freed)
-            self._free.sort()
+            self._return(freed)
         return freed
 
     def defrag(self) -> Dict[int, int]:
-        """Compact live blocks into ids [0, in_use): returns {old: new} for
-        every moved block and rewrites the per-owner lists in place."""
-        live = sorted(b for ids in self._owned.values() for b in ids)
-        moves = {old: new for new, old in enumerate(live) if old != new}
+        """Compact live blocks into the lowest ids of their shard range:
+        returns {old: new} for every moved block and rewrites the per-owner
+        lists in place.  Shard-local by construction (one shard == the
+        historical whole-pool compaction)."""
+        moves: Dict[int, int] = {}
+        live_all = sorted(b for ids in self._owned.values() for b in ids)
+        for s in range(self.num_shards):
+            base = s * self.blocks_per_shard
+            live = [b for b in live_all if self.home_shard(b) == s]
+            moves.update({old: base + new for new, old in enumerate(live)
+                          if old != base + new})
+            self._free[s] = list(range(base + len(live),
+                                       base + self.blocks_per_shard))
         if moves:
             for ids in self._owned.values():
                 ids[:] = [moves.get(b, b) for b in ids]
-            n_live = len(live)
-            self._free = list(range(n_live, self.num_blocks))
         return moves

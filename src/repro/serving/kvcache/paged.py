@@ -12,11 +12,22 @@ block count at admission (per-request max_len = prompt + max_new, NOT the
 engine-wide max_len slab), so decode can never run out of blocks mid-flight
 and exhaustion surfaces only as admission backpressure.  ``free`` returns a
 finished request's blocks immediately.  ``defrag`` compacts live blocks to
-the lowest pool ids and permutes the device pools to match."""
+the lowest pool ids and permutes the device pools to match.
+
+Mesh sharding (``dp_shards > 1`` + an active ``par``): the pools shard over
+their BLOCK dim across the DP mesh axes and the block id space partitions
+into per-shard ranges in lockstep — engine slot ``s`` maps to DP shard
+``s * dp_shards // max_batch`` and only ever reserves blocks from that
+shard's range, so every row's pool reads/writes stay device-local and the
+host allocator stays authoritative per shard (its own free list,
+backpressure, and peak).  ``defrag`` moves are shard-local by construction,
+so the donated device permutation is block-diagonal over the mesh.  With
+``dp_shards == 1`` (or no mesh) everything reduces bit-for-bit to the
+single-device layout."""
 
 from __future__ import annotations
 
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,61 +43,107 @@ def _ceil_div(a: int, b: int) -> int:
 class PagedKVCache:
     def __init__(self, model, max_batch: int, max_len: int,
                  block_size: int = 16, num_blocks: int | None = None,
-                 kv_quant: bool = False):
+                 kv_quant: bool = False, dp_shards: int = 1,
+                 par=None):
         if num_blocks is None:
             # Capacity parity with the dense slab by default; size it down
             # (expected live tokens / block_size) to realize the HBM win.
             num_blocks = _ceil_div(max_batch * max_len, block_size)
+        if dp_shards > 1:
+            # The block dim shards over DP: round the pool up to a multiple
+            # of the shard count so every device holds the same slice.
+            num_blocks = _ceil_div(num_blocks, dp_shards) * dp_shards
         self.block_size = block_size
         self.num_blocks = num_blocks
+        self.dp_shards = dp_shards
+        self.max_batch = max_batch
         self.max_blocks_per_row = _ceil_div(max_len, block_size)
         self.pools = model.init_paged_cache(num_blocks, block_size,
                                             kv_quant=kv_quant)
-        self.alloc = BlockAllocator(num_blocks)
+        self.alloc = BlockAllocator(num_blocks, num_shards=dp_shards)
         self.table_np = np.full((max_batch, self.max_blocks_per_row), -1,
                                 np.int32)
 
-        # Per-leaf block axis, found structurally: grow num_blocks by one in
-        # an eval_shape probe and see which dim moved (scanned layer stacks
-        # carry a leading (repeats,) dim, so the axis is not fixed — and
-        # shape sniffing would misfire when repeats == num_blocks).
-        probe = jax.eval_shape(
-            lambda: model.init_paged_cache(num_blocks + 1, block_size,
-                                           kv_quant=kv_quant)
-        )
-        block_axes = jax.tree.map(
-            lambda leaf, p: next(
-                i for i, (a, b) in enumerate(zip(leaf.shape, p.shape)) if a != b
-            ),
-            self.pools, probe,
-        )
+        # Per-leaf block axis, found structurally (models.api probe —
+        # scanned layer stacks carry a leading (repeats,) dim, so the axis
+        # is not fixed, and shape sniffing would misfire when repeats ==
+        # num_blocks).
+        from repro.models.api import paged_cache_block_axes
+
+        block_axes = paged_cache_block_axes(model, num_blocks, block_size,
+                                            kv_quant=kv_quant)
+        self.block_axes = block_axes
+
+        # Mesh placement: pools shard over their block dim on the DP axes
+        # (replicated over TP) — the engine reuses ``self.shardings`` to pin
+        # its jit roots' pool in/out shardings.
+        self.shardings = None
+        permute_kw: Dict[str, Any] = {}
+        if par is not None and getattr(par, "active", False):
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            from repro.models.api import serving_cache_pspecs
+
+            if dp_shards > 1:
+                pspecs = serving_cache_pspecs(
+                    model, par, num_blocks=num_blocks,
+                    block_size=block_size, kv_quant=kv_quant,
+                    axes=block_axes, shapes=self.pools,
+                )
+            else:
+                # Host bookkeeping is single-shard (e.g. max_batch doesn't
+                # divide DP): keep the pools replicated so the device
+                # layout matches the allocator's view.
+                pspecs = jax.tree.map(lambda leaf: P(), self.pools)
+            self.shardings = jax.tree.map(
+                lambda s: NamedSharding(par.mesh, s), pspecs,
+                is_leaf=lambda x: isinstance(x, P),
+            )
+            self.pools = jax.device_put(self.pools, self.shardings)
+            permute_kw = {
+                "in_shardings": (self.shardings,
+                                 NamedSharding(par.mesh, P())),
+                "out_shardings": self.shardings,
+            }
 
         self._permute = jax.jit(
             lambda pools, perm: jax.tree.map(
                 lambda leaf, ax: jnp.take(leaf, perm, axis=ax),
                 pools, block_axes,
             ),
-            donate_argnums=(0,),
+            donate_argnums=(0,), **permute_kw,
         )
 
     # ----------------------------------------------------------- blocks
 
+    @property
+    def blocks_per_shard(self) -> int:
+        return self.num_blocks // self.dp_shards
+
+    def slot_shard(self, slot: int) -> int:
+        """DP shard owning engine slot ``slot`` (slots partition evenly and
+        contiguously over shards, mirroring the batch-dim sharding of the
+        engine's per-slot state)."""
+        return slot * self.dp_shards // self.max_batch
+
     def blocks_for(self, n_tokens: int) -> int:
         return _ceil_div(max(1, n_tokens), self.block_size)
 
-    def can_reserve(self, n_tokens: int) -> bool:
-        return self.alloc.can_alloc(self.blocks_for(n_tokens))
+    def can_reserve(self, n_tokens: int, slot: int = 0) -> bool:
+        return self.alloc.can_alloc(self.blocks_for(n_tokens),
+                                    shard=self.slot_shard(slot))
 
     def reserve(self, slot: int, n_tokens: int) -> bool:
-        """Reserve blocks covering n_tokens for engine slot ``slot``.
-        False (no state change) when the pool is exhausted."""
+        """Reserve blocks covering n_tokens for engine slot ``slot`` from
+        the slot's DP shard.  False (no state change) when that shard is
+        exhausted."""
         n = self.blocks_for(n_tokens)
         if n > self.max_blocks_per_row:
             raise ValueError(
                 f"{n_tokens} tokens need {n} blocks > "
                 f"max_blocks_per_row={self.max_blocks_per_row}"
             )
-        if self.alloc.alloc(slot, n) is None:
+        if self.alloc.alloc(slot, n, shard=self.slot_shard(slot)) is None:
             return False
         owned = self.alloc.owned_by(slot)  # appends compose correctly
         self.table_np[slot, :] = -1
@@ -124,8 +181,9 @@ class PagedKVCache:
     # ----------------------------------------------------------- defrag
 
     def defrag(self) -> Dict[int, int]:
-        """Compact live blocks to pool ids [0, in_use); permutes the device
-        pools (donated gather) and rewrites the host block table."""
+        """Compact live blocks to the lowest pool ids of their shard range;
+        permutes the device pools (donated, shard-local gather) and rewrites
+        the host block table."""
         moves = self.alloc.defrag()
         if not moves:
             return moves
@@ -144,7 +202,7 @@ class PagedKVCache:
         return int(sum(leaf.nbytes for leaf in jax.tree.leaves(self.pools)))
 
     def stats(self) -> Dict[str, Any]:
-        return {
+        s = {
             "block_size": self.block_size,
             "num_blocks": self.num_blocks,
             "blocks_in_use": self.alloc.in_use(),
@@ -152,4 +210,13 @@ class PagedKVCache:
             "tokens_capacity": self.num_blocks * self.block_size,
             "tokens_reserved": self.alloc.in_use() * self.block_size,
             "cache_hbm_bytes": self.hbm_bytes(),
+            "dp_shards": self.dp_shards,
+            "per_device_cache_hbm_bytes":
+                self.hbm_bytes() // self.dp_shards,
         }
+        if self.dp_shards > 1:
+            # Per-shard truth: a device's peak cache residency is ITS
+            # shard's peak, not aggregate/dp (shards peak independently).
+            s["blocks_peak_by_shard"] = list(self.alloc.peak_by_shard)
+            s["blocks_per_shard"] = self.blocks_per_shard
+        return s

@@ -17,6 +17,12 @@ one-for-one.  Three invariants keep the state tiny:
   * Paged mode reserves blocks in lockstep with the target: a request is
     admitted only when BOTH pools can hold its worst case, so neither side
     can run out mid-flight.
+
+Mesh sharding: the draft cache inherits the TARGET's shardings by
+construction — same ``dp_shards``/``par`` flow into its ``PagedKVCache``
+(block-dim DP pools, per-shard host allocator), and for the dense slab the
+engine passes the target slab's ``cache_shardings``/``key_sharding``
+verbatim (identical leaf shapes, so the same tree applies).
 """
 
 from __future__ import annotations
@@ -33,21 +39,27 @@ class DraftState:
     def __init__(self, model, params: Any, max_batch: int, max_len: int,
                  paged: bool, block_size: int = 16,
                  num_blocks: Optional[int] = None, kv_quant: bool = False,
-                 seed: int = 1234):
+                 seed: int = 1234, dp_shards: int = 1, par=None,
+                 cache_shardings=None, key_sharding=None):
         self.params = params
         self.paged = paged
         if paged:
             self.kv = PagedKVCache(model, max_batch, max_len,
                                    block_size=block_size,
-                                   num_blocks=num_blocks, kv_quant=kv_quant)
+                                   num_blocks=num_blocks, kv_quant=kv_quant,
+                                   dp_shards=dp_shards, par=par)
             self.cache = None
         else:
             self.kv = None
             self.cache = model.init_cache(max_batch, max_len,
                                           kv_quant=kv_quant)
+            if cache_shardings is not None:
+                self.cache = jax.device_put(self.cache, cache_shardings)
         self.key_data = jax.random.key_data(
             jax.random.split(jax.random.key(seed), max_batch)
         )
+        if key_sharding is not None:
+            self.key_data = jax.device_put(self.key_data, key_sharding)
 
     # ---------------------------------------------------------- block ops
 
