@@ -12,8 +12,13 @@ from typing import Optional
 
 import jax
 
+from .paged_attention import default_rows_per_pack  # noqa: F401 (re-export)
 from .paged_attention import paged_attention as _kernel_call
-from .ref import gather_pages, paged_attention_ref  # noqa: F401 (re-export)
+from .ref import (  # noqa: F401 (re-export)
+    gather_pages,
+    paged_attention_packed_ref,
+    paged_attention_ref,
+)
 
 
 def paged_attention(
@@ -27,11 +32,15 @@ def paged_attention(
     scale: Optional[float] = None,
     interpret: bool = False,
     use_kernel: Optional[bool] = None,
+    rows_per_pack: Optional[int] = None,
 ):
     """Public op; see ref.paged_attention_ref for the argument contract.
 
     ``use_kernel=None`` picks the Pallas kernel on TPU and the oracle
-    elsewhere; pass True/False to force either side."""
+    elsewhere; pass True/False to force either side.  ``rows_per_pack``
+    sets the kernel's decode-row packing (None = auto: fill the 8-sublane
+    score tile, see paged_attention.default_rows_per_pack); the oracle
+    path ignores it — packing is a tiling choice, not a math change."""
     if use_kernel is None:
         use_kernel = interpret or jax.default_backend() == "tpu"
     if not use_kernel:
@@ -40,5 +49,5 @@ def paged_attention(
         )
     return _kernel_call(
         q, k_pages, v_pages, block_tables, lengths, k_scales, v_scales,
-        scale=scale, interpret=interpret,
+        scale=scale, interpret=interpret, rows_per_pack=rows_per_pack,
     )

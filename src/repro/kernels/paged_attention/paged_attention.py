@@ -7,18 +7,37 @@ row's logical prefix, so the hot loop is pure HBM traffic — the kernel's job
 is to stream exactly the live pages and nothing else (the dense-slab path
 reads the full (max_batch, max_len) slab every step regardless of occupancy).
 
-Schedule: grid = (batch,); the block table and per-row lengths ride scalar
-prefetch (SMEM) so the page loop can compute DMA source indices before any
-data lands.  Pools stay HBM-resident (memory_space=ANY); each iteration
-async-copies one (block_size, Hkv, hd) page (plus its (block_size, Hkv)
-dequant scales for int8 pools) into VMEM, accumulates online-softmax state
-in fp32, and stops after ceil(length / block_size) pages — freed or
-never-allocated tail blocks are never touched.
+Schedule — ROW-PACKED and DOUBLE-BUFFERED:
 
-All Hkv heads of a row are processed per page so one DMA feeds the whole
-(Hkv, G, block_size) score tile.  The (G, block_size) per-head tile is small
-for GQA decode; this kernel targets correctness + page-exact HBM traffic
-first (see ops.py for the dispatch contract; tests drive interpret mode).
+  * grid = (ceil(B / R),): each grid step processes a PACK of R decode rows
+    (``rows_per_pack``).  A lone (G, block_size) score tile badly underfills
+    the MXU for small GQA groups (G = Hq/Hkv is 1-4 for the archs served
+    here); packing R rows turns every per-kv-head matmul into
+    (R*G, hd) @ (hd, R*block_size) — R× more sublanes AND R× more lanes per
+    MXU pass.  The cross-row score quadrants are junk by construction and
+    are masked to -inf together with the per-row length mask, so the online
+    softmax over the packed key axis reduces to exactly the per-row result
+    (masked terms contribute zero weight).
+  * The block table and per-row lengths ride scalar prefetch (SMEM) so page
+    DMA source indices are known before any data lands.  Pools stay
+    HBM-resident (memory_space=ANY); each pack iteration streams one
+    (block_size, Hkv, hd) page PER PACKED ROW (plus (block_size, Hkv)
+    dequant scales for int8 pools) into VMEM.
+  * Page DMAs are DOUBLE-BUFFERED: two VMEM slots per operand, the copies
+    for page p+1 start before the pack multiplies page p, so the next pages
+    stream while the MXU works the current tile.
+  * The page loop runs to the LONGEST packed row's page count; shorter
+    rows' extra pages are fetched from a clamped block id and masked — the
+    cost of packing, proportional to the length spread within a pack, is
+    traded against the R× MXU fill (the serving decode roots zero dead
+    rows' lengths so a retired slot never drags its pack; length-sorted
+    packing for live rows is a queued follow-up).  Freed or never-
+    allocated tail blocks beyond every packed row's length are never
+    touched.
+
+The jnp oracle in ref.py mirrors this packed layout (ragged last pack,
+cross-row masking, int8 dequant inside the packed tile) so CPU tests pin
+the kernel's tiling math, not just the attention result.
 """
 
 from __future__ import annotations
@@ -34,62 +53,119 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(bt_ref, len_ref, q_ref, kp_ref, vp_ref, *rest, block_size, scale, quant):
+def default_rows_per_pack(batch: int, group: int) -> int:
+    """Pack enough rows that the score tile's query dim (R*G) reaches the
+    8-sublane fp32 tile, without padding tiny batches past themselves."""
+    r = max(1, 8 // max(group, 1))
+    return max(1, min(r, batch, 8))
+
+
+def _kernel(bt_ref, len_ref, q_ref, kp_ref, vp_ref, *rest, block_size,
+            scale, quant, rows_per_pack, max_blocks):
     if quant:
         (ksp_ref, vsp_ref, o_ref, k_buf, v_buf, ks_buf, vs_buf,
          sem_k, sem_v, sem_ks, sem_vs) = rest
     else:
         o_ref, k_buf, v_buf, sem_k, sem_v = rest
-    i = pl.program_id(0)
     bs = block_size
-    length = len_ref[i]
-    q = q_ref[0].astype(jnp.float32)  # (Hkv, G, hd)
-    hkv, g, hd = q.shape
-    n_pages = (length + bs - 1) // bs
+    r_pack = rows_per_pack
+    i = pl.program_id(0)
+    r0 = i * r_pack
+
+    q = q_ref[...].astype(jnp.float32)  # (R, Hkv, G, hd)
+    _, hkv, g, hd = q.shape
+    # (Hkv, R*G, hd): kv-head-major so each head's packed queries multiply
+    # that head's packed keys in one (R*G, hd) @ (hd, R*bs) MXU pass.
+    qh = jnp.transpose(q, (1, 0, 2, 3)).reshape(hkv, r_pack * g, hd)
+
+    lens = jnp.stack([len_ref[r0 + r] for r in range(r_pack)])  # (R,)
+    n_pages = (jnp.max(lens) + bs - 1) // bs  # pack loop bound
+
+    def dma(buf, pool_ref, sem, slot, r, page):
+        return pltpu.make_async_copy(pool_ref.at[page], buf.at[slot, r],
+                                     sem.at[slot, r])
+
+    def start_pages(slot, p):
+        pp = jnp.minimum(p, max_blocks - 1)
+        for r in range(r_pack):
+            # Clamp freed rows' -1 sentinels (and short rows' exhausted
+            # tables) to block 0: the fetch is junk the mask hides.
+            page = jnp.maximum(bt_ref[r0 + r, pp], 0)
+            dma(k_buf, kp_ref, sem_k, slot, r, page).start()
+            dma(v_buf, vp_ref, sem_v, slot, r, page).start()
+            if quant:
+                dma(ks_buf, ksp_ref, sem_ks, slot, r, page).start()
+                dma(vs_buf, vsp_ref, sem_vs, slot, r, page).start()
+
+    def wait_pages(slot, p):
+        pp = jnp.minimum(p, max_blocks - 1)
+        for r in range(r_pack):
+            page = jnp.maximum(bt_ref[r0 + r, pp], 0)
+            dma(k_buf, kp_ref, sem_k, slot, r, page).wait()
+            dma(v_buf, vp_ref, sem_v, slot, r, page).wait()
+            if quant:
+                dma(ks_buf, ksp_ref, sem_ks, slot, r, page).wait()
+                dma(vs_buf, vsp_ref, sem_vs, slot, r, page).wait()
+
+    # Masks of the packed score tile: query n belongs to pack row n // G,
+    # key column m to pack row m // bs — only the block diagonal is real.
+    # Per-column row lengths are laid out by broadcast (no vector gather).
+    rq = jax.lax.broadcasted_iota(jnp.int32, (r_pack * g, 1), 0) // g
+    rc = jax.lax.broadcasted_iota(jnp.int32, (1, r_pack * bs), 1) // bs
+    same_row = rq == rc                                    # (R*G, R*bs)
+    key_off = jax.lax.broadcasted_iota(jnp.int32, (1, r_pack * bs), 1) % bs
+    len_cols = jnp.broadcast_to(
+        lens[:, None], (r_pack, bs)
+    ).reshape(1, r_pack * bs)
+
+    @pl.when(n_pages > 0)
+    def _warmup():
+        start_pages(0, 0)
 
     def body(p, carry):
         acc, m, l = carry
-        page = jnp.maximum(bt_ref[i, p], 0)  # clamp freed rows' -1 sentinels
-        ck = pltpu.make_async_copy(kp_ref.at[page], k_buf, sem_k)
-        cv = pltpu.make_async_copy(vp_ref.at[page], v_buf, sem_v)
-        ck.start()
-        cv.start()
+        slot = jax.lax.rem(p, 2)
+
+        @pl.when(p + 1 < n_pages)
+        def _prefetch():
+            start_pages(jax.lax.rem(p + 1, 2), p + 1)
+
+        wait_pages(slot, p)
+        k = k_buf[slot].astype(jnp.float32)  # (R, bs, Hkv, hd)
+        v = v_buf[slot].astype(jnp.float32)
         if quant:
-            cks = pltpu.make_async_copy(ksp_ref.at[page], ks_buf, sem_ks)
-            cvs = pltpu.make_async_copy(vsp_ref.at[page], vs_buf, sem_vs)
-            cks.start()
-            cvs.start()
-        ck.wait()
-        cv.wait()
-        k = k_buf[...].astype(jnp.float32)  # (bs, Hkv, hd)
-        v = v_buf[...].astype(jnp.float32)
-        if quant:
-            cks.wait()
-            cvs.wait()
-            k = k * ks_buf[...][..., None]
-            v = v * vs_buf[...][..., None]
-        s = jnp.einsum("kgd,tkd->kgt", q, k, preferred_element_type=jnp.float32)
+            k = k * ks_buf[slot][..., None]
+            v = v * vs_buf[slot][..., None]
+        # (Hkv, R*bs, hd): packed-key layout matching qh.
+        kh = jnp.transpose(k, (2, 0, 1, 3)).reshape(hkv, r_pack * bs, hd)
+        vh = jnp.transpose(v, (2, 0, 1, 3)).reshape(hkv, r_pack * bs, hd)
+        s = jnp.einsum("knd,kmd->knm", qh, kh,
+                       preferred_element_type=jnp.float32)
         s = s * scale
-        pos = p * bs + jax.lax.broadcasted_iota(jnp.int32, (1, 1, bs), 2)
-        s = jnp.where(pos < length, s, NEG_INF)
+        pos = p * bs + key_off
+        valid = jnp.logical_and(same_row, pos < len_cols)  # (R*G, R*bs)
+        s = jnp.where(valid[None], s, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
         pexp = jnp.exp(s - m_new)
         corr = jnp.exp(m - m_new)
         l_new = l * corr + jnp.sum(pexp, axis=-1, keepdims=True)
         acc_new = acc * corr + jnp.einsum(
-            "kgt,tkd->kgd", pexp, v, preferred_element_type=jnp.float32
+            "knm,kmd->knd", pexp, vh, preferred_element_type=jnp.float32
         )
         return acc_new, m_new, l_new
 
-    acc0 = jnp.zeros((hkv, g, hd), jnp.float32)
-    m0 = jnp.full((hkv, g, 1), NEG_INF, jnp.float32)
-    l0 = jnp.zeros((hkv, g, 1), jnp.float32)
+    acc0 = jnp.zeros((hkv, r_pack * g, hd), jnp.float32)
+    m0 = jnp.full((hkv, r_pack * g, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((hkv, r_pack * g, 1), jnp.float32)
     acc, _, l = jax.lax.fori_loop(0, n_pages, body, (acc0, m0, l0))
-    o_ref[0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+    out = acc / jnp.maximum(l, 1e-30)  # (Hkv, R*G, hd)
+    o_ref[...] = jnp.transpose(
+        out.reshape(hkv, r_pack, g, hd), (1, 0, 2, 3)
+    ).astype(o_ref.dtype)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("scale", "interpret")
+    jax.jit, static_argnames=("scale", "interpret", "rows_per_pack")
 )
 def paged_attention(
     q: jax.Array,
@@ -101,27 +177,47 @@ def paged_attention(
     v_scales: jax.Array | None = None,
     scale: float | None = None,
     interpret: bool = False,
+    rows_per_pack: int | None = None,
 ) -> jax.Array:
     """q: (B, Hq, hd); pools (N, bs, Hkv, hd); block_tables (B, M) int32;
     lengths (B,) valid tokens per row (cache_len + 1).  Returns (B, Hq, hd).
+
+    ``rows_per_pack=None`` picks R so the packed score tile's query dim
+    reaches the 8-sublane tile (R = 8 // G, clamped to [1, min(B, 8)]).
+    Ragged batches are padded with length-0 rows to a whole pack and
+    sliced back — padding never DMAs past page 0 of block 0.
     """
     b, hq, hd = q.shape
     _, bs, hkv, _ = k_pages.shape
+    m = block_tables.shape[1]
     g = hq // hkv
     if scale is None:
         scale = 1.0 / math.sqrt(hd)
     quant = k_scales is not None
+    r_pack = (default_rows_per_pack(b, g) if rows_per_pack is None
+              else max(1, rows_per_pack))
 
-    qg = q.reshape(b, hkv, g, hd)  # head h = kv * G + gi, matching _gqa layout
-    kernel = functools.partial(_kernel, block_size=bs, scale=scale, quant=quant)
+    b_pad = -(-b // r_pack) * r_pack
+    if b_pad != b:
+        pad = b_pad - b
+        q = jnp.pad(q, ((0, pad), (0, 0), (0, 0)))
+        block_tables = jnp.pad(block_tables, ((0, pad), (0, 0)),
+                               constant_values=-1)
+        lengths = jnp.pad(lengths, (0, pad))  # length 0: fully masked
+
+    qg = q.reshape(b_pad, hkv, g, hd)  # head h = kv*G + gi (_gqa layout)
+    kernel = functools.partial(
+        _kernel, block_size=bs, scale=scale, quant=quant,
+        rows_per_pack=r_pack, max_blocks=m,
+    )
     in_specs = [
-        pl.BlockSpec((1, hkv, g, hd), lambda i, bt, ln: (i, 0, 0, 0)),
+        pl.BlockSpec((r_pack, hkv, g, hd), lambda i, bt, ln: (i, 0, 0, 0)),
         pl.BlockSpec(memory_space=pltpu.ANY),
         pl.BlockSpec(memory_space=pltpu.ANY),
     ]
-    scratch = [
-        pltpu.VMEM((bs, hkv, hd), k_pages.dtype),
-        pltpu.VMEM((bs, hkv, hd), v_pages.dtype),
+    scratch = [  # double-buffered (2 slots) per-row page tiles
+        pltpu.VMEM((2, r_pack, bs, hkv, hd), k_pages.dtype),
+        pltpu.VMEM((2, r_pack, bs, hkv, hd), v_pages.dtype),
     ]
     operands = [block_tables, lengths, qg, k_pages, v_pages]
     if quant:
@@ -130,23 +226,24 @@ def paged_attention(
             pl.BlockSpec(memory_space=pltpu.ANY),
         ]
         scratch += [
-            pltpu.VMEM((bs, hkv), jnp.float32),
-            pltpu.VMEM((bs, hkv), jnp.float32),
+            pltpu.VMEM((2, r_pack, bs, hkv), jnp.float32),
+            pltpu.VMEM((2, r_pack, bs, hkv), jnp.float32),
         ]
         operands += [k_scales, v_scales]
-    scratch += [pltpu.SemaphoreType.DMA] * (4 if quant else 2)
+    scratch += [pltpu.SemaphoreType.DMA((2, r_pack))] * (4 if quant else 2)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(b,),
+        grid=(b_pad // r_pack,),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, hkv, g, hd), lambda i, bt, ln: (i, 0, 0, 0)),
+        out_specs=pl.BlockSpec((r_pack, hkv, g, hd),
+                               lambda i, bt, ln: (i, 0, 0, 0)),
         scratch_shapes=scratch,
     )
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, hkv, g, hd), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b_pad, hkv, g, hd), q.dtype),
         interpret=interpret,
     )(*operands)
-    return out.reshape(b, hq, hd)
+    return out[:b].reshape(b, hq, hd)

@@ -10,6 +10,12 @@ uses off-TPU and the reference the Pallas kernel is validated against.
 
 Block-table entries < 0 mark unallocated tail blocks (gather clamps them to
 block 0; the length mask hides whatever garbage that reads).
+
+``paged_attention_packed_ref`` is the row-packed twin mirroring the Pallas
+kernel's MXU tiling (packs of rows share one block-diagonal-masked score
+tile); it computes the same attention and exists so CPU tests can pin the
+packed layout's masking/ragged-pack/dequant math independently of the
+kernel.
 """
 
 from __future__ import annotations
@@ -74,3 +80,80 @@ def paged_attention_ref(
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgt,btkd->bkgd", probs.astype(v.dtype), v)
     return out.reshape(b, hq, hd).astype(q.dtype)
+
+
+def paged_attention_packed_ref(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_tables: jax.Array,
+    lengths: jax.Array,
+    k_scales: Optional[jax.Array] = None,
+    v_scales: Optional[jax.Array] = None,
+    scale: Optional[float] = None,
+    rows_per_pack: int = 4,
+) -> jax.Array:
+    """Row-packed twin of the oracle, mirroring the Pallas kernel's tiling:
+    packs of R rows share one score tile whose key axis CONCATENATES the
+    packed rows' pages, with the cross-row quadrants (and per-row length
+    tails) masked to -inf so the softmax reduces to each row's own result.
+
+    Same arguments and result as ``paged_attention_ref`` — the point of
+    this twin is that CPU tests can pin the PACKED layout's math (ragged
+    last pack, block-diagonal masking, int8 dequant inside the packed
+    tile) against both the plain oracle and the kernel."""
+    b, hq, hd = q.shape
+    n, bs, hkv, _ = k_pages.shape
+    g = hq // hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(hd)
+    r_pack = max(1, rows_per_pack)
+
+    b_pad = -(-b // r_pack) * r_pack
+    if b_pad != b:
+        pad = b_pad - b
+        q = jnp.pad(q, ((0, pad), (0, 0), (0, 0)))
+        block_tables = jnp.pad(block_tables, ((0, pad), (0, 0)),
+                               constant_values=-1)
+        lengths = jnp.pad(lengths, (0, pad))
+
+    k = gather_pages(k_pages, block_tables)  # (B', T, Hkv, hd)
+    v = gather_pages(v_pages, block_tables)
+    if k_scales is not None:
+        k = (k.astype(jnp.float32)
+             * gather_pages(k_scales, block_tables)[..., None])
+        v = (v.astype(jnp.float32)
+             * gather_pages(v_scales, block_tables)[..., None])
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    t = k.shape[1]
+
+    npk = b_pad // r_pack
+    # (npk, Hkv, R*G, hd) packed queries; (npk, Hkv, R*T, hd) packed keys.
+    qp = jnp.transpose(
+        q.astype(jnp.float32).reshape(npk, r_pack, hkv, g, hd),
+        (0, 2, 1, 3, 4),
+    ).reshape(npk, hkv, r_pack * g, hd)
+    kp = jnp.transpose(
+        k.reshape(npk, r_pack, t, hkv, hd), (0, 3, 1, 2, 4)
+    ).reshape(npk, hkv, r_pack * t, hd)
+    vp = jnp.transpose(
+        v.reshape(npk, r_pack, t, hkv, hd), (0, 3, 1, 2, 4)
+    ).reshape(npk, hkv, r_pack * t, hd)
+
+    s = jnp.einsum("pknd,pkmd->pknm", qp, kp,
+                   preferred_element_type=jnp.float32) * scale
+    rq = jnp.arange(r_pack * g)[:, None] // g          # query's pack row
+    rc = jnp.arange(r_pack * t)[None, :] // t          # key's pack row
+    pos = jnp.arange(r_pack * t)[None, :] % t          # key's logical pos
+    len_rows = lengths.reshape(npk, r_pack)            # (npk, R)
+    # Per-column lengths: column m belongs to pack row m // t.
+    len_cols = jnp.repeat(len_rows, t, axis=1)         # (npk, R*T)
+    valid = jnp.logical_and((rq == rc)[None], pos[None] < len_cols[:, None])
+    s = jnp.where(valid[:, None], s, NEG_INF)          # (npk, Hkv, RG, RT)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("pknm,pkmd->pknd", p, vp)           # (npk, Hkv, R*G, hd)
+    out = jnp.transpose(
+        o.reshape(npk, hkv, r_pack, g, hd), (0, 2, 1, 3, 4)
+    ).reshape(b_pad, hq, hd)
+    return out[:b].astype(q.dtype)

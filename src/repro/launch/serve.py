@@ -56,6 +56,14 @@ def main():
                     help="speculation window: draft tokens per step")
     ap.add_argument("--spec-dynamic-k", action="store_true",
                     help="per-row adaptive speculation windows")
+    ap.add_argument("--pipeline-depth", type=int, default=None,
+                    help="in-flight decode steps (default 2, or the "
+                         "REPRO_SERVING_PIPELINE_DEPTH env var): the engine "
+                         "dispatches step N+1 before consuming step N's "
+                         "token transfer, overlapping host token/slot "
+                         "bookkeeping with device compute. 1 disables the "
+                         "overlap (bit-for-bit the serial engine); any "
+                         "depth produces identical token streams")
     ap.add_argument("--dp", type=int, default=1,
                     help="data-parallel mesh axis: slots, per-slot state "
                          "and KV pools shard over dp devices (max-batch "
@@ -129,7 +137,8 @@ def main():
                         prefill_chunk=args.prefill_chunk,
                         eos_id=args.eos,
                         spec_config=spec_config,
-                        parallelism=parallelism)
+                        parallelism=parallelism,
+                        pipeline_depth=args.pipeline_depth)
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
         eng.submit(rng.integers(2, cfg.vocab_size // 2, size=8),
@@ -142,10 +151,13 @@ def main():
     print(f"{len(out)} requests, {n} tokens, {n/dt:.1f} tok/s")
     s = eng.stats()
     if s.get("steps"):
-        print(f"decode steps: {s['steps']}  "
+        print(f"decode steps: {s['steps']} (pipeline depth "
+              f"{s['pipeline_depth']})  "
               f"p50={s['step_p50_s']*1e3:.2f}ms  "
               f"p90={s['step_p90_s']*1e3:.2f}ms  "
-              f"p99={s['step_p99_s']*1e3:.2f}ms")
+              f"p99={s['step_p99_s']*1e3:.2f}ms  "
+              f"[device wait {s['device_wait_mean_s']*1e3:.2f}ms + host "
+              f"{s['host_mean_s']*1e3:.2f}ms per step]")
     cs = eng.cache_stats()
     extra = (f"  peak blocks={cs['blocks_peak']}/{cs['num_blocks']}"
              if cs["layout"] == "paged" else "")

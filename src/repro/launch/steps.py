@@ -140,12 +140,23 @@ def make_decode_step(model: Model) -> Callable:
 # call and never donated; device state is always reassigned from the step's
 # outputs, never reused.
 #
-# EOS early-exit happens ON DEVICE: the decode steps compare the sampled
-# token against each row's eos id and clear the row's active flag in the
-# same fused call, so a finished row stops sampling/writing on the very next
-# step with no host round-trip.  The host learns about it for free from the
-# token vector it already transfers, and composes its own view (admission,
-# max-token / max-len finishes) through the ``host_keep`` mask input.
+# ALL finish detection happens ON DEVICE: the decode steps compare the
+# sampled token against each row's eos id, decrement the row's remaining
+# token ``budget`` (set at admission to max_new_tokens - 1) and check the
+# max_len bound, clearing the row's active flag in the same fused call — so
+# a finished row stops sampling/writing on the very next step with no host
+# round-trip, WHATEVER its finish reason.  The host learns about finishes
+# for free from the token vector it already transfers, and composes its own
+# (possibly stale) view through the ``host_keep`` mask input.
+#
+# Device-authoritative exits are what make the engine's depth-K step
+# pipeline sound: step N+1 can be dispatched before step N's tokens reach
+# the host because a row that finishes at step N is masked by the DEVICE
+# from N+1 on — the chained device state (cache, cache_len, budget, keys,
+# active) is bit-identical whether the host consumed step N's transfer
+# before or after dispatching N+1.  ``host_keep`` is then a pure safety
+# net (it can only re-mask rows the device already masked, or rows whose
+# slot the host has since retired — whose writes are garbage by contract).
 
 def sample_tokens(key_data: jax.Array, logits: jax.Array, temps: jax.Array):
     """Vectorized per-row sampling: greedy where temps <= 0, categorical at
@@ -181,50 +192,68 @@ def set_cache_rows(cache, rows, slots: jax.Array):
     return walk(cache, rows)
 
 
-def _sample_advance_exit(logits, last_token, cache_len, key_data, act,
-                         temps, eos):
+def _sample_advance_exit(logits, last_token, cache_len, budget, key_data,
+                         act, temps, eos, max_len):
     """Shared decode-step tail: batched sampling, inactive-row masking,
-    per-row length advance, and the device-side EOS active-flag update.
-    Both decode builders (dense slab and paged) MUST share this so their
-    sampling/EOS semantics cannot diverge."""
-    key_data, sampled = sample_tokens(key_data, logits[:, 0], temps)
+    per-row length advance, and the device-side finish update (EOS sample,
+    exhausted token budget, or the max_len-1 cache bound — every reason a
+    host would retire the row).  Both decode builders (dense slab and
+    paged) MUST share this so their sampling/exit semantics cannot
+    diverge."""
+    new_kd, sampled = sample_tokens(key_data, logits[:, 0], temps)
+    # Inactive rows FREEZE all their per-slot state — token, length,
+    # budget, and PRNG key alike.  The key freeze is what makes extra
+    # pipeline dispatches true no-ops: a retired slot's key chain must not
+    # depend on how many garbage steps ran before the host caught up, or
+    # the slot's next occupant would sample a different stream per depth.
     sampled = jnp.where(act, sampled, last_token)
-    cache_len = cache_len + act.astype(jnp.int32)
-    active = jnp.logical_and(act, sampled != eos)
-    return sampled, cache_len, key_data, active
+    key_data = jnp.where(act[:, None], new_kd, key_data)
+    adv = act.astype(jnp.int32)
+    cache_len = cache_len + adv
+    budget = budget - adv
+    alive = jnp.logical_and(budget > 0, cache_len < max_len - 1)
+    active = jnp.logical_and(jnp.logical_and(act, sampled != eos), alive)
+    return sampled, cache_len, budget, key_data, active
 
 
-# donate: cache, last_token, cache_len, key_data, active
-DECODE_DONATE = (1, 2, 3, 4, 5)
+# donate: cache, cache_len, budget, key_data, active.  last_token is NOT
+# donated: the sampled vector a step emits IS the next step's last_token,
+# and the pipeline ring holds it for a still-pending D2H — donating it to
+# step N+1 would delete step N's in-flight transfer.  At (B,) int32 the
+# un-aliased copy is noise next to the cache.
+DECODE_DONATE = (1, 3, 4, 5, 6)
 
 
-def make_decode_sample_step(model: Model) -> Callable:
-    """Fused decode + batched sampling + device-side EOS exit: one jitted
-    call per engine step and zero host round-trips.  Inactive rows keep
-    their last_token and cache_len (their sampled garbage is masked out on
-    device).  ``eos`` is a per-row token id (-1 disables); a row that
-    samples its eos id drops out of ``active`` in the same call."""
+def make_decode_sample_step(model: Model, max_len: int) -> Callable:
+    """Fused decode + batched sampling + device-side finish exits: one
+    jitted call per engine step and zero host round-trips.  Inactive rows
+    keep their last_token and cache_len (their sampled garbage is masked
+    out on device).  ``eos`` is a per-row token id (-1 disables); a row
+    that samples its eos id, spends its last budgeted token, or hits the
+    max_len-1 cache bound drops out of ``active`` in the same call."""
 
-    def decode_sample_step(params, cache, last_token, cache_len, key_data,
-                           active, host_keep, temps, eos):
+    def decode_sample_step(params, cache, last_token, cache_len, budget,
+                           key_data, active, host_keep, temps, eos):
         act = jnp.logical_and(active, host_keep)
         logits, cache, _ = model.apply(
             params, last_token[:, None], mode="decode",
             cache=cache, cache_len=cache_len,
         )
-        sampled, cache_len, key_data, active = _sample_advance_exit(
-            logits, last_token, cache_len, key_data, act, temps, eos
+        sampled, cache_len, budget, key_data, active = _sample_advance_exit(
+            logits, last_token, cache_len, budget, key_data, act, temps,
+            eos, max_len,
         )
-        return sampled, cache, cache_len, key_data, active
+        return sampled, cache, cache_len, budget, key_data, active
 
     return decode_sample_step
 
 
-# donate: pools, last_token, cache_len, key_data, active
-PAGED_DECODE_DONATE = (1, 3, 4, 5, 6)
+# donate: pools, cache_len, budget, key_data, active (last_token stays
+# un-donated — the ring may hold it for an in-flight D2H, see DECODE_DONATE)
+PAGED_DECODE_DONATE = (1, 4, 5, 6, 7)
 
 
-def make_paged_decode_step(model: Model) -> Callable:
+def make_paged_decode_step(model: Model, max_len: int) -> Callable:
     """Paged twin of ``decode_sample_step``: the cache is a shared block
     pool addressed through ``block_tables`` (see serving/kvcache).  Rows
     that are not effectively active get their block-table row forced to -1
@@ -233,23 +262,30 @@ def make_paged_decode_step(model: Model) -> Callable:
     correctness requirement, not an optimization."""
 
     def paged_decode_step(params, pools, block_tables, last_token, cache_len,
-                          key_data, active, host_keep, temps, eos):
+                          budget, key_data, active, host_keep, temps, eos):
         act = jnp.logical_and(active, host_keep)
         bt_eff = jnp.where(act[:, None], block_tables, -1)
+        # Zero dead rows' lengths for the attention call only (real
+        # cache_len still advances below): a retired slot keeps its final
+        # cache_len until reuse, and the packed kernel's page loop runs to
+        # the LONGEST length in each row pack — one stale 16-page row
+        # would drag its whole pack through 16 junk-page DMAs per step.
+        cl_eff = jnp.where(act, cache_len, 0)
         logits, pools, _ = model.apply(
             params, last_token[:, None], mode="decode",
-            cache=pools, cache_len=cache_len, block_tables=bt_eff,
+            cache=pools, cache_len=cl_eff, block_tables=bt_eff,
         )
-        sampled, cache_len, key_data, active = _sample_advance_exit(
-            logits, last_token, cache_len, key_data, act, temps, eos
+        sampled, cache_len, budget, key_data, active = _sample_advance_exit(
+            logits, last_token, cache_len, budget, key_data, act, temps,
+            eos, max_len,
         )
-        return sampled, pools, cache_len, key_data, active
+        return sampled, pools, cache_len, budget, key_data, active
 
     return paged_decode_step
 
 
-# donate: pools, cache_len, last_token, key_data, active
-PAGED_PREFILL_DONATE = (1, 7, 8, 9, 11)
+# donate: pools, cache_len, last_token, budget, key_data, active
+PAGED_PREFILL_DONATE = (1, 9, 10, 11, 12, 14)
 
 
 def make_paged_prefill_chunk_step(model: Model) -> Callable:
@@ -265,13 +301,19 @@ def make_paged_prefill_chunk_step(model: Model) -> Callable:
     / cache_len or overwritten before ever becoming visible, and writes past
     the row's block reservation drop on the -1 table entries.  ``fslots[r]``
     is the row's engine slot when this chunk FINISHES its prompt (>= nslots
-    otherwise): finishing rows commit cache_len/last_token/keys/active and
-    sample their first token from the last real position's logits.
+    otherwise): finishing rows commit cache_len/last_token/budget/keys/
+    active (``budgets[r]`` is the request's remaining token budget,
+    max_new_tokens - 1, feeding the device-side exit; ``row_keys[r]`` the
+    REQUEST's own PRNG key, fold_in(engine seed, uid) — per-request chains
+    make sampled streams independent of slot assignment and admission
+    timing, which the depth-K pipeline shifts) and sample their first
+    token from the last real position's logits.
     Compiles exactly once — the (R, C) shape never changes."""
 
     def paged_prefill_chunk_step(params, pools, bt_rows, tokens, starts,
-                                 nvalid, fslots, cache_len, last_token,
-                                 key_data, temps, active):
+                                 nvalid, fslots, budgets, row_keys,
+                                 cache_len, last_token, budget, key_data,
+                                 temps, active):
         logits, pools, _ = model.apply(
             params, tokens, mode="decode",
             cache=pools, cache_len=starts, block_tables=bt_rows,
@@ -279,20 +321,19 @@ def make_paged_prefill_chunk_step(model: Model) -> Callable:
         last = jnp.take_along_axis(
             logits, jnp.maximum(nvalid - 1, 0)[:, None, None], axis=1
         )
-        nslots = cache_len.shape[0]
-        row_keys = key_data[jnp.clip(fslots, 0, nslots - 1)]
         row_keys, first = sample_tokens(row_keys, last[:, 0], temps)
         cache_len = cache_len.at[fslots].set(starts + nvalid, mode="drop")
         last_token = last_token.at[fslots].set(first, mode="drop")
+        budget = budget.at[fslots].set(budgets, mode="drop")
         key_data = key_data.at[fslots].set(row_keys, mode="drop")
         active = active.at[fslots].set(True, mode="drop")
-        return first, pools, cache_len, last_token, key_data, active
+        return first, pools, cache_len, last_token, budget, key_data, active
 
     return paged_prefill_chunk_step
 
 
-# donate: cache, cache_len, last_token, key_data, active
-PREFILL_ADMIT_DONATE = (1, 5, 6, 7, 9)
+# donate: cache, cache_len, last_token, budget, key_data, active
+PREFILL_ADMIT_DONATE = (1, 7, 8, 9, 10, 12)
 
 
 def make_prefill_admit_step(model: Model, max_len: int,
@@ -300,16 +341,17 @@ def make_prefill_admit_step(model: Model, max_len: int,
     """Batched multi-request admission in one jitted call: prefill R
     prompts (right-padded to a shared bucket length P), scatter their fresh
     row caches into the engine cache (replacing any previous occupant's
-    rows wholesale), set per-slot lengths / last tokens / keys, and sample
-    every row's first token.
+    rows wholesale), set per-slot lengths / last tokens / budgets / keys,
+    and sample every row's first token.
 
     ``slots`` entries >= max_batch mark padding rows: all their writes drop,
     so admission groups keep a fixed (max_batch, P) shape and the engine
     compiles once per prompt-length bucket, not once per prompt length.
     """
 
-    def prefill_admit_step(params, cache, tokens, plens, slots, cache_len,
-                           last_token, key_data, temps, active):
+    def prefill_admit_step(params, cache, tokens, plens, slots, budgets,
+                           row_keys, cache_len, last_token, budget,
+                           key_data, temps, active):
         row_cache = model.init_cache(tokens.shape[0], max_len,
                                      kv_quant=kv_quant)
         logits, row_cache, _ = model.apply(
@@ -317,15 +359,14 @@ def make_prefill_admit_step(model: Model, max_len: int,
         )
         # Last REAL position's logits per row (prompts are right-padded).
         last = jnp.take_along_axis(logits, (plens - 1)[:, None, None], axis=1)
-        nslots = cache_len.shape[0]
-        row_keys = key_data[jnp.clip(slots, 0, nslots - 1)]
         row_keys, first = sample_tokens(row_keys, last[:, 0], temps)
         cache = set_cache_rows(cache, row_cache, slots)
         cache_len = cache_len.at[slots].set(plens, mode="drop")
         last_token = last_token.at[slots].set(first, mode="drop")
+        budget = budget.at[slots].set(budgets, mode="drop")
         key_data = key_data.at[slots].set(row_keys, mode="drop")
         active = active.at[slots].set(True, mode="drop")
-        return first, cache, cache_len, last_token, key_data, active
+        return first, cache, cache_len, last_token, budget, key_data, active
 
     return prefill_admit_step
 
@@ -365,12 +406,16 @@ def make_spec_draft_step(model: Model, k: int) -> Callable:
         bt_eff = None
         if block_tables is not None:
             bt_eff = jnp.where(act[:, None], block_tables, -1)
+        # Dead rows attend at length 0 (see paged_decode_step) and their
+        # key chain freezes across the scan (see _sample_advance_exit).
+        cl_eff = jnp.where(act, cache_len, 0)
+        kd_in = key_data
 
         def body(carry, i):
             tok, pools, kd = carry
             logits, pools, _ = model.apply(
                 params, tok[:, None], mode="decode", cache=pools,
-                cache_len=cache_len + i, block_tables=bt_eff,
+                cache_len=cl_eff + i, block_tables=bt_eff,
             )
             lg = logits[:, 0]
             q = jax.nn.softmax(
@@ -384,6 +429,7 @@ def make_spec_draft_step(model: Model, k: int) -> Callable:
             body, (last_token, pools, key_data),
             jnp.arange(k + 1, dtype=jnp.int32),
         )
+        key_data = jnp.where(act[:, None], key_data, kd_in)
         proposals = toks[:k].T  # (B, K); the (K+1)-th sample is discarded
         q_probs = jnp.moveaxis(qs[:k], 0, 1)  # (B, K, V)
         return proposals, q_probs, pools, key_data
@@ -391,18 +437,20 @@ def make_spec_draft_step(model: Model, k: int) -> Callable:
     return spec_draft_step
 
 
-# donate: pools (target), last_token, cache_len, key_data, active
-SPEC_VERIFY_DONATE = (1, 3, 6, 7, 8)
+# donate: pools (target), last_token, cache_len, budget, key_data, active
+SPEC_VERIFY_DONATE = (1, 3, 6, 7, 8, 9)
 
 
-def make_spec_verify_step(model: Model, k: int) -> Callable:
+def make_spec_verify_step(model: Model, k: int, max_len: int) -> Callable:
     """Chunk-verification root: run the target on [t0, d_1..d_K] (one S=K+1
     chunk decode against the cache — the paged S>1 path, or the dense slab's
     chunked twin), accept/resample on device (greedy = exact prefix match;
     temperature = Leviathan accept u < p/q + residual resample, preserving
     the target distribution exactly), advance each row's cache_len by the
     m+1 committed entries [t0, d_1..d_m] — the cache-rollback contract —
-    and fuse the device-side EOS scan over the committed tokens.
+    and fuse the device-side finish scan over the committed tokens (EOS,
+    exhausted token ``budget``, or the max_len-1 cache bound, mirroring the
+    plain decode root so pipelined spec steps stay depth-invariant).
 
     Returns a single packed int32 matrix for the step's ONE D2H transfer:
     ``[out_tokens (K+1) | n_commit | m]`` per row, where out_tokens is
@@ -412,8 +460,8 @@ def make_spec_verify_step(model: Model, k: int) -> Callable:
     from repro.serving.spec.verify import verify_tail
 
     def spec_verify_step(params, pools, block_tables, last_token, proposals,
-                         q_probs, cache_len, key_data, active, host_keep,
-                         temps, eos, k_row):
+                         q_probs, cache_len, budget, key_data, active,
+                         host_keep, temps, eos, k_row):
         act = jnp.logical_and(active, host_keep)
         bt_eff = None
         if block_tables is not None:
@@ -423,9 +471,12 @@ def make_spec_verify_step(model: Model, k: int) -> Callable:
             params, chunk, mode="decode", cache=pools, cache_len=cache_len,
             block_tables=bt_eff,
         )
-        key_data, m, t_new, out_tokens = verify_tail(
+        new_kd, m, t_new, out_tokens = verify_tail(
             key_data, logits, q_probs, proposals, temps, k_row
         )
+        # Dead rows freeze their keys (see _sample_advance_exit) so extra
+        # pipelined dispatches cannot perturb a reused slot's sample chain.
+        key_data = jnp.where(act[:, None], new_kd, key_data)
         t_new = jnp.where(act, t_new, last_token)
         n_raw = jnp.where(act, m + 1, 0)
         cache_len = cache_len + n_raw
@@ -434,34 +485,46 @@ def make_spec_verify_step(model: Model, k: int) -> Callable:
         is_eos = jnp.logical_and(out_tokens == eos[:, None], committed)
         any_eos = is_eos.any(axis=1)
         n_commit = jnp.where(any_eos, jnp.argmax(is_eos, axis=1) + 1, n_raw)
-        active = jnp.logical_and(act, jnp.logical_not(any_eos))
+        # The host emits n_commit tokens (minus any it truncates at its own
+        # budget/max_len bound — but those bounds clear `active` right here,
+        # so the row is device-dead before the next dispatch either way).
+        budget = budget - n_commit
+        alive = jnp.logical_and(budget > 0, cache_len < max_len - 1)
+        active = jnp.logical_and(
+            jnp.logical_and(act, jnp.logical_not(any_eos)), alive
+        )
         pack = jnp.concatenate(
             [out_tokens.astype(jnp.int32), n_commit[:, None].astype(jnp.int32),
              jnp.where(act, m, 0)[:, None].astype(jnp.int32)], axis=1,
         )
-        return pack, pools, cache_len, t_new, key_data, active
+        return pack, pools, cache_len, t_new, budget, key_data, active
 
     return spec_verify_step
 
 
-# donate: pools (draft)
-DRAFT_PREFILL_DONATE = (1,)
+# donate: pools/cache (draft), key_data (draft)
+PAGED_DRAFT_PREFILL_DONATE = (1, 6)
+DENSE_DRAFT_PREFILL_DONATE = (1, 4)
 
 
 def make_paged_draft_prefill_step(model: Model) -> Callable:
     """Draft twin of the paged prefill chunk root: stream the SAME token
-    chunk into the draft pools — no sampling, no engine-state writes (the
-    engine's cache_len/last_token already describe both caches).  Garbage
-    tokens past a row's nvalid follow the target root's argument: masked by
+    chunk into the draft pools — no sampling; the only engine-state write
+    is resetting finishing rows' draft PRNG keys to the REQUEST's own draft
+    chain (fold_in(draft seed, uid) — the scheduling-independence argument
+    of the target roots applies to draft proposals too).  Garbage tokens
+    past a row's nvalid follow the target root's argument: masked by
     causality/cache_len or overwritten before visible; writes past the
     row's draft reservation drop on -1 table entries."""
 
-    def paged_draft_prefill_step(params, pools, bt_rows, tokens, starts):
+    def paged_draft_prefill_step(params, pools, bt_rows, tokens, starts,
+                                 fslots, key_data, row_keys):
         _, pools, _ = model.apply(
             params, tokens, mode="decode", cache=pools, cache_len=starts,
             block_tables=bt_rows, output="hidden",
         )
-        return pools
+        key_data = key_data.at[fslots].set(row_keys, mode="drop")
+        return pools, key_data
 
     return paged_draft_prefill_step
 
@@ -469,16 +532,19 @@ def make_paged_draft_prefill_step(model: Model) -> Callable:
 def make_dense_draft_prefill_step(model: Model, max_len: int,
                                   kv_quant: bool = False) -> Callable:
     """Draft twin of the dense prefill-admit root: prefill the prompt batch
-    through the DRAFT params and scatter the fresh rows into the draft
-    slab (pad slots >= max_batch drop, exactly like admission)."""
+    through the DRAFT params, scatter the fresh rows into the draft slab
+    (pad slots >= max_batch drop, exactly like admission), and reset the
+    admitted rows' draft PRNG keys to their requests' own chains."""
 
-    def dense_draft_prefill_step(params, cache, tokens, slots):
+    def dense_draft_prefill_step(params, cache, tokens, slots, key_data,
+                                 row_keys):
         row_cache = model.init_cache(tokens.shape[0], max_len,
                                      kv_quant=kv_quant)
         _, row_cache, _ = model.apply(
             params, tokens, mode="prefill", cache=row_cache, output="hidden"
         )
-        return set_cache_rows(cache, row_cache, slots)
+        key_data = key_data.at[slots].set(row_keys, mode="drop")
+        return set_cache_rows(cache, row_cache, slots), key_data
 
     return dense_draft_prefill_step
 
@@ -662,22 +728,24 @@ class ServingShardings:
 
     def decode(self, params=None):
         p = params or self.params
-        return ((p, self.cache, self.row, self.row, self.mat, self.row,
-                 self.row, self.row, self.row),
-                (self.row, self.cache, self.row, self.mat, self.row))
+        return ((p, self.cache, self.row, self.row, self.row, self.mat,
+                 self.row, self.row, self.row, self.row),
+                (self.row, self.cache, self.row, self.row, self.mat,
+                 self.row))
 
     def paged_decode(self, params=None):
         p = params or self.params
-        return ((p, self.cache, self.mat, self.row, self.row, self.mat,
-                 self.row, self.row, self.row, self.row),
-                (self.row, self.cache, self.row, self.mat, self.row))
+        return ((p, self.cache, self.mat, self.row, self.row, self.row,
+                 self.mat, self.row, self.row, self.row, self.row),
+                (self.row, self.cache, self.row, self.row, self.mat,
+                 self.row))
 
     def paged_prefill_chunk(self):
         return ((self.params, self.cache, self.mat, self.mat, self.row,
-                 self.row, self.row, self.row, self.row, self.mat, self.row,
-                 self.row),
-                (self.row, self.cache, self.row, self.row, self.mat,
-                 self.row))
+                 self.row, self.row, self.row, self.mat, self.row, self.row,
+                 self.row, self.mat, self.row, self.row),
+                (self.row, self.cache, self.row, self.row, self.row,
+                 self.mat, self.row))
 
     def prefill_admit(self, bucketed: bool = True):
         """``bucketed=False`` (pad-sensitive archs): admission batches are
@@ -687,9 +755,9 @@ class ServingShardings:
         under GSPMD)."""
         r = self.row if bucketed else self.rep
         m = self.mat if bucketed else self.rep
-        return ((self.params, self.cache, m, r, r,
-                 self.row, self.row, self.mat, r, self.row),
-                (r, self.cache, self.row, self.row, self.mat,
+        return ((self.params, self.cache, m, r, r, r, m,
+                 self.row, self.row, self.row, self.mat, r, self.row),
+                (r, self.cache, self.row, self.row, self.row, self.mat,
                  self.row))
 
     def spec_draft(self, draft_params, paged: bool):
@@ -701,17 +769,20 @@ class ServingShardings:
     def spec_verify(self, paged: bool):
         bt = self.mat if paged else None
         return ((self.params, self.cache, bt, self.row, self.mat, self.mat3,
-                 self.row, self.mat, self.row, self.row, self.row, self.row,
-                 self.row),
-                (self.mat, self.cache, self.row, self.row, self.mat,
-                 self.row))
+                 self.row, self.row, self.mat, self.row, self.row, self.row,
+                 self.row, self.row),
+                (self.mat, self.cache, self.row, self.row, self.row,
+                 self.mat, self.row))
 
     def draft_prefill_paged(self, draft_params):
-        return ((draft_params, self.cache, self.mat, self.mat, self.row),
-                self.cache)
+        return ((draft_params, self.cache, self.mat, self.mat, self.row,
+                 self.row, self.mat, self.mat),
+                (self.cache, self.mat))
 
     def draft_prefill_dense(self, draft_params):
-        return ((draft_params, self.cache, self.mat, self.row), self.cache)
+        return ((draft_params, self.cache, self.mat, self.row, self.mat,
+                 self.mat),
+                (self.cache, self.mat))
 
 
 def train_shardings(params_shape, par: Parallelism, batch_shapes, fsdp: bool = False):

@@ -18,10 +18,22 @@ memory path keeps up with the factored matmuls):
     the multi-MB cache is aliased in place by XLA instead of being copied
     every step.
   * ``step()`` is ONE jitted call (decode + batched sampling + device-side
-    EOS early-exit for every live row) followed by ONE device->host transfer
-    of the sampled token vector.  A row that samples its eos id clears its
+    finish exits for every live row) followed by AT MOST one device->host
+    transfer of a sampled token vector.  A row that samples its eos id,
+    spends its last budgeted token, or hits the max_len bound clears its
     own active flag on device; the host learns from the tokens it already
     has.
+  * The step loop is PIPELINED (``pipeline_depth``, default 2): because
+    every finish reason is device-authoritative, step N+1's decode root can
+    be dispatched before step N's token transfer is consumed — the engine
+    keeps a small ring of in-flight token futures and syncs only the oldest
+    when the ring is full, so token emission, slot/block freeing and
+    request admission bookkeeping overlap the device's next step instead
+    of serializing behind a host round-trip every token.  Depth 1 is
+    bit-for-bit the unpipelined engine, and any depth produces identical
+    token streams (the device state chain never observes the host's lag).
+    Host-mutating events that need a synced view — admission, defrag,
+    dynamic-k speculation — drain the ring first (``drain()``).
 
 Paged path (``models.api.cache_layout(model) == "paged"``: pure-attention
 stacks — see serving/kvcache/):
@@ -82,6 +94,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import os
 import time
 from collections import deque
 from typing import Dict, List, Optional
@@ -92,8 +105,9 @@ import numpy as np
 
 from repro.launch.steps import (
     DECODE_DONATE,
-    DRAFT_PREFILL_DONATE,
+    DENSE_DRAFT_PREFILL_DONATE,
     PAGED_DECODE_DONATE,
+    PAGED_DRAFT_PREFILL_DONATE,
     PAGED_PREFILL_DONATE,
     PREFILL_ADMIT_DONATE,
     SPEC_DRAFT_DONATE,
@@ -151,6 +165,28 @@ class _PrefillTask:
     pos: int = 0  # next prompt position to feed
 
 
+@dataclasses.dataclass
+class _InFlight:
+    """One dispatched-but-unconsumed decode step in the pipeline ring.
+
+    ``tokens`` is the step's device-resident result (the sampled token
+    vector, or the packed [tokens|n_commit|m] matrix in speculative mode);
+    ``mask`` snapshots the host's active view at dispatch so consumption
+    attributes tokens to the rows that were live then.  FIFO consumption
+    keeps the invariant that a row live on the host at consume time was
+    device-active at this entry's dispatch (every device exit has a host
+    twin that fires when the triggering entry is consumed — earlier in the
+    ring by construction)."""
+    tokens: jax.Array
+    mask: np.ndarray
+    dispatch_s: float
+    spec: bool = False
+    k_row: Optional[np.ndarray] = None
+
+
+_PIPELINE_DEPTH_ENV = "REPRO_SERVING_PIPELINE_DEPTH"
+
+
 class ServingEngine:
     def __init__(
         self,
@@ -168,7 +204,15 @@ class ServingEngine:
         kv_quant: bool = False,
         spec_config: Optional[SpecConfig] = None,
         parallelism: Optional[Parallelism] = None,
+        pipeline_depth: Optional[int] = None,
     ):
+        if pipeline_depth is None:
+            pipeline_depth = int(os.environ.get(_PIPELINE_DEPTH_ENV, "2"))
+        if pipeline_depth < 1:
+            raise ValueError(
+                f"pipeline_depth must be >= 1, got {pipeline_depth}"
+            )
+        self.pipeline_depth = pipeline_depth
         par = (parallelism
                if parallelism is not None and parallelism.active else None)
         self.par = par
@@ -210,9 +254,14 @@ class ServingEngine:
         # Device-resident state (never read back except the sampled tokens).
         self.cache_len = jnp.zeros((max_batch,), jnp.int32)
         self.last_token = jnp.zeros((max_batch,), jnp.int32)
+        self.budget_dev = jnp.zeros((max_batch,), jnp.int32)
         self.key_data = jax.random.key_data(
             jax.random.split(jax.random.key(seed), max_batch)
         )
+        # Per-request key derivation (see Request.key_data).
+        self._base_key = jax.random.key(seed)
+        self._draft_base_key = (jax.random.key(spec_config.seed)
+                                if spec_config is not None else None)
         self._active_dev = jnp.zeros((max_batch,), bool)
 
         # Host mirrors for scheduling (updated by bookkeeping + the step's
@@ -222,10 +271,35 @@ class ServingEngine:
         self._eos = np.full((max_batch,), -1, np.int32)
         self._len_host = np.zeros((max_batch,), np.int64)
 
+        # Device-resident copies of the loop-invariant host inputs
+        # (host_keep / temps / eos [/ k_row]).  They only change on slot
+        # (re)admission or a finish, so dispatch reuses the cached arrays
+        # instead of re-uploading three (B,) host arrays every step; any
+        # bookkeeping that mutates them flips ``_host_dirty``.
+        self._host_dirty = True
+        self._keep_dev = None
+        self._temps_dev = None
+        self._eos_dev = None
+        self._k_row_dev = None
+
+        # Pipeline ring of dispatched-but-unconsumed steps, plus finished
+        # requests produced by internal drains (handed out by the next
+        # public step()/_admit()/drain()).
+        self._ring: deque[_InFlight] = deque()
+        self._pending_finished: List[Request] = []
+
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.queue: deque[Request] = deque()
         self._prefilling: List[_PrefillTask] = []
         self._uid = itertools.count()
+        # Free slots are handed out in the order they FREED, not by index.
+        # Token streams never depend on slot choice (sampling keys are
+        # per-REQUEST, see Request.key_data), but freed-order assignment
+        # keeps slot/pool layouts closer across pipeline depths — at depth
+        # 2 two finishes can surface from one drain, and an index-ordered
+        # free list would swap their successors' slots relative to depth 1.
+        self._free_clock = itertools.count()
+        self._freed_at = np.arange(max_batch, dtype=np.int64) - max_batch
         self._bucketed = prefill_pad_safe(model)
 
         if self.paged:
@@ -241,8 +315,11 @@ class ServingEngine:
             if par is not None:
                 self.params = params = jax.device_put(params,
                                                       self._sh.params)
+                # Cached block-table mirror must be born with the roots'
+                # expected (B, M) sharding (see PagedKVCache.table_device).
+                self.kv.table_sharding = self._sh.mat
             self._decode = self._jit(
-                make_paged_decode_step(model), PAGED_DECODE_DONATE,
+                make_paged_decode_step(model, max_len), PAGED_DECODE_DONATE,
                 self._sh.paged_decode() if self._sh else None,
             )
             self._chunk_step = self._jit(
@@ -267,7 +344,7 @@ class ServingEngine:
                                                       self._sh.params)
                 self.cache = jax.device_put(self.cache, cache_sh)
             self._decode = self._jit(
-                make_decode_sample_step(model), DECODE_DONATE,
+                make_decode_sample_step(model, max_len), DECODE_DONATE,
                 self._sh.decode() if self._sh else None,
             )
             self._prefill = self._jit(
@@ -283,6 +360,7 @@ class ServingEngine:
             # donated buffers alias in place (resharding would copy).
             self.cache_len = jax.device_put(self.cache_len, self._sh.row)
             self.last_token = jax.device_put(self.last_token, self._sh.row)
+            self.budget_dev = jax.device_put(self.budget_dev, self._sh.row)
             self.key_data = jax.device_put(self.key_data, self._sh.mat)
             self._active_dev = jax.device_put(self._active_dev,
                                               self._sh.row)
@@ -305,20 +383,22 @@ class ServingEngine:
                                  else self._sh.cache),
                 key_sharding=self._sh.mat if self._sh else None,
             )
+            if self.paged and self._sh is not None:
+                self.draft.kv.table_sharding = self._sh.mat
             self._spec_draft = self._jit(
                 make_spec_draft_step(model, self.spec.k), SPEC_DRAFT_DONATE,
                 (self._sh.spec_draft(dparams_sh, self.paged)
                  if self._sh else None),
             )
             self._spec_verify = self._jit(
-                make_spec_verify_step(model, self.spec.k),
+                make_spec_verify_step(model, self.spec.k, max_len),
                 SPEC_VERIFY_DONATE,
                 self._sh.spec_verify(self.paged) if self._sh else None,
             )
             if self.paged:
                 self._draft_prefill = self._jit(
                     make_paged_draft_prefill_step(model),
-                    DRAFT_PREFILL_DONATE,
+                    PAGED_DRAFT_PREFILL_DONATE,
                     (self._sh.draft_prefill_paged(dparams_sh)
                      if self._sh else None),
                 )
@@ -326,7 +406,7 @@ class ServingEngine:
                 self._draft_prefill = self._jit(
                     make_dense_draft_prefill_step(model, max_len,
                                                   kv_quant=kv_quant),
-                    DRAFT_PREFILL_DONATE,
+                    DENSE_DRAFT_PREFILL_DONATE,
                     (self._sh.draft_prefill_dense(dparams_sh)
                      if self._sh else None),
                 )
@@ -339,8 +419,12 @@ class ServingEngine:
         else:
             self.draft = None
 
-        # Telemetry: step() wall times (includes the one D2H sync).
+        # Telemetry: per-consumed-step wall times (dispatch + D2H sync +
+        # host bookkeeping) plus the sync/host breakdown the benchmark
+        # reports (device wait vs host-side work per step).
         self.step_times: List[float] = []
+        self.step_device_wait_s: List[float] = []
+        self.step_host_s: List[float] = []
         self.decode_transfers = 0
 
     @staticmethod
@@ -390,16 +474,39 @@ class ServingEngine:
         self.queue.append(req)
         return req.uid
 
+    def _request_keys(self, uids, draft: bool = False) -> np.ndarray:
+        """(N, 2) uint32 per-request PRNG key data — fold_in(seed, uid),
+        one vmapped dispatch per admission group (keys depend only on the
+        engine/draft seed and the uid, never on scheduling)."""
+        base = self._draft_base_key if draft else self._base_key
+        return np.asarray(jax.vmap(
+            lambda u: jax.random.key_data(jax.random.fold_in(base, u))
+        )(jnp.asarray(uids, jnp.uint32)))
+
     def run(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
-        """Drive until queue + prefills + slots drain.  uid -> generated."""
+        """Drive until queue + prefills + slots drain.  uid -> generated.
+
+        Admission runs only when it could actually progress (see
+        ``_admission_could_progress``) — the host checks are free, and
+        calling ``_admit`` while the batch is full or the pool is
+        backpressured (the saturated regimes) would drain the step
+        pipeline every iteration and forfeit exactly the overlap it
+        exists for; a slot/block freed by an in-flight step surfaces when
+        step() consumes it, one iteration later."""
         finished: Dict[int, List[int]] = {}
         for _ in range(max_steps):
-            for req in self._admit():
-                finished[req.uid] = req.generated
+            if self._admission_could_progress():
+                for req in self._admit():
+                    finished[req.uid] = req.generated
             if not self.active.any():
-                if not self.queue and not self._prefilling:
-                    break
-                continue
+                # The host may only THINK rows are done pending in-flight
+                # transfers: flush the ring, then re-check.
+                for req in self.drain():
+                    finished[req.uid] = req.generated
+                if not self.active.any():
+                    if not self.queue and not self._prefilling:
+                        break
+                    continue
             for req in self.step():
                 finished[req.uid] = req.generated
         return finished
@@ -407,8 +514,20 @@ class ServingEngine:
     # ------------------------------------------------------------- admission
 
     def _admit(self) -> List[Request]:
-        """Admit queued requests (returns any that finish at admission)."""
-        return self._admit_paged() if self.paged else self._admit_dense()
+        """Admit queued requests (returns any that finish at admission,
+        plus any finished by the pipeline drain admission requires).
+
+        Drain discipline: admission reads the host's free-slot / block
+        views and scatters fresh per-slot state, so every in-flight step
+        must be consumed first — the ring is empty while the prefill roots
+        run, and no in-flight entry ever straddles a slot's change of
+        occupant."""
+        self._drain_ring()
+        finished = self._pop_finished()
+        finished.extend(
+            self._admit_paged() if self.paged else self._admit_dense()
+        )
+        return finished
 
     def _finish_or_activate(self, req: Request, slot: int, tok: int,
                             finished: List[Request]) -> None:
@@ -418,27 +537,66 @@ class ServingEngine:
         self.temps[slot] = req.temperature
         self._eos[slot] = -1 if req.eos_id is None else req.eos_id
         self._len_host[slot] = len(req.prompt)
+        self._host_dirty = True
         if self.spec is not None:
             self._k_row[slot] = self.spec.k  # fresh speculation window
         if (req.done or self._len_host[slot] >= self.max_len - 1
                 or tok == self._eos[slot]):
             finished.append(req)
-            if self.paged:
-                self.kv.free(slot)
-            if self.spec is not None:
-                self.draft.free(slot)
+            self._retire_slot(slot)
         else:
             self.slots[slot] = req
             self.active[slot] = True
 
     # ---- paged: reserve blocks, stream prompts chunkwise
 
+    def _free_slots(self, busy=frozenset()) -> List[int]:
+        """Free slots in the order they freed (see ``_freed_at``)."""
+        return sorted(
+            (i for i in range(self.max_batch)
+             if not self.active[i] and i not in busy),
+            key=lambda i: self._freed_at[i],
+        )
+
+    def _retire_slot(self, slot: int) -> None:
+        """Shared retirement bookkeeping for EVERY finish path (admission
+        finishes and both commit paths): release the slot, invalidate the
+        cached host inputs, stamp the freed-order clock, free KV blocks."""
+        self.slots[slot] = None
+        self.active[slot] = False
+        self._host_dirty = True
+        self._freed_at[slot] = next(self._free_clock)
+        if self.paged:
+            self.kv.free(slot)  # blocks reusable immediately
+        if self.spec is not None:
+            self.draft.free(slot)
+
+    def _admission_could_progress(self) -> bool:
+        """Cheap host-side check gating _admit() calls from run(): a
+        prefill is mid-flight, or the FIFO head could plausibly land in a
+        free slot (paged: and its worst case fits today's free blocks,
+        target AND draft pools) — otherwise calling _admit would drain the
+        step pipeline every iteration just to back off again."""
+        if self._prefilling:
+            return True
+        if not self.queue or self.active.all():
+            return False
+        if self.paged:
+            head = self.queue[0]
+            need = min(self.max_len, len(head.prompt) + head.max_new_tokens)
+            n_blocks = self.kv.blocks_for(need)
+            if self.kv.alloc.free_blocks() < n_blocks:
+                return False
+            if (self.spec is not None
+                    and self.draft.kv.alloc.free_blocks() < n_blocks):
+                return False
+        return True
+
     def _admit_paged(self) -> List[Request]:
         finished: List[Request] = []
         busy = {t.slot for t in self._prefilling}
         while self.queue:
-            free = [i for i in range(self.max_batch)
-                    if not self.active[i] and i not in busy]
+            free = self._free_slots(busy)
             if not free:
                 break
             req = self.queue[0]
@@ -488,6 +646,10 @@ class ServingEngine:
         starts = np.zeros((r_rows,), np.int32)
         nvalid = np.ones((r_rows,), np.int32)
         fslots = np.full((r_rows,), self.max_batch, np.int32)  # pad = dropped
+        budgets = np.zeros((r_rows,), np.int32)
+        rkeys = np.zeros((r_rows, 2), np.uint32)
+        d_keys = (np.zeros((r_rows, 2), np.uint32)
+                  if self.spec is not None else None)
         temps = np.zeros((r_rows,), np.float32)
         bt_rows = np.full((r_rows, self.kv.max_blocks_per_row), -1, np.int32)
         d_bt = (np.full((r_rows, self.kv.max_blocks_per_row), -1, np.int32)
@@ -506,21 +668,34 @@ class ServingEngine:
             task.pos += n
             if task.pos >= len(p):
                 fslots[r] = task.slot
+                budgets[r] = max(0, task.req.max_new_tokens - 1)
                 fin.append((r, task))
+        if fin:
+            # Per-request sampling chains for the finishing rows (one
+            # batched fold_in dispatch; see Request/_request_keys).
+            uids = [t.req.uid for _, t in fin]
+            fr = [r for r, _ in fin]
+            rkeys[fr] = self._request_keys(uids)
+            if d_keys is not None:
+                d_keys[fr] = self._request_keys(uids, draft=True)
         tok_dev, starts_dev = jnp.asarray(tokens), jnp.asarray(starts)
+        fslots_dev = jnp.asarray(fslots)
         (first, self.kv.pools, self.cache_len, self.last_token,
-         self.key_data, self._active_dev) = self._chunk_step(
+         self.budget_dev, self.key_data, self._active_dev) = self._chunk_step(
             self.params, self.kv.pools, jnp.asarray(bt_rows),
             tok_dev, starts_dev, jnp.asarray(nvalid),
-            jnp.asarray(fslots), self.cache_len, self.last_token,
-            self.key_data, jnp.asarray(temps), self._active_dev,
+            fslots_dev, jnp.asarray(budgets), jnp.asarray(rkeys),
+            self.cache_len, self.last_token, self.budget_dev, self.key_data,
+            jnp.asarray(temps), self._active_dev,
         )
         if self.spec is not None:
             # Stream the same chunk into the draft pools (its own block
-            # tables; lengths/last tokens are shared with the target).
-            self.draft.pools = self._draft_prefill(
+            # tables; lengths/last tokens are shared with the target) and
+            # reset finishing rows' draft keys to their requests' chains.
+            self.draft.pools, self.draft.key_data = self._draft_prefill(
                 self.draft.params, self.draft.pools, jnp.asarray(d_bt),
-                tok_dev, starts_dev,
+                tok_dev, starts_dev, fslots_dev, self.draft.key_data,
+                jnp.asarray(d_keys),
             )
         finished: List[Request] = []
         if fin:
@@ -573,7 +748,7 @@ class ServingEngine:
     def _admit_dense(self) -> List[Request]:
         finished: List[Request] = []
         while self.queue:
-            free = [i for i in range(self.max_batch) if not self.active[i]]
+            free = self._free_slots()
             if not free:
                 break
             group = self._take_group(len(free))
@@ -588,23 +763,35 @@ class ServingEngine:
             tokens = np.zeros((rows, plen_pad), np.int32)
             plens = np.ones((rows,), np.int32)
             slots = np.full((rows,), self.max_batch, np.int32)  # pad = dropped
+            budgets = np.zeros((rows,), np.int32)
+            rkeys = np.zeros((rows, 2), np.uint32)
+            d_keys = (np.zeros((rows, 2), np.uint32)
+                      if self.spec is not None else None)
             temps = np.zeros((rows,), np.float32)
             for r, req in enumerate(group):
                 tokens[r, : len(req.prompt)] = req.prompt
                 plens[r] = len(req.prompt)
                 slots[r] = free[r]
+                budgets[r] = max(0, req.max_new_tokens - 1)
                 temps[r] = req.temperature
+            uids = [req.uid for req in group]
+            rkeys[: len(group)] = self._request_keys(uids)
+            if d_keys is not None:
+                d_keys[: len(group)] = self._request_keys(uids, draft=True)
+            slots_dev = jnp.asarray(slots)
             (first, self.cache, self.cache_len, self.last_token,
-             self.key_data, self._active_dev) = self._prefill(
+             self.budget_dev, self.key_data, self._active_dev) = self._prefill(
                 self.params, self.cache, jnp.asarray(tokens),
-                jnp.asarray(plens), jnp.asarray(slots), self.cache_len,
-                self.last_token, self.key_data, jnp.asarray(temps),
-                self._active_dev,
+                jnp.asarray(plens), slots_dev,
+                jnp.asarray(budgets), jnp.asarray(rkeys), self.cache_len,
+                self.last_token, self.budget_dev, self.key_data,
+                jnp.asarray(temps), self._active_dev,
             )
             if self.spec is not None:
-                self.draft.cache = self._draft_prefill(
+                self.draft.cache, self.draft.key_data = self._draft_prefill(
                     self.draft.params, self.draft.cache,
-                    jnp.asarray(tokens), jnp.asarray(slots),
+                    jnp.asarray(tokens), slots_dev, self.draft.key_data,
+                    jnp.asarray(d_keys),
                 )
             toks = np.asarray(jax.device_get(first))
             for r, req in enumerate(group):
@@ -614,62 +801,88 @@ class ServingEngine:
     # --------------------------------------------------------------- decode
 
     def step(self) -> List[Request]:
-        """One decode step for all live rows; returns requests finished.
+        """One pipelined decode step; returns requests finished.
 
-        Exactly one device->host transfer: the sampled token vector (or, in
-        speculative mode, the packed committed-token matrix)."""
+        Dispatches the next decode (or draft+verify) root immediately, then
+        consumes the OLDEST in-flight step's token transfer only once the
+        ring holds ``pipeline_depth`` entries — so with depth D the device
+        runs up to D steps ahead of the host's emission/free bookkeeping.
+        Depth 1 reproduces the unpipelined dispatch->sync sequence exactly.
+        At most one D2H transfer is consumed per call."""
+        if (self.spec is not None and self.spec.dynamic_k
+                and self._ring):
+            # Per-row window feedback: step N+1's k_row depends on step N's
+            # acceptance, so dynamic-k speculation runs the ring at depth 1.
+            self._drain_ring()
         if self.spec is not None:
-            return self._step_spec()
-        t0 = time.perf_counter()
-        active = self.active.copy()
-        host_keep = jnp.asarray(active)
-        temps = jnp.asarray(self.temps)
-        eos = jnp.asarray(self._eos)
-        if self.paged:
-            (sampled, self.kv.pools, self.cache_len, self.key_data,
-             self._active_dev) = self._decode(
-                self.params, self.kv.pools, self.kv.table_device(),
-                self.last_token, self.cache_len, self.key_data,
-                self._active_dev, host_keep, temps, eos,
-            )
+            self._dispatch_spec()
         else:
-            (sampled, self.cache, self.cache_len, self.key_data,
-             self._active_dev) = self._decode(
-                self.params, self.cache, self.last_token, self.cache_len,
+            self._dispatch_decode()
+        if len(self._ring) >= self.pipeline_depth:
+            self._consume_one()
+        return self._pop_finished()
+
+    def drain(self) -> List[Request]:
+        """Consume every in-flight step (one D2H each, oldest first) and
+        return all newly finished requests.  The engine calls this before
+        any host bookkeeping that must see a synced view — admission,
+        defrag, dynamic-k — and callers may use it to flush the tail."""
+        self._drain_ring()
+        return self._pop_finished()
+
+    def _drain_ring(self) -> None:
+        while self._ring:
+            self._consume_one()
+
+    def _pop_finished(self) -> List[Request]:
+        out, self._pending_finished = self._pending_finished, []
+        return out
+
+    def _host_inputs(self):
+        """Device-resident (host_keep, temps, eos[, k_row]) for dispatch,
+        rebuilt only when admission/finish bookkeeping dirtied them."""
+        if self._host_dirty:
+            put = ((lambda x, s: jax.device_put(x, s))
+                   if self._sh is not None else (lambda x, s: jnp.asarray(x)))
+            row = self._sh.row if self._sh is not None else None
+            self._keep_dev = put(self.active, row)
+            self._temps_dev = put(self.temps, row)
+            self._eos_dev = put(self._eos, row)
+            if self.spec is not None:
+                self._k_row_dev = put(self._k_row, row)
+            self._host_dirty = False
+        return self._keep_dev, self._temps_dev, self._eos_dev
+
+    def _dispatch_decode(self) -> None:
+        """Launch one decode root and ring its token future (no sync)."""
+        t0 = time.perf_counter()
+        mask = self.active.copy()
+        host_keep, temps, eos = self._host_inputs()
+        if self.paged:
+            (sampled, self.kv.pools, self.cache_len, self.budget_dev,
+             self.key_data, self._active_dev) = self._decode(
+                self.params, self.kv.pools, self.kv.table_device(),
+                self.last_token, self.cache_len, self.budget_dev,
                 self.key_data, self._active_dev, host_keep, temps, eos,
             )
+        else:
+            (sampled, self.cache, self.cache_len, self.budget_dev,
+             self.key_data, self._active_dev) = self._decode(
+                self.params, self.cache, self.last_token, self.cache_len,
+                self.budget_dev, self.key_data, self._active_dev,
+                host_keep, temps, eos,
+            )
         self.last_token = sampled
-        self._len_host += active
-        toks = np.asarray(jax.device_get(sampled))  # the step's single D2H
-        self.decode_transfers += 1
-        finished = []
-        for slot, req in enumerate(self.slots):
-            if req is None or not active[slot]:
-                continue
-            tok = int(toks[slot])
-            req.generated.append(tok)
-            if (req.done or self._len_host[slot] >= self.max_len - 1
-                    or tok == self._eos[slot]):
-                finished.append(req)
-                self.slots[slot] = None
-                self.active[slot] = False
-                if self.paged:
-                    self.kv.free(slot)  # blocks reusable immediately
-        self.step_times.append(time.perf_counter() - t0)
-        return finished
+        self._ring.append(_InFlight(sampled, mask,
+                                    time.perf_counter() - t0))
 
-    def _step_spec(self) -> List[Request]:
-        """One speculative step: draft k proposals (fused K+1-decode root
-        over the draft cache), verify them through the target's chunk-decode
-        root with on-device accept/resample and length rollback, then commit
-        1..k+1 tokens per live row from the step's single D2H transfer."""
+    def _dispatch_spec(self) -> None:
+        """Launch one speculative step (fused draft-K root + chunk-verify
+        root) and ring its packed committed-token future (no sync)."""
         t0 = time.perf_counter()
-        k = self.spec.k
-        active = self.active.copy()
-        host_keep = jnp.asarray(active)
-        temps = jnp.asarray(self.temps)
-        eos = jnp.asarray(self._eos)
-        k_row = jnp.asarray(self._k_row)
+        mask = self.active.copy()
+        host_keep, temps, eos = self._host_inputs()
+        k_row = self._k_row_dev
 
         (proposals, q_probs, self.draft.pools,
          self.draft.key_data) = self._spec_draft(
@@ -679,27 +892,72 @@ class ServingEngine:
         )
         target_cache = self.kv.pools if self.paged else self.cache
         bt = self.kv.table_device() if self.paged else None
-        (pack, target_cache, self.cache_len, self.last_token, self.key_data,
-         self._active_dev) = self._spec_verify(
+        (pack, target_cache, self.cache_len, self.last_token,
+         self.budget_dev, self.key_data, self._active_dev) = self._spec_verify(
             self.params, target_cache, bt, self.last_token, proposals,
-            q_probs, self.cache_len, self.key_data, self._active_dev,
-            host_keep, temps, eos, k_row,
+            q_probs, self.cache_len, self.budget_dev, self.key_data,
+            self._active_dev, host_keep, temps, eos, k_row,
         )
         if self.paged:
             self.kv.pools = target_cache
         else:
             self.cache = target_cache
+        self._ring.append(_InFlight(pack, mask, time.perf_counter() - t0,
+                                    spec=True, k_row=self._k_row.copy()))
 
-        out = np.asarray(jax.device_get(pack))  # the step's single D2H
+    def _consume_one(self) -> None:
+        """Sync the oldest in-flight step's tokens (the ONE D2H this step
+        ever costs) and run its emission/finish/free bookkeeping, appending
+        newly finished requests to the pending list."""
+        entry = self._ring.popleft()
+        t0 = time.perf_counter()
+        toks = np.asarray(jax.device_get(entry.tokens))
+        t_sync = time.perf_counter() - t0
         self.decode_transfers += 1
-        toks_mat, n_commit, m_acc = out[:, : k + 1], out[:, k + 1], out[:, k + 2]
+        if entry.spec:
+            finished = self._commit_spec(entry, toks)
+        else:
+            finished = self._commit_decode(entry, toks)
+        self._pending_finished.extend(finished)
+        t_host = time.perf_counter() - t0 - t_sync
+        self.step_device_wait_s.append(t_sync)
+        self.step_host_s.append(t_host)
+        self.step_times.append(entry.dispatch_s + t_sync + t_host)
 
+    def _commit_decode(self, entry: _InFlight,
+                       toks: np.ndarray) -> List[Request]:
+        # A slot live in entry.mask whose request has since been retired
+        # (it finished in an OLDER ring entry) carries a garbage token the
+        # device either masked or wrote into the slot's still-reserved
+        # space: skip it.  FIFO consumption guarantees the converse — a
+        # row still live here was device-active at this entry's dispatch.
+        live = np.fromiter((r is not None for r in self.slots), bool,
+                           self.max_batch)
+        adv = entry.mask & live
+        self._len_host += adv
         finished: List[Request] = []
         for slot, req in enumerate(self.slots):
-            if req is None or not active[slot]:
+            if req is None or not adv[slot]:
+                continue
+            tok = int(toks[slot])
+            req.generated.append(tok)
+            if (req.done or self._len_host[slot] >= self.max_len - 1
+                    or tok == self._eos[slot]):
+                finished.append(req)
+                self._retire_slot(slot)
+        return finished
+
+    def _commit_spec(self, entry: _InFlight,
+                     toks: np.ndarray) -> List[Request]:
+        k = self.spec.k
+        toks_mat = toks[:, : k + 1]
+        n_commit, m_acc = toks[:, k + 1], toks[:, k + 2]
+        finished: List[Request] = []
+        for slot, req in enumerate(self.slots):
+            if req is None or not entry.mask[slot]:
                 continue
             m = int(m_acc[slot])
-            k_eff = int(self._k_row[slot])
+            k_eff = int(entry.k_row[slot])
             req.spec_proposed += k_eff
             req.spec_accepted += m
             self.spec_proposed += k_eff
@@ -711,6 +969,7 @@ class ServingEngine:
                     self._k_row[slot] = min(k, k_eff + 1)
                 elif m == 0:
                     self._k_row[slot] = max(1, k_eff - 1)
+                self._host_dirty = True
             done = False
             base_len = self._len_host[slot] - (m + 1)
             for j in range(int(n_commit[slot])):
@@ -725,21 +984,22 @@ class ServingEngine:
                     break
             if done:
                 finished.append(req)
-                self.slots[slot] = None
-                self.active[slot] = False
-                if self.paged:
-                    self.kv.free(slot)
-                self.draft.free(slot)
-        self.step_times.append(time.perf_counter() - t0)
+                self._retire_slot(slot)
         return finished
 
     # ------------------------------------------------------------ telemetry
 
     def stats(self) -> Dict[str, float]:
-        """Decode-step timing summary (seconds) + throughput proxy."""
+        """Decode-step timing summary (seconds) + throughput proxy.
+
+        ``device_wait_*`` is the D2H sync stall per consumed step and
+        ``host_*`` the emission/free bookkeeping that follows — the two
+        halves the pipeline overlaps with the device's next step."""
         if not self.step_times:
-            return {"steps": 0}
+            return {"steps": 0, "pipeline_depth": self.pipeline_depth}
         ts = np.asarray(self.step_times)
+        dw = np.asarray(self.step_device_wait_s)
+        hb = np.asarray(self.step_host_s)
         n_live = max(1, int(self.active.sum()))
         return {
             "steps": len(ts),
@@ -747,6 +1007,11 @@ class ServingEngine:
             "step_p50_s": float(np.percentile(ts, 50)),
             "step_p90_s": float(np.percentile(ts, 90)),
             "step_p99_s": float(np.percentile(ts, 99)),
+            "device_wait_mean_s": float(dw.mean()),
+            "device_wait_p50_s": float(np.percentile(dw, 50)),
+            "host_mean_s": float(hb.mean()),
+            "host_p50_s": float(np.percentile(hb, 50)),
+            "pipeline_depth": self.pipeline_depth,
             "live_rows": n_live,
         }
 
@@ -804,9 +1069,15 @@ class ServingEngine:
 
     def defrag(self) -> int:
         """Compact live blocks to the lowest pool ids (paged only).
-        Returns the number of blocks moved (target + draft pools)."""
+        Returns the number of blocks moved (target + draft pools).
+
+        Drains the step pipeline first: the move map comes from the host
+        allocator, which must have consumed every in-flight step's frees
+        before permuting the pools (finishes surface from the next public
+        step()/_admit()/drain())."""
         if not self.paged:
             return 0
+        self._drain_ring()
         moved = len(self.kv.defrag())
         if self.spec is not None:
             moved += len(self.draft.kv.defrag())

@@ -63,6 +63,14 @@ class PagedKVCache:
         self.alloc = BlockAllocator(num_blocks, num_shards=dp_shards)
         self.table_np = np.full((max_batch, self.max_blocks_per_row), -1,
                                 np.int32)
+        # Device mirror of the block table, rebuilt lazily only when a
+        # reservation/free/rollback/defrag rewrites table_np — the table
+        # is loop-invariant between those events, so the decode hot path
+        # must not pay a fresh H2D upload per dispatch.  ``table_sharding``
+        # (set by the engine under a mesh) pins the mirror's placement so
+        # sharded jit roots see their exact expected in_sharding.
+        self._table_dev = None
+        self.table_sharding = None
 
         # Per-leaf block axis, found structurally (models.api probe —
         # scanned layer stacks carry a leading (repeats,) dim, so the axis
@@ -148,11 +156,13 @@ class PagedKVCache:
         owned = self.alloc.owned_by(slot)  # appends compose correctly
         self.table_np[slot, :] = -1
         self.table_np[slot, : len(owned)] = owned
+        self._table_dirty()
         return True
 
     def free(self, slot: int) -> List[int]:
         """Release a finished slot's blocks immediately for reuse."""
         self.table_np[slot, :] = -1
+        self._table_dirty()
         return self.alloc.free(slot)
 
     def rollback(self, slot: int, n_tokens: int) -> List[int]:
@@ -173,10 +183,20 @@ class PagedKVCache:
             owned = self.alloc.owned_by(slot)
             self.table_np[slot, :] = -1
             self.table_np[slot, : len(owned)] = owned
+            self._table_dirty()
         return freed
 
+    def _table_dirty(self) -> None:
+        self._table_dev = None
+
     def table_device(self) -> jax.Array:
-        return jnp.asarray(self.table_np)
+        if self._table_dev is None:
+            if self.table_sharding is not None:
+                self._table_dev = jax.device_put(self.table_np,
+                                                 self.table_sharding)
+            else:
+                self._table_dev = jnp.asarray(self.table_np)
+        return self._table_dev
 
     # ----------------------------------------------------------- defrag
 
@@ -194,6 +214,7 @@ class PagedKVCache:
         remap = np.vectorize(lambda b: moves.get(b, b))
         live = self.table_np >= 0
         self.table_np[live] = remap(self.table_np[live])
+        self._table_dirty()
         return moves
 
     # ------------------------------------------------------------ stats

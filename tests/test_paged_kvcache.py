@@ -142,6 +142,115 @@ class TestPagedAttentionKernel:
             assert (np.asarray(new_cache["k"]) == 0).all(), clen
             assert (np.asarray(new_cache["v"]) == 0).all(), clen
 
+    @pytest.mark.parametrize("b,hq,hkv,rpp", [
+        (3, 4, 4, 2),   # G=1, ragged last pack (3 rows into packs of 2)
+        (5, 8, 2, 4),   # G=4, ragged (5 rows into packs of 4)
+        (7, 4, 2, 8),   # G=2, single partial pack wider than the batch
+        (4, 4, 1, 1),   # packing disabled == per-row schedule
+    ])
+    def test_packed_rows_match_oracle(self, b, hq, hkv, rpp):
+        """Row-packed grid steps (including a ragged final pack) must be
+        invisible in the result: the packed score tile's cross-row
+        quadrants are masked, so any rows_per_pack equals the per-row
+        oracle."""
+        from repro.kernels.paged_attention.ops import paged_attention
+        from repro.kernels.paged_attention.ref import (
+            paged_attention_packed_ref,
+            paged_attention_ref,
+        )
+
+        rng = np.random.default_rng(20)
+        hd, bs, n, m = 32, 8, 16, 4
+        lens = rng.integers(1, m * bs + 1, size=b)
+        q = jnp.asarray(rng.standard_normal((b, hq, hd)) * 0.3, jnp.float32)
+        kp = jnp.asarray(rng.standard_normal((n, bs, hkv, hd)) * 0.3,
+                         jnp.float32)
+        vp = jnp.asarray(rng.standard_normal((n, bs, hkv, hd)) * 0.3,
+                         jnp.float32)
+        bt = np.full((b, m), -1, np.int32)
+        blocks = iter(rng.permutation(n))
+        for r, ln in enumerate(lens):
+            for j in range(-(-int(ln) // bs)):
+                bt[r, j] = next(blocks)
+        bt = jnp.asarray(bt)
+        ln = jnp.asarray(lens.astype(np.int32))
+        want = paged_attention_ref(q, kp, vp, bt, ln)
+        got = paged_attention(q, kp, vp, bt, ln, interpret=True,
+                              rows_per_pack=rpp)
+        packed = paged_attention_packed_ref(q, kp, vp, bt, ln,
+                                            rows_per_pack=rpp)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(np.asarray(packed), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_packed_page_edge_lengths(self):
+        """Per-row lengths landing exactly on page edges (bs-1, bs, bs+1,
+        full table) inside ONE pack: the shared page loop runs to the
+        longest row and the per-row length columns mask the rest."""
+        from repro.kernels.paged_attention.ops import paged_attention
+        from repro.kernels.paged_attention.ref import paged_attention_ref
+
+        rng = np.random.default_rng(21)
+        bs, hkv, g, hd, m = 8, 2, 2, 32, 4
+        lens = np.asarray([bs - 1, bs, bs + 1, m * bs], np.int32)
+        b, hq, n = len(lens), hkv * g, 20
+        q = jnp.asarray(rng.standard_normal((b, hq, hd)) * 0.3, jnp.float32)
+        kp = jnp.asarray(rng.standard_normal((n, bs, hkv, hd)) * 0.3,
+                         jnp.float32)
+        vp = jnp.asarray(rng.standard_normal((n, bs, hkv, hd)) * 0.3,
+                         jnp.float32)
+        bt = np.full((b, m), -1, np.int32)
+        blocks = iter(rng.permutation(n))
+        for r, ln in enumerate(lens):
+            for j in range(-(-int(ln) // bs)):
+                bt[r, j] = next(blocks)
+        got = paged_attention(q, kp, vp, jnp.asarray(bt), jnp.asarray(lens),
+                              interpret=True, rows_per_pack=4)
+        want = paged_attention_ref(q, kp, vp, jnp.asarray(bt),
+                                   jnp.asarray(lens))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_packed_int8_dequant_in_tile(self):
+        """int8 pools dequantize inside the packed tile: each packed row's
+        pages carry their own scales, so cross-row packing must not mix
+        them (ragged 3-row pack of 2 exercises the pad row too)."""
+        from repro.kernels.paged_attention.ops import paged_attention
+        from repro.kernels.paged_attention.ref import (
+            paged_attention_packed_ref,
+            paged_attention_ref,
+        )
+
+        rng = np.random.default_rng(22)
+        b, hq, hkv, hd, bs, n, m = 3, 8, 4, 32, 16, 8, 3
+        q = jnp.asarray(rng.standard_normal((b, hq, hd)), jnp.float32)
+        kp = jnp.asarray(rng.integers(-127, 127, (n, bs, hkv, hd)), jnp.int8)
+        vp = jnp.asarray(rng.integers(-127, 127, (n, bs, hkv, hd)), jnp.int8)
+        ks = jnp.asarray(rng.uniform(0.01, 0.1, (n, bs, hkv)), jnp.float32)
+        vs = jnp.asarray(rng.uniform(0.01, 0.1, (n, bs, hkv)), jnp.float32)
+        bt = jnp.asarray([[0, 1, 2], [3, 4, -1], [5, -1, -1]], jnp.int32)
+        ln = jnp.asarray([40, 20, 9], jnp.int32)
+        want = paged_attention_ref(q, kp, vp, bt, ln, ks, vs)
+        got = paged_attention(q, kp, vp, bt, ln, ks, vs, interpret=True,
+                              rows_per_pack=2)
+        packed = paged_attention_packed_ref(q, kp, vp, bt, ln, ks, vs,
+                                            rows_per_pack=2)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(packed), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_default_rows_per_pack_fills_sublanes(self):
+        from repro.kernels.paged_attention.ops import default_rows_per_pack
+
+        assert default_rows_per_pack(16, 1) == 8   # G=1 -> 8 rows
+        assert default_rows_per_pack(16, 2) == 4
+        assert default_rows_per_pack(16, 4) == 2
+        assert default_rows_per_pack(16, 8) == 1
+        assert default_rows_per_pack(1, 1) == 1    # never pad past batch
+        assert default_rows_per_pack(3, 1) == 3
+
     def test_cpu_dispatch_uses_oracle(self):
         """On non-TPU backends the ops wrapper must never touch the kernel."""
         from repro.kernels.paged_attention import ops

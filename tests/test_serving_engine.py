@@ -186,9 +186,12 @@ class TestPadSensitiveFallback:
 
 class TestSyncFreeDecode:
     def test_exactly_one_device_to_host_transfer_per_step(self, tiny_lm):
+        """Depth-1 pipeline == today's unpipelined engine: every step() is
+        one dispatch followed by exactly one consumed transfer."""
         model, params = tiny_lm
         rng = np.random.default_rng(7)
-        eng = ServingEngine(model, params, max_batch=2, max_len=64)
+        eng = ServingEngine(model, params, max_batch=2, max_len=64,
+                            pipeline_depth=1)
         for _ in range(2):
             eng.submit(rng.integers(2, 200, size=6), max_new_tokens=8)
         eng._admit()
@@ -204,6 +207,35 @@ class TestSyncFreeDecode:
             for _ in range(4):
                 eng.step()
         assert len(calls) == 4  # one transfer per decode step, not per slot
+
+    def test_pipelined_steps_consume_at_most_one_transfer(self, tiny_lm):
+        """Depth 2: the first step only dispatches (no sync at all); every
+        later step consumes exactly the one oldest transfer, and drain()
+        flushes the remaining in-flight step."""
+        model, params = tiny_lm
+        rng = np.random.default_rng(7)
+        eng = ServingEngine(model, params, max_batch=2, max_len=64,
+                            pipeline_depth=2)
+        for _ in range(2):
+            eng.submit(rng.integers(2, 200, size=6), max_new_tokens=8)
+        eng._admit()
+
+        real = jax.device_get
+        calls = []
+
+        def counting(x):
+            calls.append(1)
+            return real(x)
+
+        with mock.patch.object(jax, "device_get", side_effect=counting):
+            per_step = []
+            for _ in range(4):
+                before = len(calls)
+                eng.step()
+                per_step.append(len(calls) - before)
+            eng.drain()
+        assert per_step == [0, 1, 1, 1]  # device runs one step ahead
+        assert len(calls) == 4  # drain syncs the ring's last entry
 
     def test_transfer_counter_tracks_steps(self, tiny_lm):
         model, params = tiny_lm

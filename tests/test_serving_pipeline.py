@@ -1,0 +1,378 @@
+"""Depth-K step-pipeline tests: depth-1 == the serial dispatch->sync loop,
+depth>1 produces token-identical streams (greedy, temperature with slot
+reuse, speculative) on both cache layouts, drain discipline around the
+host-mutating events (admission, defrag, EOS/completion flush), device-side
+finish exits (token budget + max_len + EOS all clear `active` on device),
+the cached loop-invariant host inputs, and the schema-4 BENCH_serving.json
+smoke."""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import small_lm
+from repro.models import build_model
+from repro.serving.engine import ServingEngine
+from repro.serving.spec import SpecConfig
+
+VOCAB = 256
+
+
+@pytest.fixture(scope="module")
+def tiny_lm():
+    cfg = small_lm(name="tiny-pipe", vocab_size=VOCAB, num_layers=2,
+                   d_model=64, d_ff=96, num_heads=4)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return model, params
+
+
+@pytest.fixture(scope="module")
+def draft_params(tiny_lm):
+    """Perturbed weights stand in for a higher-ratio NSVD twin: real
+    rejections exercise the verify root's length rollback under depth>1."""
+    _, params = tiny_lm
+    k = jax.random.key(99)
+    return jax.tree.map(
+        lambda x: x + 0.02 * jax.random.normal(k, x.shape, x.dtype)
+        if x.ndim >= 2 else x,
+        params,
+    )
+
+
+def _workload(model, params, depth, prompts, lens, temps=None, *,
+              max_batch=2, seed=0, **kw):
+    """Serve a staggered-finish workload (forces mid-flight admission and
+    slot reuse) and return each request's tokens in submit order."""
+    eng = ServingEngine(model, params, max_batch=max_batch, max_len=64,
+                        seed=seed, pipeline_depth=depth, **kw)
+    temps = temps or [0.0] * len(prompts)
+    uids = [eng.submit(p, max_new_tokens=m, temperature=t)
+            for p, m, t in zip(prompts, lens, temps)]
+    out = eng.run()
+    return [out[u] for u in uids], eng
+
+
+@pytest.fixture(scope="module")
+def prompts():
+    rng = np.random.default_rng(1)
+    return [rng.integers(2, 200, size=n) for n in (6, 18, 7, 5, 9, 4)]
+
+
+LENS = [9, 3, 6, 4, 7, 5]  # staggered finishes -> slots free mid-flight
+
+
+# ------------------------------------------------------- depth equivalence
+
+
+class TestDepthEquivalence:
+    @pytest.mark.parametrize("paged", [True, False])
+    def test_greedy_streams_identical_across_depths(self, tiny_lm, prompts,
+                                                    paged):
+        model, params = tiny_lm
+        base, _ = _workload(model, params, 1, prompts, LENS, paged=paged)
+        for depth in (2, 4):
+            got, eng = _workload(model, params, depth, prompts, LENS,
+                                 paged=paged)
+            assert got == base, f"depth={depth} paged={paged}"
+            assert eng.pipeline_depth == depth
+
+    @pytest.mark.parametrize("paged", [True, False])
+    def test_temperature_with_slot_reuse_identical(self, tiny_lm, prompts,
+                                                   paged):
+        """The sharpest depth hazard: a row that finishes at step N has one
+        garbage step in flight under depth 2 — if that step advanced the
+        slot's PRNG key, the NEXT occupant's sampled stream would diverge
+        from depth 1.  Device-side budget exits mask the row in-step, so
+        the key chain (and the readmitted request's tokens) must match
+        exactly."""
+        model, params = tiny_lm
+        temps = [0.8] * len(prompts)
+        base, _ = _workload(model, params, 1, prompts, LENS, temps,
+                            paged=paged, seed=11)
+        got, _ = _workload(model, params, 2, prompts, LENS, temps,
+                           paged=paged, seed=11)
+        assert got == base, f"paged={paged}"
+
+    @pytest.mark.parametrize("paged", [True, False])
+    def test_spec_streams_and_accounting_identical(self, tiny_lm, prompts,
+                                                   draft_params, paged):
+        model, params = tiny_lm
+        spec = SpecConfig(draft_params=draft_params, k=3)
+        base, b_eng = _workload(model, params, 1, prompts, LENS,
+                                paged=paged, spec_config=spec)
+        got, g_eng = _workload(model, params, 2, prompts, LENS,
+                               paged=paged, spec_config=spec)
+        assert got == base, f"paged={paged}"
+        bs, gs = b_eng.spec_stats(), g_eng.spec_stats()
+        assert (gs["proposed"], gs["accepted"], gs["committed"]) == \
+            (bs["proposed"], bs["accepted"], bs["committed"])
+
+    def test_spec_temperature_with_slot_reuse_identical(self, tiny_lm,
+                                                        prompts,
+                                                        draft_params):
+        """Speculative + temperature + slot reuse across depths: both the
+        draft proposal keys and the verify accept/resample keys are
+        per-REQUEST chains, so accept/reject realizations cannot depend on
+        pipeline-induced scheduling shifts."""
+        model, params = tiny_lm
+        temps = [0.8] * len(prompts)
+        spec = SpecConfig(draft_params=draft_params, k=3)
+        base, _ = _workload(model, params, 1, prompts, LENS, temps,
+                            spec_config=spec, seed=11)
+        got, _ = _workload(model, params, 2, prompts, LENS, temps,
+                           spec_config=spec, seed=11)
+        assert got == base
+
+    def test_streams_independent_of_max_batch_scheduling(self, tiny_lm,
+                                                         prompts):
+        """Per-request keys make a request's sampled stream a function of
+        (seed, uid, prompt) only: the same submissions produce the same
+        tokens whether they run solo-batch or contended."""
+        model, params = tiny_lm
+        temps = [0.7] * len(prompts)
+        wide, _ = _workload(model, params, 2, prompts, LENS, temps,
+                            max_batch=4, seed=11)
+        narrow, _ = _workload(model, params, 2, prompts, LENS, temps,
+                              max_batch=2, seed=11)
+        assert wide == narrow
+
+    def test_dynamic_k_spec_forces_depth1_ring_and_matches(self, tiny_lm,
+                                                           prompts,
+                                                           draft_params):
+        """Per-row window feedback (k_row for step N+1 needs step N's
+        acceptance) cannot run ahead: the ring drains to depth 1 and the
+        streams still match plain decoding."""
+        model, params = tiny_lm
+        spec = SpecConfig(draft_params=draft_params, k=4, dynamic_k=True)
+        base, _ = _workload(model, params, 1, prompts, LENS,
+                            spec_config=spec)
+        got, _ = _workload(model, params, 2, prompts, LENS,
+                           spec_config=spec)
+        assert got == base
+
+
+# --------------------------------------------------------- drain semantics
+
+
+class TestDrainSemantics:
+    def test_eos_flush_emits_every_token_exactly_once(self, tiny_lm):
+        """EOS mid-stream under depth 2: the finishing step and the garbage
+        step behind it are both in flight — the flush must emit the
+        committed tokens once each, truncated at (and including) the
+        EOS."""
+        model, params = tiny_lm
+        rng = np.random.default_rng(3)
+        p = rng.integers(2, 200, size=7)
+        full, _ = _workload(model, params, 1, [p], [8], max_batch=1)
+        eos = full[0][2]
+        for depth in (1, 2, 3):
+            eng = ServingEngine(model, params, max_batch=1, max_len=64,
+                                pipeline_depth=depth)
+            uid = eng.submit(p, max_new_tokens=8, eos_id=eos)
+            out = eng.run()
+            assert out[uid] == full[0][:3], f"depth={depth}"
+            # Device-side exit fired in the sampling step itself.
+            assert not bool(np.asarray(eng._active_dev)[0])
+
+    def test_completion_flush_exact_token_counts(self, tiny_lm, prompts):
+        """max_new_tokens finishes under depth>1 must emit exactly
+        max_new tokens — the in-flight garbage step's sample for that row
+        is discarded, not appended."""
+        model, params = tiny_lm
+        got, _ = _workload(model, params, 3, prompts, LENS)
+        assert [len(g) for g in got] == LENS
+
+    def test_admission_drains_ring(self, tiny_lm, prompts):
+        """_admit() must consume every in-flight step before touching
+        slots: no ring entry ever straddles a change of slot occupant."""
+        model, params = tiny_lm
+        eng = ServingEngine(model, params, max_batch=2, max_len=64,
+                            pipeline_depth=2)
+        eng.submit(prompts[0], max_new_tokens=6)
+        eng._admit()
+        eng.step()
+        eng.step()
+        assert len(eng._ring) > 0
+        eng.submit(prompts[1], max_new_tokens=4)
+        eng._admit()
+        assert len(eng._ring) == 0
+
+    def test_defrag_drains_ring_and_preserves_streams(self, tiny_lm,
+                                                      prompts):
+        """Mid-flight defrag under depth 2: the pool permutation comes from
+        host allocator state, so the ring drains first — and the token
+        streams match the depth-1 defrag-free run."""
+        model, params = tiny_lm
+        base, _ = _workload(model, params, 1, prompts[:4], LENS[:4])
+
+        eng = ServingEngine(model, params, max_batch=2, max_len=64,
+                            pipeline_depth=2)
+        uids = [eng.submit(p, max_new_tokens=m)
+                for p, m in zip(prompts[:4], LENS[:4])]
+        finished = {}
+        for _ in range(200):
+            if eng.queue or eng._prefilling:
+                for r in eng._admit():
+                    finished[r.uid] = r.generated
+            if not eng.active.any():
+                for r in eng.drain():
+                    finished[r.uid] = r.generated
+                if not eng.active.any():
+                    if not eng.queue and not eng._prefilling:
+                        break
+                    continue
+            for r in eng.step():
+                finished[r.uid] = r.generated
+            eng.defrag()
+            assert len(eng._ring) == 0  # defrag consumed the in-flight step
+        assert [finished[u] for u in uids] == base
+
+    def test_drain_returns_finishes_consumed_by_internal_drains(self,
+                                                                tiny_lm):
+        """A request whose finishing step is consumed by defrag()'s
+        internal drain must still surface from the next public call."""
+        model, params = tiny_lm
+        rng = np.random.default_rng(4)
+        eng = ServingEngine(model, params, max_batch=1, max_len=64,
+                            pipeline_depth=2)
+        uid = eng.submit(rng.integers(2, 200, size=5), max_new_tokens=3)
+        eng._admit()  # emits token 1 at admission
+        assert eng.step() == []   # dispatch token 2 (ring: 1, no consume)
+        assert eng.step() == []   # dispatch token 3, consume token 2
+        # The FINISHING step (token 3) is now in flight.
+        eng.defrag()  # internal drain consumes the finish
+        got = eng.drain()
+        assert [r.uid for r in got] == [uid]
+        assert len(got[0].generated) == 3
+
+
+# ------------------------------------------------- device-resident inputs
+
+
+class TestCachedHostInputs:
+    def test_steady_state_reuses_host_input_buffers(self, tiny_lm):
+        """temps/eos/host_keep upload once per admission/finish event, not
+        once per step: between events dispatch reuses the same device
+        arrays."""
+        model, params = tiny_lm
+        rng = np.random.default_rng(5)
+        eng = ServingEngine(model, params, max_batch=2, max_len=64,
+                            pipeline_depth=1)
+        eng.submit(rng.integers(2, 200, size=6), max_new_tokens=8)
+        eng._admit()
+        eng.step()
+        keep0, temps0, eos0 = eng._keep_dev, eng._temps_dev, eng._eos_dev
+        for _ in range(3):
+            eng.step()
+        assert eng._keep_dev is keep0
+        assert eng._temps_dev is temps0
+        assert eng._eos_dev is eos0
+
+    def test_finish_and_admission_refresh_host_inputs(self, tiny_lm):
+        model, params = tiny_lm
+        rng = np.random.default_rng(6)
+        eng = ServingEngine(model, params, max_batch=1, max_len=64,
+                            pipeline_depth=1)
+        eng.submit(rng.integers(2, 200, size=6), max_new_tokens=3)
+        eng._admit()
+        assert eng.step() == []  # builds the cached inputs, no finish
+        keep0 = eng._keep_dev
+        assert not eng._host_dirty
+        fin = eng.step()  # emits the last budgeted token -> finish
+        assert len(fin) == 1
+        assert eng._host_dirty  # finish invalidated the cached mask
+        eng.submit(rng.integers(2, 200, size=5), max_new_tokens=2)
+        eng._admit()
+        eng.step()
+        assert eng._keep_dev is not keep0
+
+    def test_budget_is_device_state(self, tiny_lm):
+        """The budget vector lives on device and reaches zero exactly when
+        the row finishes (device-side max-token exit)."""
+        model, params = tiny_lm
+        rng = np.random.default_rng(7)
+        eng = ServingEngine(model, params, max_batch=1, max_len=64,
+                            pipeline_depth=1)
+        eng.submit(rng.integers(2, 200, size=6), max_new_tokens=5)
+        eng._admit()
+        assert int(np.asarray(eng.budget_dev)[0]) == 4
+        eng.run()
+        assert int(np.asarray(eng.budget_dev)[0]) == 0
+        assert not bool(np.asarray(eng._active_dev)[0])
+
+
+# ------------------------------------------------------- config + telemetry
+
+
+class TestPipelineConfig:
+    def test_rejects_nonpositive_depth(self, tiny_lm):
+        model, params = tiny_lm
+        with pytest.raises(ValueError, match="pipeline_depth"):
+            ServingEngine(model, params, max_batch=1, max_len=64,
+                          pipeline_depth=0)
+
+    def test_env_var_sets_default_depth(self, tiny_lm, monkeypatch):
+        model, params = tiny_lm
+        monkeypatch.setenv("REPRO_SERVING_PIPELINE_DEPTH", "3")
+        eng = ServingEngine(model, params, max_batch=1, max_len=64)
+        assert eng.pipeline_depth == 3
+        monkeypatch.delenv("REPRO_SERVING_PIPELINE_DEPTH")
+        eng = ServingEngine(model, params, max_batch=1, max_len=64)
+        assert eng.pipeline_depth == 2  # shipped default
+
+    def test_stats_report_breakdown(self, tiny_lm):
+        model, params = tiny_lm
+        rng = np.random.default_rng(8)
+        eng = ServingEngine(model, params, max_batch=1, max_len=64,
+                            pipeline_depth=2)
+        eng.submit(rng.integers(2, 200, size=6), max_new_tokens=6)
+        eng.run()
+        s = eng.stats()
+        assert s["pipeline_depth"] == 2
+        assert s["steps"] == len(eng.step_device_wait_s) \
+            == len(eng.step_host_s)
+        assert s["device_wait_mean_s"] >= 0.0
+        assert s["host_mean_s"] >= 0.0
+
+
+# ----------------------------------------------------- bench schema smoke
+
+
+class TestBenchSchemaSmoke:
+    def test_repo_bench_file_migrates_to_schema4(self):
+        """The checked-in BENCH_serving.json must parse and migrate: every
+        row of every entry carries pipeline_depth + the step breakdown
+        after _migrate_entry."""
+        st = pytest.importorskip("benchmarks.serving_throughput")
+        path = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_serving.json")
+        with open(path) as f:
+            doc = json.load(f)
+        assert doc["schema"] in (1, 2, 3, 4)
+        history = doc["history"] if "history" in doc else [doc]
+        for entry in map(st._migrate_entry, history):
+            assert entry["mesh"]["devices"] >= 1
+            for row in entry["rows"]:
+                assert row["pipeline_depth"] >= 1
+                assert "step_device_wait_ms" in row
+                assert "tok_per_s" in row
+
+    def test_fresh_entries_carry_pipeline_and_packed_kernel(self, tmp_path):
+        st = pytest.importorskip("benchmarks.serving_throughput")
+        entry = {
+            "git_sha": "abc", "mesh": {"dp": 1, "tp": 1, "devices": 1},
+            "rows": [{"label": "x+pipe2", "tok_per_s": 1.0,
+                      "pipeline_depth": 2, "step_device_wait_ms": 0.1,
+                      "step_host_ms": 0.1}],
+            "packed_kernel": {"rows_per_pack": 2, "gqa_group": 1,
+                              "max_abs_err_vs_oracle": 1e-6},
+        }
+        doc = st.append_history(entry, path=str(tmp_path / "b.json"))
+        assert doc["schema"] == 4
+        fresh = doc["history"][-1]
+        assert fresh["rows"][0]["pipeline_depth"] == 2
+        assert fresh["packed_kernel"]["rows_per_pack"] == 2

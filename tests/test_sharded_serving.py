@@ -298,7 +298,7 @@ class TestSharded22Equivalence:
         per shard."""
         model, params = tiny_lm
         eng = ServingEngine(model, params, max_batch=4, max_len=64,
-                            parallelism=par22)
+                            parallelism=par22, pipeline_depth=1)
         for p in prompts:
             eng.submit(p, max_new_tokens=8)
         eng._admit()
@@ -313,6 +313,34 @@ class TestSharded22Equivalence:
             for _ in range(4):
                 eng.step()
         assert len(calls) == 4
+
+    def test_pipelined_depth2_identical_under_mesh(self, tiny_lm, prompts,
+                                                   par22, draft_params):
+        """The depth-2 step pipeline composes with SPMD: greedy,
+        temperature (slot-reusing workload) and speculative streams under
+        a (2, 2) mesh match the depth-1 sharded engine on both layouts,
+        consuming at most one sharded D2H per step."""
+        model, params = tiny_lm
+        extra = [np.asarray(p[::-1]) for p in prompts]  # force slot reuse
+        work = list(prompts) + extra
+        lens = [6, 4, 7, 3, 5, 6, 4, 5]
+
+        def serve(depth, temperature=0.0, spec=None, paged=True):
+            eng = ServingEngine(model, params, max_batch=4, max_len=64,
+                                parallelism=par22, paged=paged,
+                                spec_config=spec, pipeline_depth=depth)
+            uids = [eng.submit(p, max_new_tokens=m, temperature=temperature)
+                    for p, m in zip(work, lens)]
+            out = eng.run()
+            assert eng.decode_transfers == len(eng.step_times)
+            return [out[u] for u in uids]
+
+        for paged in (True, False):
+            assert serve(2, paged=paged) == serve(1, paged=paged)
+            assert (serve(2, temperature=0.7, paged=paged)
+                    == serve(1, temperature=0.7, paged=paged))
+        spec = SpecConfig(draft_params=draft_params, k=3)
+        assert serve(2, spec=spec) == serve(1, spec=spec)
 
     def test_weights_are_tensor_sharded(self, tiny_lm, par22):
         """TP actually engages: attention projections shard over 'model'."""
@@ -399,7 +427,7 @@ class TestSharded22Equivalence:
 
 
 class TestBenchSchemaMigration:
-    def test_schema2_entries_gain_mesh_stamp(self, tmp_path):
+    def test_schema2_entries_gain_mesh_and_pipeline_stamps(self, tmp_path):
         st = pytest.importorskip("benchmarks.serving_throughput")
         import json
 
@@ -414,8 +442,12 @@ class TestBenchSchemaMigration:
              "rows": []},
             path=str(path),
         )
-        assert doc["schema"] == st.BENCH_SCHEMA == 3
+        assert doc["schema"] == st.BENCH_SCHEMA == 4
         migrated, fresh = doc["history"]
         assert migrated["mesh"] == {"dp": 1, "tp": 1, "devices": 1}
         assert migrated["rows"][0]["per_device_cache_bytes"] == 100
+        # Schema 3 -> 4: pre-pipeline rows ran the serial loop (depth 1)
+        # with no device-wait/host breakdown recorded.
+        assert migrated["rows"][0]["pipeline_depth"] == 1
+        assert migrated["rows"][0]["step_device_wait_ms"] is None
         assert fresh["mesh"]["dp"] == 2

@@ -243,7 +243,8 @@ class TestSpecEngineContracts:
         model, params = tiny_lm
         rng = np.random.default_rng(8)
         eng = ServingEngine(model, params, max_batch=2, max_len=64,
-                            spec_config=_spec(draft_params))
+                            spec_config=_spec(draft_params),
+                            pipeline_depth=1)
         for _ in range(2):
             eng.submit(rng.integers(2, 200, size=6), max_new_tokens=12)
         eng._admit()
@@ -258,6 +259,36 @@ class TestSpecEngineContracts:
         with mock.patch.object(jax, "device_get", side_effect=counting):
             for _ in range(3):
                 eng.step()
+        assert len(calls) == 3
+
+    def test_pipelined_spec_consumes_at_most_one_transfer(self, tiny_lm,
+                                                          draft_params):
+        """Depth-2 speculative steps also run the device one step ahead:
+        first step() dispatches only, later ones consume one pack each."""
+        model, params = tiny_lm
+        rng = np.random.default_rng(8)
+        eng = ServingEngine(model, params, max_batch=2, max_len=64,
+                            spec_config=_spec(draft_params),
+                            pipeline_depth=2)
+        for _ in range(2):
+            eng.submit(rng.integers(2, 200, size=6), max_new_tokens=12)
+        eng._admit()
+
+        real = jax.device_get
+        calls = []
+
+        def counting(x):
+            calls.append(1)
+            return real(x)
+
+        with mock.patch.object(jax, "device_get", side_effect=counting):
+            per_step = []
+            for _ in range(3):
+                before = len(calls)
+                eng.step()
+                per_step.append(len(calls) - before)
+            eng.drain()
+        assert per_step == [0, 1, 1]
         assert len(calls) == 3
 
     def test_draft_pool_reserved_and_freed_in_lockstep(self, tiny_lm,
