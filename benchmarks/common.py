@@ -14,8 +14,6 @@ import time
 from typing import Dict, List, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.calib.runner import calibration_batches, collect_grams
 from repro.checkpoint.manager import CheckpointManager

@@ -10,9 +10,8 @@ from __future__ import annotations
 import glob
 import json
 import os
-from typing import Dict, List
 
-from repro.configs import SHAPE_CASES, applicable_shapes, get_config
+from repro.configs import applicable_shapes, get_config
 from repro.configs.registry import ASSIGNED
 
 EXP = os.path.join(os.path.dirname(__file__), "..", "experiments")
@@ -77,7 +76,11 @@ def roofline_section() -> str:
     path = os.path.join(EXP, "roofline.json")
     if not os.path.exists(path):
         return "(roofline.json missing — run `python -m benchmarks.run --only roofline`)"
-    rows = load_json(path)
+    doc = load_json(path)
+    # Legacy format was a bare list of cells; current is
+    # {"cells": [...], "serving_kernels": [...]}.
+    rows = doc if isinstance(doc, list) else doc.get("cells", [])
+    serving = [] if isinstance(doc, list) else doc.get("serving_kernels", [])
     lines = [
         "### Roofline (single-pod 16x16 = 256 chips, TPU v5e: 197 TF/s bf16, 819 GB/s HBM, 50 GB/s ICI)",
         "",
@@ -90,6 +93,26 @@ def roofline_section() -> str:
             f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | **{r['dominant']}** | "
             f"{r['useful_ratio']:.2f} | {100*r['roofline_frac']:.1f}% |"
         )
+    if serving:
+        lines += [
+            "",
+            "#### Serving kernels (static stamp: VMEM/grid-step + packed "
+            "paged-attention cost model)",
+            "",
+            "| arch | kernel | VMEM MiB | fits | pack rows | intensity | bound |",
+            "|---|---|---|---|---|---|---|",
+        ]
+        for r in serving:
+            if "rows_per_pack" in r:
+                tail = (f"{r['rows_per_pack']} | {r['intensity']:.1f} | "
+                        f"{r['bound']}")
+            else:
+                tail = "— | — | —"
+            lines.append(
+                f"| {r['arch']} | {r['kernel']} | "
+                f"{r['vmem_bytes']/2**20:.2f} | "
+                f"{'yes' if r['fits'] else 'NO'} | {tail} |"
+            )
     return "\n".join(lines)
 
 

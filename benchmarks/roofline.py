@@ -28,7 +28,7 @@ from typing import Dict, List, Optional
 from repro.configs import SHAPE_CASES, applicable_shapes, get_config
 from repro.configs.registry import ASSIGNED
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
-from repro.models.api import count_active_params, count_params
+from repro.models.api import count_active_params
 from repro.models.blocks import resolve_specs
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
@@ -189,6 +189,54 @@ def roofline_row(arch: str, shape: str, mesh: str = "16x16") -> Optional[Dict]:
     }
 
 
+# ------------------------------------------- serving-kernel static stamp
+
+def serving_kernel_rows(arch: str, *, max_batch: int = 64,
+                        max_len: int = 4096, block_size: int = 16,
+                        kv_quant: bool = False) -> List[Dict]:
+    """Static per-kernel roofline stamp for the serving path: VMEM bytes
+    per grid step (from repro.analysis.pallas_lint, the same inventory the
+    contract auditor checks) plus the packed paged-attention cost model at
+    the full context length — FLOPs, HBM bytes, arithmetic intensity, and
+    the MXU junk-work factor of row packing.  No dry-run artifact needed:
+    everything is a closed-form function of the config geometry."""
+    from repro.analysis.pallas_lint import (
+        paged_attention_cost,
+        serving_kernel_lints,
+    )
+
+    cfg = get_config(arch)
+    rows: List[Dict] = []
+    for lint in serving_kernel_lints(cfg, max_batch=max_batch,
+                                     max_len=max_len, block_size=block_size,
+                                     kv_quant=kv_quant):
+        row = {
+            "arch": arch,
+            "kernel": lint.kernel,
+            "vmem_bytes": lint.vmem_bytes,
+            "vmem_frac": lint.vmem_bytes / lint.vmem_limit,
+            "fits": lint.fits,
+            "misaligned_tiles": len(lint.misaligned),
+        }
+        if lint.kernel == "paged_attention":
+            cost = paged_attention_cost(
+                max_batch, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
+                block_size, max_len, quant=kv_quant)
+            mxu_t = cost["flops_mxu"] / PEAK_FLOPS_BF16
+            hbm_t = cost["hbm_bytes"] / HBM_BW
+            row.update(
+                rows_per_pack=cost["rows_per_pack"],
+                flops_useful=cost["flops_useful"],
+                flops_mxu=cost["flops_mxu"],
+                hbm_bytes=cost["hbm_bytes"],
+                intensity=cost["intensity"],
+                pack_overhead=cost["flops_mxu"] / max(1, cost["flops_useful"]),
+                bound="compute" if mxu_t > hbm_t else "memory",
+            )
+        rows.append(row)
+    return rows
+
+
 def build_table(mesh: str = "16x16") -> List[Dict]:
     rows = []
     for arch in ASSIGNED:
@@ -209,9 +257,24 @@ def main():
               f"{r['memory_s']:>10.4f}{r['collective_s']:>10.4f}"
               f"{r['dominant']:>12}{r['useful_ratio']:>8.2f}"
               f"{100*r['roofline_frac']:>7.1f}%")
+    serving = []
+    for arch in ASSIGNED:
+        try:
+            serving.extend(serving_kernel_rows(arch))
+        except Exception as e:  # configs without a serving path
+            print(f"serving-kernel stamp skipped for {arch}: {e}")
+    if serving:
+        print(f"\n{'arch':<24}{'kernel':<18}{'vmem':>9}{'pack':>6}"
+              f"{'intensity':>11}{'bound':>9}")
+        for r in serving:
+            extra = (f"{r['rows_per_pack']:>6}{r['intensity']:>11.1f}"
+                     f"{r['bound']:>9}"
+                     if r["kernel"] == "paged_attention" else "")
+            print(f"{r['arch']:<24}{r['kernel']:<18}"
+                  f"{r['vmem_bytes']/2**20:>8.2f}M{extra}")
     out = os.path.join(os.path.dirname(__file__), "..", "experiments", "roofline.json")
     with open(out, "w") as f:
-        json.dump(rows, f, indent=1)
+        json.dump({"cells": rows, "serving_kernels": serving}, f, indent=1)
     avg_frac = sum(r["roofline_frac"] for r in rows) / max(len(rows), 1)
     print(f"roofline,{(time.time()-t0)*1e6:.0f},{avg_frac:.4f}")
     return rows

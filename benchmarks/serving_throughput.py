@@ -46,7 +46,7 @@ import numpy as np
 from .common import get_grams, save_table, train_small_lm
 
 BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json")
-BENCH_SCHEMA = 4
+BENCH_SCHEMA = 5
 
 _UNSHARDED_MESH = {"dp": 1, "tp": 1, "devices": 1}
 
@@ -56,7 +56,9 @@ def _migrate_entry(entry: Dict) -> Dict:
     (1, 1) mesh and per-device bytes == global bytes (the identity the
     sharded engine reduces to on one device).  Schema 3 -> 4: pre-pipeline
     entries ran the serial dispatch->sync loop, i.e. pipeline_depth 1, with
-    no device-wait/host breakdown recorded (stamped null)."""
+    no device-wait/host breakdown recorded (stamped null).  Schema 4 -> 5:
+    pre-auditor entries carry no static contract stamp (``audit: null``);
+    fresh entries record the auditor's verdict on the roots the run used."""
     if "mesh" not in entry:
         entry = dict(entry, mesh=dict(_UNSHARDED_MESH))
         entry["rows"] = [
@@ -69,6 +71,8 @@ def _migrate_entry(entry: Dict) -> Dict:
               "step_host_ms": None}, **r)
         for r in entry.get("rows", [])
     ]
+    if "audit" not in entry:
+        entry = dict(entry, audit=None)
     return entry
 
 
@@ -291,6 +295,7 @@ def run(model_name: str = "small-llama", requests: int = 24, max_new: int = 24,
         "meta": meta,
         "rows": rows,
         "packed_kernel": _packed_kernel_stamp(model, block_size),
+        "audit": _audit_stamp(model, max_batch, max_len, block_size),
         "summary": {
             "per_device_cache_bytes_paged":
                 by[(nsvd, "paged")]["per_device_cache_bytes"],
@@ -325,6 +330,41 @@ def run(model_name: str = "small-llama", requests: int = 24, max_new: int = 24,
           f"-> BENCH_serving.json [{entry['git_sha']} "
           f"{entry['config_hash']}, {len(doc['history'])} run(s)]")
     return rows
+
+
+def _audit_stamp(model, max_batch: int, max_len: int,
+                 block_size: int) -> Optional[Dict]:
+    """Schema-5 static contract stamp: the auditor's verdict on the serving
+    roots this run drove — declared D2H transfers per steady step, whether
+    every donated buffer aliases in the lowering, and per-kernel VMEM bytes
+    per grid step.  Lowering-only (no compile), so it adds seconds, not
+    minutes; any failure degrades to null rather than sinking the bench."""
+    try:
+        from repro.analysis.donation import audit_donation
+        from repro.analysis.pallas_lint import serving_kernel_lints
+        from repro.analysis.roots import audit_roots
+        from repro.analysis.transfers import audit_transfers
+        from repro.models.api import param_specs
+
+        avals = param_specs(model.cfg)
+        arts = audit_roots(model, avals, spec=False, compile=False,
+                           max_batch=max_batch, max_len=max_len,
+                           block_size=block_size)
+        steady = [a for a in arts if a.spec.kind == "steady"]
+        return {
+            "d2h_per_step": max(
+                len(audit_transfers(a).d2h_outputs) for a in steady),
+            "donation_ok": all(audit_donation(a).ok for a in arts),
+            "vmem_bytes_per_kernel": {
+                lint.kernel: lint.vmem_bytes
+                for lint in serving_kernel_lints(
+                    model.cfg, max_batch=max_batch, max_len=max_len,
+                    block_size=block_size)
+            },
+        }
+    except Exception as e:  # the stamp must never sink a bench run
+        print(f"  audit stamp skipped: {e}")
+        return None
 
 
 def _packed_kernel_stamp(model, block_size: int) -> Dict:

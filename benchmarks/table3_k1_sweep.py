@@ -11,7 +11,6 @@ from __future__ import annotations
 import time
 
 from .common import (
-    EVAL_DOMAINS,
     compress_and_eval,
     load_table,
     fmt_row,

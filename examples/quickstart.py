@@ -12,7 +12,6 @@ import sys
 sys.path.insert(0, "src")
 sys.path.insert(0, ".")
 
-import jax
 
 from benchmarks.common import (
     VOCAB,

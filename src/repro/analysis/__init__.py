@@ -1,0 +1,47 @@
+"""Static contract auditor for the serving jit roots.
+
+Traces every root in launch/steps.serving_root_registry to its jaxpr /
+lowered stablehlo / compiled executable from ABSTRACT inputs (no decode step
+runs, no cache is allocated) and checks the contracts the engine's
+performance rests on:
+
+  * transfers  — no host communication inside a root; steady-state roots
+                 emit exactly ONE D2H output (the sampled-token vector).
+  * donation   — every donated argnum's leaves actually alias an output in
+                 the lowered computation (a dropped alias is a silent
+                 per-step cache copy).
+  * sharding   — compiled in/out shardings match the ServingShardings pins
+                 leaf-for-leaf (drift means implicit resharding per step).
+  * dtypes     — no f64 anywhere; no accidental fp32 upcast of large
+                 bf16/f16 operands (params/cache scale); jaxpr-level walk.
+  * pallas     — per-grid-step VMEM bytes of the serving kernels (from
+                 their BlockSpecs + DMA rings) fit the per-core budget,
+                 tiles land on sublane/lane boundaries for their dtype.
+  * interleave — exhaustive enumeration of short BlockAllocator x pipeline
+                 -ring schedules: no double-free, FIFO host-live <=>
+                 device-active.
+
+CLI: ``python -m repro.analysis.run --config llama-7b --layout both``.
+"""
+
+from .donation import audit_donation
+from .dtypes import audit_dtypes
+from .interleave import check_interleavings
+from .pallas_lint import kernel_lint, serving_kernel_lints
+from .roots import RootArtifact, audit_roots, make_root_context, trace_root
+from .sharding_drift import audit_sharding
+from .transfers import audit_transfers
+
+__all__ = [
+    "RootArtifact",
+    "audit_donation",
+    "audit_dtypes",
+    "audit_roots",
+    "audit_sharding",
+    "audit_transfers",
+    "check_interleavings",
+    "kernel_lint",
+    "make_root_context",
+    "serving_kernel_lints",
+    "trace_root",
+]

@@ -1,0 +1,108 @@
+"""Donation audit: every donated argnum must alias an output buffer.
+
+``jax.jit(donate_argnums=...)`` is a REQUEST: jax matches each donated
+input leaf to a compatible output (shape/dtype/sharding) and records the
+pair as a ``tf.aliasing_output`` attribute on the lowered main function's
+parameter.  When no compatible output exists — someone reshaped a state
+leaf, changed a dtype, dropped an output — the donation silently degrades
+to a per-step COPY of that buffer (jax warns once at compile; nobody reads
+warnings in a serving binary).  For a multi-MB KV cache that is the exact
+copy the donation contract exists to prevent, so the auditor pins it
+statically: the number of aliased parameters in the lowered computation
+must equal the donated leaf count.
+
+Per-arg attribution: lowered parameters appear in flattened-arg order, so
+when none were pruned (every donated arg is used by construction — it
+feeds an output) each missing alias names its offending argnum."""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import List, Tuple
+
+import jax
+
+_ARG_RE = re.compile(r"%arg(\d+):")
+_MAIN_RE = re.compile(r"func\.func\s+(?:public\s+)?@main\(")
+
+
+@dataclasses.dataclass
+class DonationAudit:
+    root: str
+    donated_args: Tuple[int, ...]
+    expected_aliases: int   # donated leaves
+    actual_aliases: int     # tf.aliasing_output params in the lowering
+    missing: List[str]      # per-arg attribution when derivable
+    ok: bool
+    notes: List[str]
+
+
+def _main_signature(text: str) -> str:
+    """The argument list of the lowered module's @main (paren-balanced)."""
+    m = _MAIN_RE.search(text)
+    if m is None:
+        return ""
+    i = m.end() - 1  # at the opening paren
+    depth = 0
+    for j in range(i, len(text)):
+        c = text[j]
+        if c == "(":
+            depth += 1
+        elif c == ")":
+            depth -= 1
+            if depth == 0:
+                return text[i:j]
+    return text[i:]
+
+
+def audit_donation(art) -> DonationAudit:
+    donate = tuple(art.spec.donate)
+    leaf_counts = [len(jax.tree.leaves(a)) for a in art.args]
+    expected = sum(leaf_counts[d] for d in donate)
+
+    sig = _main_signature(art.lowered.as_text())
+    # Split the signature into per-parameter chunks: each starts at %argN.
+    chunks = re.split(r"(?=%arg\d+:)", sig)
+    chunks = [c for c in chunks if _ARG_RE.match(c)]
+    aliased_params = [int(_ARG_RE.match(c).group(1)) for c in chunks
+                      if "tf.aliasing_output" in c]
+    actual = len(aliased_params)
+
+    notes: List[str] = []
+    missing: List[str] = []
+    total_leaves = sum(leaf_counts)
+    if len(chunks) == total_leaves:
+        # No pruning: flat param index -> argnum is the cumulative-count map,
+        # so missing aliases can be attributed to their donated arg.
+        starts = []
+        acc = 0
+        for n in leaf_counts:
+            starts.append(acc)
+            acc += n
+        aliased = set(aliased_params)
+        for d in donate:
+            span = range(starts[d], starts[d] + leaf_counts[d])
+            lost = [p for p in span if p not in aliased]
+            if lost:
+                missing.append(
+                    f"arg {d}: {len(lost)}/{leaf_counts[d]} donated "
+                    f"leaves unaliased (params {lost[:4]}"
+                    f"{'...' if len(lost) > 4 else ''})"
+                )
+    elif actual < expected:
+        notes.append(
+            f"lowered signature has {len(chunks)} params for "
+            f"{total_leaves} arg leaves (args pruned); alias count "
+            "compared without per-arg attribution"
+        )
+
+    ok = actual >= expected
+    if not ok:
+        notes.append(
+            f"{expected - actual} donated leaves do not alias any output — "
+            "each one is a silent per-step buffer copy"
+        )
+    return DonationAudit(root=art.name, donated_args=donate,
+                         expected_aliases=expected, actual_aliases=actual,
+                         missing=missing, ok=ok, notes=notes)

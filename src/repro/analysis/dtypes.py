@@ -1,0 +1,110 @@
+"""Dtype/promotion lint: walk a root's jaxpr for silent precision drift.
+
+Three classes of violation:
+
+  * any f64 value ANYWHERE (a stray python float in a jnp op with x64
+    enabled, or an un-annotated numpy input) — serving never wants f64;
+  * large bf16/f16 -> f32 convert_element_type ops: upcasting a logits row
+    for a softmax is intended, upcasting the PARAMS or the KV CACHE (the
+    compression's whole payoff) is a 2x HBM/bandwidth regression.  "Large"
+    defaults to half the biggest param leaf, so the threshold scales with
+    the model instead of hard-coding an element count;
+  * weak-type widening: a weakly-typed f32 scalar meeting a bf16 tensor
+    promotes the TENSOR in jax's promotion lattice — flagged via the same
+    convert walk (the widening materializes as a convert of the tensor).
+
+The walk descends into scan/while/cond/pjit sub-jaxprs but NOT into
+pallas_call bodies: in-kernel fp32 accumulation (flash softmax, gram,
+nested-lowrank scratch) is deliberate and stays in VMEM."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional
+
+import jax
+import numpy as np
+
+_SMALL = ("bfloat16", "float16")
+
+
+@dataclasses.dataclass
+class DtypeAudit:
+    root: str
+    upcast_threshold_elems: int
+    f64_ops: List[str]
+    large_upcasts: List[str]
+    ok: bool
+
+
+def _sub_jaxprs(v: Any) -> List[Any]:
+    if isinstance(v, (list, tuple)):
+        out = []
+        for x in v:
+            out.extend(_sub_jaxprs(x))
+        return out
+    if hasattr(v, "eqns"):          # Jaxpr
+        return [v]
+    if hasattr(v, "jaxpr"):         # ClosedJaxpr
+        return [v.jaxpr]
+    return []
+
+
+def _walk(jaxpr, visit) -> None:
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            continue  # in-tile fp32 accumulation is intended
+        visit(eqn)
+        for v in eqn.params.values():
+            for sub in _sub_jaxprs(v):
+                _walk(sub, visit)
+
+
+def default_upcast_threshold(params_avals) -> int:
+    """Half the largest param leaf (floor 2**16 elements): big enough to
+    pass per-row logits softmaxes, small enough to catch a whole-cache or
+    whole-matrix upcast."""
+    biggest = max(
+        (int(np.prod(leaf.shape, dtype=np.int64))
+         for leaf in jax.tree.leaves(params_avals)),
+        default=0,
+    )
+    return max(1 << 16, biggest // 2)
+
+
+def audit_dtypes(art, upcast_threshold: Optional[int] = None) -> DtypeAudit:
+    if upcast_threshold is None:
+        upcast_threshold = default_upcast_threshold(art.args[0])
+    f64: List[str] = []
+    upcasts: List[str] = []
+
+    def visit(eqn) -> None:
+        for var in eqn.outvars:
+            aval = var.aval
+            dt = getattr(aval, "dtype", None)
+            try:
+                is_f64 = dt is not None and np.dtype(dt) == np.float64
+            except TypeError:
+                continue  # extended dtypes (PRNG keys) have no numpy dtype
+            if is_f64:
+                f64.append(f"{eqn.primitive.name} -> f64 {aval.shape}")
+        if eqn.primitive.name != "convert_element_type":
+            return
+        (inv,) = eqn.invars
+        in_aval = getattr(inv, "aval", None)
+        in_dt = getattr(in_aval, "dtype", None)
+        if in_dt is None:
+            return
+        new_dt = np.dtype(eqn.params.get("new_dtype"))
+        elems = int(np.prod(in_aval.shape, dtype=np.int64))
+        if (str(in_dt) in _SMALL and new_dt == np.float32
+                and elems >= upcast_threshold):
+            upcasts.append(
+                f"{in_dt} -> f32 on {in_aval.shape} ({elems} elems)"
+            )
+
+    _walk(art.jaxpr.jaxpr, visit)
+    return DtypeAudit(root=art.name,
+                      upcast_threshold_elems=upcast_threshold,
+                      f64_ops=f64, large_upcasts=upcasts,
+                      ok=not f64 and not upcasts)

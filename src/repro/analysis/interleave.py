@@ -1,0 +1,282 @@
+"""Exhaustive-interleaving checker: BlockAllocator x pipeline ring.
+
+The serving engine overlaps device steps with host bookkeeping: dispatch
+pushes an in-flight entry (the step's active-row mask) onto a ring of
+depth D, and the host consumes the OLDEST entry's tokens later — possibly
+after the slot set has changed.  The allocator invariants that make this
+safe (a freed block is never still referenced by an in-flight step; a
+retire inside an older entry doesn't corrupt a younger one) are enforced
+by conventions scattered across ``engine.step`` / ``_commit_decode`` /
+``admit``: admission and defrag only run on a DRAINED ring, retirement
+frees exactly once, and consumption is FIFO.
+
+This module model-checks those conventions by driving the REAL
+:class:`repro.serving.kvcache.allocator.BlockAllocator` (not a toy copy)
+through every interleaving of abstract engine operations up to a bounded
+schedule length, with the device's finish choice made adversarially
+(every subset of live masked rows can finish at every consume).  After
+every operation it asserts:
+
+  * block conservation — free + owned partition [0, num_blocks), no
+    duplicates, no losses;
+  * ownership exactness — allocator owners == live slots, every live slot
+    holds >= 1 block (a live slot with no blocks means its cache space
+    was freed while the device can still write it);
+  * retire-frees-once — freeing a finishing slot returns a non-empty
+    block list (empty == double free / ghost retire);
+  * ring FIFO monotonicity — within one in-flight burst (no admission can
+    interleave: it requires a drained ring) masks only shrink, so a row
+    live in a younger entry was live in every older one — the assumption
+    ``_commit_decode``'s ``mask & live`` skip relies on;
+  * defrag soundness — the move map returned by ``defrag()`` preserves
+    per-owner block counts and conservation.
+
+``bug=`` injects a deliberate violation of one convention so tests can
+prove the checker actually catches each class (see ``BUGS``)."""
+
+from __future__ import annotations
+
+import dataclasses
+from itertools import chain, combinations
+from typing import Dict, FrozenSet, List, Optional, Tuple
+
+from repro.serving.kvcache.allocator import BlockAllocator
+
+#: Injectable convention violations (for seeded self-tests).
+BUGS = (
+    "double_free",       # retire frees the slot twice
+    "free_on_dispatch",  # blocks freed at dispatch while step is in flight
+    "leak_on_retire",    # retire drops the slot without freeing its blocks
+    "admit_unsynced",    # admission without draining the ring first
+)
+
+_Entry = FrozenSet[int]          # active-row mask at dispatch
+_Snap = Tuple                    # hashable allocator snapshot
+
+
+def _snapshot(alloc: BlockAllocator) -> _Snap:
+    return (
+        tuple(tuple(f) for f in alloc._free),
+        tuple(sorted((k, tuple(v)) for k, v in alloc._owned.items())),
+    )
+
+
+def _restore(alloc: BlockAllocator, snap: _Snap) -> None:
+    free, owned = snap
+    alloc._free = [list(f) for f in free]
+    alloc._owned = {k: list(v) for k, v in owned}
+
+
+def _subsets(s: FrozenSet[int]):
+    items = sorted(s)
+    return chain.from_iterable(
+        combinations(items, r) for r in range(len(items) + 1))
+
+
+@dataclasses.dataclass
+class InterleaveReport:
+    num_slots: int
+    num_blocks: int
+    depth: int
+    max_ops: int
+    states_explored: int
+    schedules_explored: int
+    violations: List[str]
+    bug: Optional[str] = None
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+
+class _Model:
+    """One engine-state: real allocator + host_live set + in-flight ring."""
+
+    def __init__(self, num_slots: int, num_blocks: int, depth: int,
+                 bug: Optional[str]):
+        self.alloc = BlockAllocator(num_blocks)
+        self.num_slots = num_slots
+        self.num_blocks = num_blocks
+        self.depth = depth
+        self.bug = bug
+        self.host_live: FrozenSet[int] = frozenset()
+        self.ring: Tuple[_Entry, ...] = ()
+
+    # ------------------------------------------------------------- state io
+
+    def key(self):
+        return (_snapshot(self.alloc), self.host_live, self.ring)
+
+    def set_key(self, key) -> None:
+        snap, self.host_live, self.ring = key
+        _restore(self.alloc, snap)
+
+    # ----------------------------------------------------------- invariants
+
+    def check(self, op: str, violations: List[str]) -> None:
+        a = self.alloc
+        free = [b for f in a._free for b in f]
+        owned = [b for ids in a._owned.values() for b in ids]
+        both = free + owned
+        if len(both) != len(set(both)):
+            violations.append(
+                f"{op}: duplicate block id (free={free}, owned={owned})")
+        if set(both) != set(range(self.num_blocks)):
+            violations.append(
+                f"{op}: conservation broken — free+owned covers "
+                f"{sorted(set(both))}, want 0..{self.num_blocks - 1}")
+        owners = frozenset(a._owned)
+        if owners != self.host_live:
+            ghosts = sorted(owners - self.host_live)
+            naked = sorted(self.host_live - owners)
+            if ghosts:
+                violations.append(
+                    f"{op}: ghost owners {ghosts} (retired but not freed)")
+            if naked:
+                violations.append(
+                    f"{op}: live slots {naked} own no blocks (cache space "
+                    "freed under an active request)")
+        for i in range(1, len(self.ring)):
+            if not self.ring[i] <= self.ring[i - 1]:
+                violations.append(
+                    f"{op}: ring mask grew mid-burst "
+                    f"({sorted(self.ring[i - 1])} -> {sorted(self.ring[i])})"
+                    " — a consume of the older entry would treat the new "
+                    "row as having been device-active before its admission")
+
+    # ----------------------------------------------------------- operations
+
+    def ops(self) -> List[Tuple]:
+        """Enabled (op, arg) moves from this state."""
+        out: List[Tuple] = []
+        admit_ok = (not self.ring) or self.bug == "admit_unsynced"
+        if admit_ok:
+            for s in range(self.num_slots):
+                if s not in self.host_live:
+                    out.append(("admit", s))
+        if len(self.ring) < self.depth and self.host_live:
+            out.append(("dispatch", None))
+        if self.ring:
+            mask = self.ring[0]
+            for fin in _subsets(mask & self.host_live):
+                out.append(("consume", frozenset(fin)))
+        if not self.ring:
+            for s in sorted(self.host_live):
+                if len(self.alloc.owned_by(s)) > 1:
+                    out.append(("rollback", s))
+            if self.alloc.in_use():
+                out.append(("defrag", None))
+        return out
+
+    def apply(self, op: str, arg, violations: List[str]) -> None:
+        a = self.alloc
+        if op == "admit":
+            ids = a.alloc(arg, 2)
+            if ids is None:
+                ids = a.alloc(arg, 1)       # backpressure: try smaller
+            if ids is not None:
+                self.host_live = self.host_live | {arg}
+        elif op == "dispatch":
+            self.ring = self.ring + (self.host_live,)
+            if self.bug == "free_on_dispatch" and self.host_live:
+                a.free(min(self.host_live))
+        elif op == "consume":
+            self.ring = self.ring[1:]
+            for s in sorted(arg):
+                freed = a.free(s)
+                if not freed:
+                    violations.append(
+                        f"consume: retiring slot {s} freed NO blocks "
+                        "(double free or free-while-in-flight)")
+                if self.bug == "double_free":
+                    again = a.free(s)
+                    if not again:
+                        violations.append(
+                            f"consume: second free of slot {s} returned "
+                            "nothing — double free detected")
+                if self.bug != "leak_on_retire" or not freed:
+                    self.host_live = self.host_live - {s}
+                else:
+                    # leak: slot dropped from live set without the free
+                    a._owned[s] = freed
+                    for b in freed:
+                        a._free[a.home_shard(b)].remove(b)
+                    self.host_live = self.host_live - {s}
+        elif op == "rollback":
+            a.release_suffix(arg, 1)
+        elif op == "defrag":
+            before = {k: len(v) for k, v in a._owned.items()}
+            moves = a.defrag()
+            after = {k: len(v) for k, v in a._owned.items()}
+            if before != after:
+                violations.append(
+                    f"defrag: per-owner block counts changed {before} -> "
+                    f"{after} (moves {moves})")
+        else:  # pragma: no cover
+            raise ValueError(op)
+        self.check(op, violations)
+
+
+def check_interleavings(num_slots: int = 2, num_blocks: int = 4,
+                        depth: int = 2, max_ops: int = 7,
+                        bug: Optional[str] = None,
+                        max_violations: int = 8) -> InterleaveReport:
+    """DFS every operation schedule up to ``max_ops`` moves (deduplicating
+    revisited states) and collect invariant violations.  With ``bug=None``
+    on the real allocator this must come back clean; with a ``BUGS`` entry
+    injected it must not."""
+    if bug is not None and bug not in BUGS:
+        raise ValueError(f"unknown bug {bug!r}; pick from {BUGS}")
+    model = _Model(num_slots, num_blocks, depth, bug)
+    violations: List[str] = []
+    seen = set()
+    stats = {"states": 0, "schedules": 0}
+
+    def dfs(depth_left: int) -> None:
+        if len(violations) >= max_violations:
+            return
+        key = model.key()
+        if (key, depth_left) in seen:
+            return
+        seen.add((key, depth_left))
+        stats["states"] += 1
+        moves = model.ops()
+        if depth_left == 0 or not moves:
+            stats["schedules"] += 1
+            return
+        for op, arg in moves:
+            saved = model.key()
+            n_before = len(violations)
+            model.apply(op, arg, violations)
+            if len(violations) == n_before:
+                dfs(depth_left - 1)
+            else:
+                stats["schedules"] += 1  # violating branch: stop here
+            model.set_key(saved)
+            if len(violations) >= max_violations:
+                return
+
+    dfs(max_ops)
+    return InterleaveReport(
+        num_slots=num_slots, num_blocks=num_blocks, depth=depth,
+        max_ops=max_ops, states_explored=stats["states"],
+        schedules_explored=stats["schedules"],
+        violations=violations[:max_violations], bug=bug)
+
+
+def _dedupe(msgs: List[str]) -> List[str]:
+    out: List[str] = []
+    for m in msgs:
+        if m not in out:
+            out.append(m)
+    return out
+
+
+def summarize(report: InterleaveReport) -> Dict:
+    return {
+        "ok": report.ok,
+        "states_explored": report.states_explored,
+        "schedules_explored": report.schedules_explored,
+        "violations": _dedupe(report.violations),
+        "bug": report.bug,
+    }

@@ -1,0 +1,220 @@
+"""Pallas VMEM/tiling lint: per-grid-step on-chip bytes, statically.
+
+Every serving kernel package exports ``vmem_tiles(...)`` — a plain-data
+inventory of the buffers resident in VMEM during one grid step, mirroring
+its BlockSpecs and scratch_shapes (streamed BlockSpec operands count twice
+for Pallas's automatic double-buffering; explicit DMA rings carry their 2
+slots in their own leading dim).  This module does the arithmetic the
+hardware will do:
+
+  * pads each tile to the TPU register tiling for its dtype — (8, 128)
+    f32, (16, 128) bf16, (32, 128) int8/fp8 on the two minor dims — and
+    flags tiles whose minor dims are NOT already multiples (padding waste
+    and, for the lane dim, strided DMAs);
+  * sums padded bytes x buffers against the per-core VMEM budget
+    (~16 MiB; the lint uses a conservative 90% of it because the compiler
+    keeps a slice for itself).
+
+Also home to the packed paged-attention decode cost model (FLOPs/HBM
+bytes) that benchmarks/roofline.py stamps — the kernel's arithmetic
+intensity is a static function of its geometry."""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional
+
+import numpy as np
+
+LANE = 128
+_SUBLANE_BY_ITEMSIZE = {8: 8, 4: 8, 2: 16, 1: 32}
+
+VMEM_BYTES = 16 * 1024 * 1024
+VMEM_BUDGET = int(VMEM_BYTES * 0.9)  # compiler keeps a slice
+
+
+def _dtype_itemsize(dtype) -> int:
+    try:
+        return np.dtype(dtype).itemsize
+    except TypeError:
+        # jnp dtypes like bfloat16 objects
+        return np.dtype(str(dtype)).itemsize
+
+
+def sublane(dtype) -> int:
+    return _SUBLANE_BY_ITEMSIZE[_dtype_itemsize(dtype)]
+
+
+def padded_shape(shape, dtype) -> tuple:
+    """Shape after padding the two minor dims to the dtype's register tile
+    ((sublane, 128)); scalars/vectors pad as a 1-row tile."""
+    shape = tuple(int(s) for s in shape)
+    if not shape:
+        shape = (1,)
+    if len(shape) == 1:
+        shape = (1,) + shape
+    s = sublane(dtype)
+    lead, m2, m1 = shape[:-2], shape[-2], shape[-1]
+    return lead + (-(-m2 // s) * s, -(-m1 // LANE) * LANE)
+
+
+@dataclasses.dataclass
+class TileReport:
+    name: str
+    shape: tuple
+    dtype: str
+    buffers: int
+    raw_bytes: int
+    padded_bytes: int
+    aligned: bool
+
+
+@dataclasses.dataclass
+class KernelLint:
+    kernel: str
+    tiles: List[TileReport]
+    vmem_bytes: int        # sum of padded bytes x buffers
+    vmem_limit: int
+    fits: bool
+    misaligned: List[str]
+
+    @property
+    def ok(self) -> bool:
+        return self.fits
+
+
+def kernel_lint(kernel: str, tiles: List[Dict],
+                vmem_limit: int = VMEM_BUDGET) -> KernelLint:
+    """Lint one kernel's ``vmem_tiles()`` inventory."""
+    reports: List[TileReport] = []
+    total = 0
+    misaligned: List[str] = []
+    for t in tiles:
+        shape, dtype = tuple(t["shape"]), t["dtype"]
+        buffers = int(t.get("buffers", 1))
+        item = _dtype_itemsize(dtype)
+        raw = int(np.prod(shape, dtype=np.int64)) * item
+        pshape = padded_shape(shape, dtype)
+        padded = int(np.prod(pshape, dtype=np.int64)) * item
+        aligned = pshape == (shape if len(shape) > 1 else (1,) + shape)
+        if not aligned:
+            misaligned.append(
+                f"{t['name']}: {shape} {dtype} pads to {pshape} "
+                f"(sublane {sublane(dtype)} x lane {LANE})"
+            )
+        reports.append(TileReport(
+            name=t["name"], shape=shape, dtype=str(dtype), buffers=buffers,
+            raw_bytes=raw, padded_bytes=padded, aligned=aligned,
+        ))
+        total += padded * buffers
+    return KernelLint(kernel=kernel, tiles=reports, vmem_bytes=total,
+                      vmem_limit=vmem_limit, fits=total <= vmem_limit,
+                      misaligned=misaligned)
+
+
+def serving_kernel_lints(cfg, *, max_batch: int = 8, max_len: int = 256,
+                         block_size: int = 16, kv_quant: bool = False,
+                         gram_rows: int = 2048,
+                         vmem_limit: int = VMEM_BUDGET) -> List[KernelLint]:
+    """Lint every Pallas kernel this model config's serving path can reach,
+    with tile geometry derived from the config (not hand-entered)."""
+    from repro.kernels.flash_attention import flash_attention as fa
+    from repro.kernels.gram import gram as gram_k
+    from repro.kernels.nested_lowrank import nested_lowrank as nlr
+    from repro.kernels.paged_attention import paged_attention as pa
+    from repro.kernels.rwkv6 import rwkv6 as rk
+
+    dtype = cfg.dtype
+    out: List[KernelLint] = []
+    has_attn = cfg.attention != "none" and any(
+        m == "attn" for m in cfg.mixer_pattern)
+    if has_attn:
+        out.append(kernel_lint(
+            "paged_attention",
+            pa.vmem_tiles(max_batch, cfg.num_heads, cfg.num_kv_heads,
+                          cfg.head_dim, block_size, dtype=dtype,
+                          quant=kv_quant),
+            vmem_limit,
+        ))
+        out.append(kernel_lint(
+            "flash_attention",
+            fa.vmem_tiles(max_len, cfg.num_heads, cfg.num_kv_heads,
+                          cfg.head_dim, dtype=dtype),
+            vmem_limit,
+        ))
+    # Decode-shaped nested-lowrank matmul of the largest compressed layer
+    # (d_model -> d_ff up-projection) at the mildest compression the
+    # planner emits (ratio 0.2) — the largest rank serving could ever see.
+    # The dispatcher (ops.py) falls back to the XLA matmul when the
+    # resident factors overflow its VMEM gate, so the lint walks the rank
+    # down to the largest geometry the gate actually admits to Pallas.
+    from repro.core.ratio import rank_for_ratio
+
+    k1 = max(8, rank_for_ratio(cfg.d_model, cfg.d_ff, 0.2, multiple_of=8))
+    while k1 > 8 and nlr.kernel_vmem_bytes(
+            max_batch, cfg.d_model, cfg.d_ff, k1, max(8, k1 // 2),
+            dtype=dtype) > min(vmem_limit, nlr.VMEM_LIMIT_BYTES):
+        k1 -= 8
+    out.append(kernel_lint(
+        "nested_lowrank",
+        nlr.vmem_tiles(max_batch, cfg.d_model, cfg.d_ff, k1,
+                       max(8, k1 // 2), dtype=dtype),
+        vmem_limit,
+    ))
+    out.append(kernel_lint(
+        "gram",
+        gram_k.vmem_tiles(cfg.d_model, gram_rows, dtype=dtype),
+        vmem_limit,
+    ))
+    if cfg.rwkv is not None or "rwkv" in cfg.mixer_pattern:
+        out.append(kernel_lint(
+            "rwkv6",
+            rk.vmem_tiles(max_len, cfg.d_model, dtype=dtype),
+            vmem_limit,
+        ))
+    return out
+
+
+# ------------------------------------------------ paged-attention roofline
+
+def paged_attention_cost(batch: int, num_q_heads: int, num_kv_heads: int,
+                         head_dim: int, block_size: int, mean_len: int,
+                         *, dtype_bytes: int = 2, kv_bytes: int = None,
+                         quant: bool = False,
+                         rows_per_pack: Optional[int] = None) -> Dict:
+    """Static FLOP/HBM-byte model of one packed paged-attention decode call.
+
+    ``flops_useful`` counts the attention math the model needs (QK^T + PV:
+    4 * B * Hq * hd per cached token); ``flops_mxu`` what the packed kernel
+    actually issues — each R-row pack shares its page loop, so the MXU
+    computes an (R*G, R*bs) score tile whose off-diagonal quadrants are
+    masked junk (factor ~R).  Bytes stream every live page's K and V (plus
+    scales when int8-quantized) once, q/out once."""
+    from repro.kernels.paged_attention.paged_attention import (
+        default_rows_per_pack,
+    )
+
+    g = max(1, num_q_heads // max(1, num_kv_heads))
+    hkv = max(1, num_kv_heads)
+    if kv_bytes is None:
+        kv_bytes = 1 if quant else dtype_bytes
+    r = (default_rows_per_pack(batch, g) if rows_per_pack is None
+         else max(1, rows_per_pack))
+    pages = math.ceil(max(1, mean_len) / block_size)
+    flops_useful = 4 * batch * num_q_heads * head_dim * mean_len
+    # Per pack, per page, per kv head: 2*(R*G)*hd*(R*bs) + 2*(R*G)*(R*bs)*hd
+    packs = math.ceil(batch / r)
+    flops_mxu = packs * pages * hkv * 4 * (r * g) * (r * block_size) * head_dim
+    page_bytes = pages * block_size * hkv * head_dim * kv_bytes * 2
+    scale_bytes = (pages * block_size * hkv * 4 * 2) if quant else 0
+    q_bytes = batch * num_q_heads * head_dim * dtype_bytes * 2  # q + out
+    hbm = batch * (page_bytes + scale_bytes) + q_bytes
+    return {
+        "rows_per_pack": r,
+        "pages_per_row": pages,
+        "flops_useful": flops_useful,
+        "flops_mxu": flops_mxu,
+        "hbm_bytes": hbm,
+        "intensity": flops_useful / max(1, hbm),
+    }

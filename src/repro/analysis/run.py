@@ -1,0 +1,184 @@
+"""CLI driver: audit every serving root of a config, print the verdict.
+
+    python -m repro.analysis.run --config llama-7b --reduced --layout both
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+        python -m repro.analysis.run --config llama-7b --reduced \\
+        --layout paged --dp 2 --tp 2
+
+Exit code 0 iff every audit over every traced root passes: transfer
+contract, donation aliasing, sharding pins, dtype lint, Pallas VMEM lint,
+and the allocator/ring interleaving check.  Designed to run from CI on CPU
+(abstract tracing only — nothing is allocated, no step executes)."""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List
+
+from repro.analysis.donation import audit_donation
+from repro.analysis.dtypes import audit_dtypes, default_upcast_threshold
+from repro.analysis.interleave import check_interleavings, summarize
+from repro.analysis.pallas_lint import serving_kernel_lints
+from repro.analysis.roots import audit_roots
+from repro.analysis.sharding_drift import audit_sharding
+from repro.analysis.transfers import audit_transfers
+
+
+def _flag(ok: bool) -> str:
+    return "ok " if ok else "FAIL"
+
+
+def audit_layout(model, params_avals, layout: str, par,
+                 *, spec: bool = True, compile: bool = True,
+                 **ctx_kw) -> List[Dict]:
+    """Run the four per-root audits over every root of one layout."""
+    arts = audit_roots(model, params_avals, par=par, layout=layout,
+                       spec=spec, compile=compile, **ctx_kw)
+    thresh = default_upcast_threshold(params_avals)
+    rows: List[Dict] = []
+    for art in arts:
+        tr = audit_transfers(art)
+        dn = audit_donation(art)
+        sh = audit_sharding(art)
+        dt = audit_dtypes(art, upcast_threshold=thresh)
+        rows.append({
+            "root": art.name,
+            "layout": layout,
+            "kind": art.spec.kind,
+            "transfers": {"ok": tr.ok, "d2h_outputs": len(tr.d2h_outputs),
+                          "d2h_bytes": tr.d2h_bytes,
+                          "problems": tr.notes + tr.host_comm_ops},
+            "donation": {"ok": dn.ok, "expected": dn.expected_aliases,
+                         "actual": dn.actual_aliases,
+                         "missing": dn.missing, "notes": dn.notes},
+            "sharding": {"ok": sh.ok, "skipped": sh.skipped,
+                         "checked_leaves": sh.checked_leaves,
+                         "mismatches": sh.mismatches},
+            "dtypes": {"ok": dt.ok, "f64_ops": dt.f64_ops,
+                       "large_upcasts": dt.large_upcasts},
+            "ok": tr.ok and dn.ok and sh.ok and dt.ok,
+        })
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.run",
+        description="Static contract auditor for the serving jit roots.")
+    ap.add_argument("--config", default="llama-7b",
+                    help="model config name (repro.configs registry)")
+    ap.add_argument("--reduced", action="store_true",
+                    help="shrink the config (CI-sized tracing)")
+    ap.add_argument("--layout", choices=("dense", "paged", "both"),
+                    default="both")
+    ap.add_argument("--dp", type=int, default=1)
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--spec-k", type=int, default=4)
+    ap.add_argument("--no-spec", action="store_true",
+                    help="skip the speculative-decoding roots")
+    ap.add_argument("--kv-quant", action="store_true")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--no-compile", action="store_true",
+                    help="lower only (skips the sharding-drift audit)")
+    ap.add_argument("--json", dest="json_out", default=None,
+                    help="also dump the full report to this path")
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.models.api import cache_layout, param_specs
+
+    cfg = get_config(args.config)
+    if args.reduced:
+        cfg = cfg.reduced()
+
+    par = None
+    if args.dp * args.tp > 1:
+        from repro.launch.mesh import make_serving_mesh
+        from repro.parallel.sharding import make_parallelism
+
+        mesh = make_serving_mesh(args.dp, args.tp)
+        par = make_parallelism(mesh)
+        print(f"mesh: dp={mesh.shape['data']} tp={mesh.shape['model']} "
+              f"({mesh.size} device(s))")
+
+    model = build_model(cfg)
+    params_avals = param_specs(cfg)
+    native = cache_layout(model)
+    layouts = [args.layout] if args.layout != "both" else (
+        ["dense", "paged"] if native == "paged" else ["dense"])
+    if "paged" in layouts and native != "paged":
+        print(f"config {cfg.name}: cache layout {native!r} — "
+              "skipping paged roots")
+        layouts = [x for x in layouts if x != "paged"]
+
+    report: Dict = {"config": cfg.name, "layouts": {}, "ok": True}
+    for layout in layouts:
+        rows = audit_layout(
+            model, params_avals, layout, par,
+            spec=not args.no_spec, compile=not args.no_compile,
+            max_batch=args.max_batch, max_len=args.max_len,
+            kv_quant=args.kv_quant, spec_k=args.spec_k,
+        )
+        report["layouts"][layout] = rows
+        print(f"\n== {cfg.name} [{layout}] "
+              f"{'(meshless)' if par is None else ''}")
+        for r in rows:
+            print(f"  {_flag(r['ok'])} {r['root']:<22} "
+                  f"d2h={r['transfers']['d2h_outputs']} "
+                  f"alias={r['donation']['actual']}/"
+                  f"{r['donation']['expected']} "
+                  f"shard={'skip' if r['sharding']['skipped'] else r['sharding']['checked_leaves']} "
+                  f"dtype={'ok' if r['dtypes']['ok'] else 'FAIL'}")
+            for sec in ("transfers", "donation", "sharding", "dtypes"):
+                for msg in (r[sec].get("problems", [])
+                            + r[sec].get("missing", [])
+                            + r[sec].get("mismatches", [])
+                            + r[sec].get("f64_ops", [])
+                            + r[sec].get("large_upcasts", [])):
+                    print(f"       {sec}: {msg}")
+        report["ok"] &= all(r["ok"] for r in rows)
+
+    # ---- Pallas VMEM lint (layout-independent; geometry from cfg)
+    lints = serving_kernel_lints(cfg, max_batch=args.max_batch,
+                                 max_len=args.max_len,
+                                 kv_quant=args.kv_quant)
+    print("\n== pallas vmem lint")
+    report["pallas"] = []
+    for lint in lints:
+        print(f"  {_flag(lint.ok)} {lint.kernel:<18} "
+              f"{lint.vmem_bytes / 2**20:6.2f} MiB "
+              f"/ {lint.vmem_limit / 2**20:.1f} MiB budget"
+              + (f"  ({len(lint.misaligned)} unaligned tiles)"
+                 if lint.misaligned else ""))
+        report["pallas"].append({
+            "kernel": lint.kernel, "ok": lint.ok,
+            "vmem_bytes": lint.vmem_bytes,
+            "misaligned": lint.misaligned,
+        })
+        report["ok"] &= lint.ok
+
+    # ---- allocator x ring interleavings (model-level, config-independent)
+    inter = summarize(check_interleavings())
+    print(f"\n== interleave check: {_flag(inter['ok'])} "
+          f"{inter['states_explored']} states, "
+          f"{inter['schedules_explored']} schedules")
+    for v in inter["violations"]:
+        print(f"       {v}")
+    report["interleave"] = inter
+    report["ok"] &= inter["ok"]
+
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(report, f, indent=2, default=str)
+        print(f"\nreport -> {args.json_out}")
+
+    print(f"\n{'ALL CONTRACTS HOLD' if report['ok'] else 'CONTRACT VIOLATIONS'}")
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

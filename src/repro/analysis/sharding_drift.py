@@ -1,0 +1,91 @@
+"""Sharding-drift audit: compiled in/out shardings vs ServingShardings pins.
+
+The engine pins explicit NamedShardings on every root for two load-bearing
+reasons: donated buffers only alias when the donated input's sharding
+equals its output's, and an unpinned output lets GSPMD pick a layout the
+NEXT step's input doesn't expect — a silent reshard (or recompile) per
+step.  The pins are trusted at jit time; this audit closes the loop by
+reading the COMPILED executable's in/out shardings back and comparing them
+leaf-for-leaf (``Sharding.is_equivalent_to``, so NamedSharding vs
+GSPMDSharding representations of the same placement agree).
+
+Meshless roots have nothing to pin — reported as skipped, ok."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List
+
+import jax
+
+
+@dataclasses.dataclass
+class ShardingAudit:
+    root: str
+    checked_leaves: int
+    mismatches: List[str]
+    skipped: bool
+    ok: bool
+
+
+def _expected_leaves(entry: Any, n_actual: int, where: str):
+    """An expected-sharding entry is either one Sharding broadcast over the
+    arg's leaves or a tree matching it leaf-for-leaf."""
+    leaves = jax.tree.leaves(
+        entry, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding))
+    if len(leaves) == 1 and n_actual > 1:
+        return leaves * n_actual
+    if len(leaves) != n_actual:
+        raise ValueError(
+            f"{where}: expected-sharding tree has {len(leaves)} leaves "
+            f"for {n_actual} actual leaves"
+        )
+    return leaves
+
+
+def _compare(exp_entry, act_entry, aval_entry, where: str,
+             mismatches: List[str]) -> int:
+    avals = jax.tree.leaves(aval_entry)
+    if not avals:
+        return 0  # e.g. a None block_tables arg on the dense layout
+    # Leaves the executable pruned (donated-but-unused, or params a root
+    # never reads — a draft prefill skips the unembed) appear as None in
+    # the compiled sharding tree; keep them as placeholders so positions
+    # still line up with the aval leaves, then skip them.
+    act = jax.tree.flatten(act_entry, is_leaf=lambda x: x is None)[0]
+    if len(act) != len(avals):
+        mismatches.append(
+            f"{where}: compiled sharding tree has {len(act)} leaves for "
+            f"{len(avals)} input leaves")
+        return len(avals)
+    exp = _expected_leaves(exp_entry, len(avals), where)
+    n = 0
+    for i, (e, a, av) in enumerate(zip(exp, act, avals)):
+        if a is None:
+            continue  # pruned from the executable: nothing to drift
+        n += 1
+        ndim = len(av.shape)
+        if not e.is_equivalent_to(a, ndim):
+            mismatches.append(
+                f"{where}[leaf {i}]: pinned {e!r} but compiled to {a!r}"
+            )
+    return n
+
+
+def audit_sharding(art) -> ShardingAudit:
+    if art.expected_shardings is None or art.compiled is None:
+        return ShardingAudit(root=art.name, checked_leaves=0,
+                             mismatches=[], skipped=True, ok=True)
+    in_exp, out_exp = art.expected_shardings
+    act_in, act_kw = art.compiled.input_shardings
+    mismatches: List[str] = []
+    checked = 0
+    for i, (e, a, av) in enumerate(zip(in_exp, act_in, art.args)):
+        checked += _compare(e, a, av, f"{art.name}:in arg{i}", mismatches)
+    act_out = art.compiled.output_shardings
+    outs = list(art.out_avals)
+    for i, (e, a, av) in enumerate(zip(out_exp, act_out, outs)):
+        checked += _compare(e, a, av, f"{art.name}:out {i}", mismatches)
+    return ShardingAudit(root=art.name, checked_leaves=checked,
+                         mismatches=mismatches, skipped=False,
+                         ok=not mismatches)

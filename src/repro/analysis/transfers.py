@@ -1,0 +1,81 @@
+"""Transfer audit: device<->host traffic per serving root, statically.
+
+Two halves:
+
+  * The lowered stablehlo must contain NO host-communication ops at all —
+    no infeed/outfeed, no send/recv, no host callbacks.  Any of these
+    inside a decode root would serialize the step pipeline on the host.
+  * The only D2H a root may cost is the engine reading back the declared
+    ``d2h`` output indices after the call — "steady" roots (the pipelined
+    decode loop) must declare EXACTLY one (the sampled-token vector /
+    packed spec commit matrix), "draft" roots none, "admission" roots at
+    most one (the first-token vector).
+
+The per-step D2H payload bytes are reported so the one-transfer contract
+is also a SMALL-transfer contract (a (B,) token vector, not a logits
+matrix)."""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import List, Tuple
+
+import jax
+import numpy as np
+
+# stablehlo host-communication ops + host callbacks via custom_call.
+_HOST_COMM_RE = re.compile(
+    r"\b(?:stablehlo\.)?(outfeed|infeed|send|recv)\b")
+_CALLBACK_RE = re.compile(
+    r'call_target_name\s*=\s*"[^"]*(?:callback|host)[^"]*"')
+
+
+def _aval_bytes(aval) -> int:
+    return int(np.prod(aval.shape, dtype=np.int64)
+               * np.dtype(aval.dtype).itemsize)
+
+
+@dataclasses.dataclass
+class TransferAudit:
+    root: str
+    kind: str
+    host_comm_ops: List[str]
+    d2h_outputs: Tuple[int, ...]
+    d2h_bytes: int
+    ok: bool
+    notes: List[str]
+
+
+def audit_transfers(art) -> TransferAudit:
+    text = art.lowered.as_text()
+    comm = [m.group(1) for m in _HOST_COMM_RE.finditer(text)]
+    comm += [m.group(0) for m in _CALLBACK_RE.finditer(text)]
+    notes: List[str] = []
+
+    outs = list(art.out_avals)
+    d2h = art.spec.d2h
+    d2h_bytes = sum(
+        sum(_aval_bytes(leaf) for leaf in jax.tree.leaves(outs[i]))
+        for i in d2h
+    )
+    kind = art.spec.kind
+    ok = not comm
+    if comm:
+        notes.append(f"host communication ops in lowering: {sorted(set(comm))}")
+    if kind == "steady" and len(d2h) != 1:
+        ok = False
+        notes.append(
+            f"steady root declares {len(d2h)} D2H outputs; the pipelined "
+            "decode loop contract is exactly one per step"
+        )
+    if kind == "draft" and d2h:
+        ok = False
+        notes.append("draft root declares a D2H output; drafts feed the "
+                     "verify root on device")
+    if kind == "admission" and len(d2h) > 1:
+        ok = False
+        notes.append(f"admission root declares {len(d2h)} D2H outputs")
+    return TransferAudit(root=art.name, kind=kind, host_comm_ops=comm,
+                         d2h_outputs=d2h, d2h_bytes=d2h_bytes, ok=ok,
+                         notes=notes)

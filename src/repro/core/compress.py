@@ -17,7 +17,7 @@ import numpy as np
 
 from .lowrank import factors_to_params
 from .nsvd import nested_compress
-from .plan import CompressionConfig, CompressionPlan, TargetSpec, build_plan
+from .plan import CompressionConfig, CompressionPlan, build_plan
 
 logger = logging.getLogger(__name__)
 

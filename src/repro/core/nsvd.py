@@ -18,7 +18,6 @@ import numpy as np
 
 from .asvd import LowRankFactors, asvd_compress, plain_svd_compress
 from .nid import id_compress
-from .svd import best_svd
 from .whitening import make_whitener
 
 Array = np.ndarray

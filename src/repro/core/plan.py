@@ -11,11 +11,11 @@ CompressionConfig into concrete per-matrix ranks.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Mapping, Optional, Sequence, Tuple
+from typing import Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .ratio import MatrixSpec, achieved_ratio, importance_ranks, rank_for_ratio, uniform_ranks
+from .ratio import MatrixSpec, achieved_ratio, importance_ranks, uniform_ranks
 
 
 @dataclasses.dataclass(frozen=True)

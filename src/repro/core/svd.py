@@ -9,7 +9,7 @@ float64 tolerances.  The *runtime* factors are cast back to the model dtype.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import numpy as np
 

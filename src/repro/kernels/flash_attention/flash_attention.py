@@ -127,3 +127,28 @@ def flash_attention(
     out = out.reshape(b * hkv, nq, g, bq, hd).transpose(0, 2, 1, 3, 4)
     out = out.reshape(b, hkv, g, s, hd).transpose(0, 3, 1, 2, 4)
     return out.reshape(b, s, hq, hd)
+
+
+def vmem_tiles(seq: int, num_q_heads: int, num_kv_heads: int,
+               head_dim: int, *, block_q: int = 256, block_k: int = 256,
+               dtype="float32") -> list:
+    """Static per-grid-step VMEM tile inventory (see paged_attention
+    .vmem_tiles for the convention) — mirrors ``flash_attention``'s
+    BlockSpecs/scratch above; consumed by repro.analysis.pallas_lint."""
+    g = max(1, num_q_heads // max(1, num_kv_heads))
+    bq = min(block_q, seq)
+    bk = min(block_k, seq)
+    return [
+        {"name": "q", "shape": (1, 1, g * bq, head_dim), "dtype": dtype,
+         "buffers": 2},
+        {"name": "k", "shape": (1, bk, head_dim), "dtype": dtype,
+         "buffers": 2},
+        {"name": "v", "shape": (1, bk, head_dim), "dtype": dtype,
+         "buffers": 2},
+        {"name": "out", "shape": (1, 1, g * bq, head_dim), "dtype": dtype,
+         "buffers": 2},
+        {"name": "acc", "shape": (g * bq, head_dim), "dtype": "float32",
+         "buffers": 1},
+        {"name": "m_l", "shape": (2, g * bq, 1), "dtype": "float32",
+         "buffers": 1},
+    ]

@@ -62,3 +62,18 @@ def gram_accumulate(
         out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
         interpret=interpret,
     )(x2d, x2d)
+
+
+def vmem_tiles(n: int, rows: int, *, block_n: int = 256,
+               block_t: int = 512, dtype="float32") -> list:
+    """Static per-grid-step VMEM tile inventory (see paged_attention
+    .vmem_tiles for the convention) — mirrors ``gram_accumulate``'s
+    BlockSpecs above; consumed by repro.analysis.pallas_lint."""
+    bn = min(block_n, n)
+    bt = min(block_t, rows)
+    return [
+        {"name": "x_i", "shape": (bt, bn), "dtype": dtype, "buffers": 2},
+        {"name": "x_j", "shape": (bt, bn), "dtype": dtype, "buffers": 2},
+        {"name": "gram", "shape": (bn, bn), "dtype": "float32",
+         "buffers": 2},
+    ]

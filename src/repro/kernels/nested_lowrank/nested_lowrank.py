@@ -100,3 +100,47 @@ def nested_lowrank_matmul(
         interpret=interpret,
     )(x2d, u, v, u2, v2)
     return y.reshape(*orig_shape[:-1], n)
+
+
+def vmem_tiles(m: int, k_in: int, n: int, k1: int, k2: int, *,
+               block_n: int = 256, dtype="float32") -> list:
+    """Static per-grid-step VMEM tile inventory (see paged_attention
+    .vmem_tiles for the convention) — mirrors ``nested_lowrank_matmul``'s
+    BlockSpecs/scratch above; consumed by repro.analysis.pallas_lint."""
+    bn = min(block_n, n)
+    # x/u/u2 have CONSTANT index maps (resident across the grid, fetched
+    # once); only the column-streamed v/v2/y tiles pay the x2 pipeline
+    # double-buffer.
+    return [
+        {"name": "x", "shape": (m, k_in), "dtype": dtype, "buffers": 1},
+        {"name": "u", "shape": (k_in, k1), "dtype": dtype, "buffers": 1},
+        {"name": "v", "shape": (k1, bn), "dtype": dtype, "buffers": 2},
+        {"name": "u2", "shape": (k_in, k2), "dtype": dtype, "buffers": 1},
+        {"name": "v2", "shape": (k2, bn), "dtype": dtype, "buffers": 2},
+        {"name": "y", "shape": (m, bn), "dtype": dtype, "buffers": 2},
+        {"name": "t1", "shape": (m, k1), "dtype": "float32", "buffers": 1},
+        {"name": "t2", "shape": (m, k2), "dtype": "float32", "buffers": 1},
+    ]
+
+
+VMEM_LIMIT_BYTES = int(16 * 2**20 * 0.9)  # per-core VMEM less compiler slack
+
+
+def kernel_vmem_bytes(m: int, k_in: int, n: int, k1: int, k2: int, *,
+                      block_n: int = 256, dtype="bfloat16") -> int:
+    """Padded VMEM bytes one grid step needs — the dispatch gate in ops.py
+    compares this against ``VMEM_LIMIT_BYTES`` (resident u/u2 factors grow
+    with rank, so large-rank decompositions must stay on the XLA path)."""
+    import numpy as np
+
+    total = 0
+    for t in vmem_tiles(m, k_in, n, k1, k2, block_n=block_n, dtype=dtype):
+        item = np.dtype(str(t["dtype"])).itemsize
+        sub = {8: 8, 4: 8, 2: 16, 1: 32}[item]
+        shape = tuple(t["shape"])
+        if len(shape) == 1:
+            shape = (1,) + shape
+        pad = shape[:-2] + (-(-shape[-2] // sub) * sub,
+                            -(-shape[-1] // 128) * 128)
+        total += int(np.prod(pad, dtype=np.int64)) * item * t["buffers"]
+    return total

@@ -5,7 +5,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .nested_lowrank import nested_lowrank_matmul as _kernel_call
+from .nested_lowrank import (
+    VMEM_LIMIT_BYTES,
+    kernel_vmem_bytes,
+    nested_lowrank_matmul as _kernel_call,
+)
 from .ref import nested_lowrank_matmul_ref
 
 
@@ -37,9 +41,19 @@ def nested_lowrank_matmul(
         rows = 1
         for s in x.shape[:-1]:
             rows *= s
+        # Row gate AND a VMEM gate: the resident u/u2 tiles scale with the
+        # decomposition rank, so a mildly-compressed wide layer (rank of
+        # order d_model/2) overflows VMEM even at decode row counts —
+        # those shapes stay on the XLA matmul path.
         use_kernel = (
             interpret
-            or (jax.default_backend() == "tpu" and rows <= MAX_KERNEL_ROWS)
+            or (jax.default_backend() == "tpu"
+                and rows <= MAX_KERNEL_ROWS
+                and kernel_vmem_bytes(
+                    rows, x.shape[-1], v.shape[-1], u.shape[-1],
+                    u2.shape[-1],
+                    block_n=min(block_n, v.shape[-1]),
+                    dtype=str(x.dtype)) <= VMEM_LIMIT_BYTES)
         )
     if not use_kernel:
         return nested_lowrank_matmul_ref(x, u, v, u2, v2)

@@ -1,6 +1,5 @@
 """Pure-jnp oracle for the nested low-rank matmul."""
 
-import jax
 import jax.numpy as jnp
 
 

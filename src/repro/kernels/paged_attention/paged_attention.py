@@ -247,3 +247,45 @@ def paged_attention(
         interpret=interpret,
     )(*operands)
     return out[:b].reshape(b, hq, hd)
+
+
+def vmem_tiles(batch: int, num_q_heads: int, num_kv_heads: int,
+               head_dim: int, block_size: int, *, dtype="float32",
+               kv_dtype=None, quant: bool = False,
+               rows_per_pack: int | None = None) -> list:
+    """Static per-grid-step VMEM tile inventory for the packed decode
+    kernel — one dict per resident buffer, mirroring the BlockSpecs /
+    scratch_shapes in ``paged_attention`` above (keep in lockstep).
+
+    ``buffers`` counts Pallas's automatic double-buffering of streamed
+    BlockSpec operands (x2); the page rings carry their 2 DMA slots in
+    their own leading dim, so they count once.  Consumed by
+    repro.analysis.pallas_lint."""
+    g = max(1, num_q_heads // max(1, num_kv_heads))
+    hkv = max(1, num_kv_heads)
+    r = (default_rows_per_pack(batch, g) if rows_per_pack is None
+         else max(1, rows_per_pack))
+    kv = kv_dtype or ("int8" if quant else dtype)
+    tiles = [
+        {"name": "q", "shape": (r, hkv, g, head_dim), "dtype": dtype,
+         "buffers": 2},
+        {"name": "out", "shape": (r, hkv, g, head_dim), "dtype": dtype,
+         "buffers": 2},
+        {"name": "k_page_ring", "shape": (2, r, block_size, hkv, head_dim),
+         "dtype": kv, "buffers": 1},
+        {"name": "v_page_ring", "shape": (2, r, block_size, hkv, head_dim),
+         "dtype": kv, "buffers": 1},
+        # fp32 softmax accumulators carried across the page loop.
+        {"name": "acc", "shape": (hkv, r * g, head_dim), "dtype": "float32",
+         "buffers": 1},
+        {"name": "m_l", "shape": (2, hkv, r * g, 1), "dtype": "float32",
+         "buffers": 1},
+    ]
+    if quant:
+        tiles += [
+            {"name": "k_scale_ring", "shape": (2, r, block_size, hkv),
+             "dtype": "float32", "buffers": 1},
+            {"name": "v_scale_ring", "shape": (2, r, block_size, hkv),
+             "dtype": "float32", "buffers": 1},
+        ]
+    return tiles

@@ -117,3 +117,23 @@ def rwkv6_chunked(
         scratch_shapes=[pltpu.VMEM((kdim, kdim), jnp.float32)],
         interpret=interpret,
     )(r, k, v, w, u3)
+
+
+def vmem_tiles(t_len: int, k_dim: int, *, chunk: int = 16,
+               dtype="float32") -> list:
+    """Static per-grid-step VMEM tile inventory (see paged_attention
+    .vmem_tiles for the convention) — mirrors ``rwkv6_chunked``'s
+    BlockSpecs/scratch above; consumed by repro.analysis.pallas_lint."""
+    l = min(chunk, t_len)
+    tiles = [
+        {"name": nm, "shape": (1, l, k_dim), "dtype": dtype, "buffers": 2}
+        for nm in ("r", "k", "v", "w")
+    ]
+    tiles += [
+        {"name": "u", "shape": (1, 1, k_dim), "dtype": dtype, "buffers": 2},
+        {"name": "out", "shape": (1, l, k_dim), "dtype": dtype,
+         "buffers": 2},
+        {"name": "state", "shape": (k_dim, k_dim), "dtype": "float32",
+         "buffers": 1},
+    ]
+    return tiles

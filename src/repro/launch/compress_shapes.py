@@ -9,11 +9,9 @@ production sharding of {"u","v","u2","v2"} leaves.
 
 from __future__ import annotations
 
-import copy
 from typing import Any, Dict, Mapping
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.nsvd import split_rank
 from repro.core.plan import CompressionConfig, build_plan

@@ -29,7 +29,6 @@ import time
 from typing import Any, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import SHAPE_CASES, applicable_shapes, get_config
 from repro.configs.registry import ASSIGNED

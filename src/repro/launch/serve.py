@@ -76,6 +76,16 @@ def main():
                          "or the mesh falls back to (1,1) with a warning; "
                          "use XLA_FLAGS=--xla_force_host_platform_device_"
                          "count=N to emulate on CPU")
+    ap.add_argument("--audit", action="store_true",
+                    help="preflight the static contract auditor "
+                         "(repro.analysis) over this run's serving roots "
+                         "before serving; refuses to start on a violation")
+    ap.add_argument("--transfer-guard", action="store_true",
+                    help="run the steady-state decode loop under "
+                         "jax.transfer_guard('disallow'): any implicit "
+                         "host<->device transfer raises instead of "
+                         "silently stalling the step pipeline (also via "
+                         "REPRO_SERVING_TRANSFER_GUARD=1)")
     args = ap.parse_args()
 
     if args.arch.startswith("small-"):
@@ -129,6 +139,24 @@ def main():
         print(f"serving mesh: dp={mesh.shape['data']} "
               f"tp={mesh.shape['model']} ({mesh.size} device(s))")
 
+    if args.audit:
+        from repro.analysis.run import audit_layout
+        from repro.models.api import cache_layout, param_specs
+
+        native = cache_layout(model)
+        layout = {"auto": native, "on": "paged", "off": "dense"}[args.paged]
+        rows = audit_layout(model, param_specs(cfg), layout, parallelism,
+                            spec=spec_config is not None,
+                            max_batch=args.max_batch, max_len=args.max_len,
+                            spec_k=args.spec_k)
+        bad = [r["root"] for r in rows if not r["ok"]]
+        if bad:
+            raise SystemExit(
+                f"serving-root contract audit FAILED for {bad}; run "
+                "python -m repro.analysis.run for the full report")
+        print(f"audit: {len(rows)} {layout} roots clean "
+              "(transfers/donation/sharding/dtypes)")
+
     eng = ServingEngine(model, params, max_batch=args.max_batch,
                         max_len=args.max_len, seed=args.seed,
                         paged={"auto": None, "on": True, "off": False}[args.paged],
@@ -138,7 +166,8 @@ def main():
                         eos_id=args.eos,
                         spec_config=spec_config,
                         parallelism=parallelism,
-                        pipeline_depth=args.pipeline_depth)
+                        pipeline_depth=args.pipeline_depth,
+                        transfer_guard=args.transfer_guard or None)
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
         eng.submit(rng.integers(2, cfg.vocab_size // 2, size=8),

@@ -9,20 +9,18 @@ sharding trees returned by ``step_shardings`` plug straight into
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ModelConfig, ShapeCase
 from repro.models.api import Model
 from repro.models.losses import chunked_xent_from_hidden, next_token_xent
 from repro.optim import (
     AdamWConfig,
     AdamWState,
     apply_updates,
-    global_norm,
     init_state,
     state_pspecs,
 )
@@ -547,6 +545,266 @@ def make_dense_draft_prefill_step(model: Model, max_len: int,
         return set_cache_rows(cache, row_cache, slots), key_data
 
     return dense_draft_prefill_step
+
+
+# ----------------------------------------------------- serving root registry
+#
+# Machine-readable registry of every serving jit root: the engine builds its
+# jitted steps from these specs (builder + donate_argnums + sharding hook),
+# and the static auditor (repro.analysis) enumerates them mechanically —
+# lowering each root from abstract inputs and checking the transfer/donation/
+# sharding/dtype contracts without running a decode step.  Adding a serving
+# root means adding a RootSpec here; the auditor picks it up for free.
+
+@dataclasses.dataclass(frozen=True)
+class RootContext:
+    """Everything needed to (re)build a serving root's jit callable and its
+    abstract input pytrees: the model facade plus the engine geometry knobs.
+    ``num_blocks=None`` resolves exactly like PagedKVCache's default
+    (serving/kvcache.resolve_num_blocks), so audits trace the same pool the
+    engine would allocate."""
+
+    model: Model
+    max_batch: int = 8
+    max_len: int = 512
+    kv_quant: bool = False
+    prefill_chunk: int = 64
+    block_size: int = 16
+    num_blocks: Optional[int] = None
+    spec_k: int = 4
+    bucket: int = 16          # representative admission prompt bucket
+    bucketed: bool = True     # models.api.prefill_pad_safe(model)
+    dp_shards: int = 1
+
+    @property
+    def resolved_num_blocks(self) -> int:
+        from repro.serving.kvcache import resolve_num_blocks
+
+        return resolve_num_blocks(self.max_batch, self.max_len,
+                                  self.block_size, self.num_blocks,
+                                  self.dp_shards)
+
+    @property
+    def max_blocks_per_row(self) -> int:
+        return -(-self.max_len // self.block_size)
+
+    # Aval pytrees (no allocation): the cache trees every root threads.
+
+    def cache_avals(self):
+        return jax.eval_shape(
+            lambda: self.model.init_cache(self.max_batch, self.max_len,
+                                          kv_quant=self.kv_quant)
+        )
+
+    def pool_avals(self):
+        return jax.eval_shape(
+            lambda: self.model.init_paged_cache(self.resolved_num_blocks,
+                                                self.block_size,
+                                                kv_quant=self.kv_quant)
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class RootSpec:
+    """One serving jit root.
+
+    ``kind`` pins the root's D2H contract class: "steady" roots run in the
+    pipelined decode loop and must emit EXACTLY one device->host transfer
+    (the ``d2h`` output indices), "admission" roots may sync one first-token
+    vector when rows finish their prompt, "draft" roots emit nothing.
+
+    ``build(ctx)`` returns the pure step function; ``abstract_inputs(ctx,
+    params)`` its positional-argument aval pytrees (mirroring the engine's
+    dispatch call exactly); ``shardings(sh, ctx, draft_params=None)`` the
+    (in, out) NamedSharding pair from a ServingShardings bundle.  Spec-root
+    arg 0 is the DRAFT params tree (``needs_draft``) — the auditor traces
+    those with the target's avals (same architecture, any well-formed params
+    pytree lowers identically)."""
+
+    name: str
+    layout: str  # "dense" | "paged"
+    kind: str    # "steady" | "admission" | "draft"
+    donate: Tuple[int, ...]
+    d2h: Tuple[int, ...]
+    build: Callable[[RootContext], Callable]
+    abstract_inputs: Callable[[RootContext, Any], Tuple[Any, ...]]
+    shardings: Callable
+    needs_draft: bool = False
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _row_avals(b: int):
+    """(i32, bool, f32, keys) per-slot aval helpers."""
+    return (_sds((b,), jnp.int32), _sds((b,), jnp.bool_),
+            _sds((b,), jnp.float32), _sds((b, 2), jnp.uint32))
+
+
+def _decode_inputs(ctx: RootContext, params):
+    b = ctx.max_batch
+    i32, boo, f32, keys = _row_avals(b)
+    return (params, ctx.cache_avals(), i32, i32, i32, keys, boo, boo, f32,
+            i32)
+
+
+def _paged_decode_inputs(ctx: RootContext, params):
+    b = ctx.max_batch
+    i32, boo, f32, keys = _row_avals(b)
+    bt = _sds((b, ctx.max_blocks_per_row), jnp.int32)
+    return (params, ctx.pool_avals(), bt, i32, i32, i32, keys, boo, boo,
+            f32, i32)
+
+
+def _paged_prefill_chunk_inputs(ctx: RootContext, params):
+    b = ctx.max_batch
+    i32, boo, f32, keys = _row_avals(b)
+    bt = _sds((b, ctx.max_blocks_per_row), jnp.int32)
+    toks = _sds((b, ctx.prefill_chunk), jnp.int32)
+    return (params, ctx.pool_avals(), bt, toks, i32, i32, i32, i32, keys,
+            i32, i32, i32, keys, f32, boo)
+
+
+def _prefill_admit_inputs(ctx: RootContext, params):
+    b = ctx.max_batch
+    i32, boo, f32, keys = _row_avals(b)
+    rows = b if ctx.bucketed else 1
+    r_i32, _, r_f32, r_keys = _row_avals(rows)
+    toks = _sds((rows, min(ctx.bucket, ctx.max_len)), jnp.int32)
+    return (params, ctx.cache_avals(), toks, r_i32, r_i32, r_i32, r_keys,
+            i32, i32, i32, keys, r_f32, boo)
+
+
+def _spec_cache_avals(ctx: RootContext, layout: str):
+    if layout == "paged":
+        bt = _sds((ctx.max_batch, ctx.max_blocks_per_row), jnp.int32)
+        return ctx.pool_avals(), bt
+    return ctx.cache_avals(), None
+
+
+def _spec_draft_inputs(layout):
+    def inputs(ctx: RootContext, params):
+        b = ctx.max_batch
+        i32, boo, f32, keys = _row_avals(b)
+        cache, bt = _spec_cache_avals(ctx, layout)
+        return (params, cache, bt, i32, i32, keys, boo, boo, f32)
+
+    return inputs
+
+
+def _spec_verify_inputs(layout):
+    def inputs(ctx: RootContext, params):
+        b, k = ctx.max_batch, ctx.spec_k
+        i32, boo, f32, keys = _row_avals(b)
+        cache, bt = _spec_cache_avals(ctx, layout)
+        props = _sds((b, k), jnp.int32)
+        qs = _sds((b, k, ctx.model.cfg.vocab_size), jnp.float32)
+        return (params, cache, bt, i32, props, qs, i32, i32, keys, boo, boo,
+                f32, i32, i32)
+
+    return inputs
+
+
+def _draft_prefill_paged_inputs(ctx: RootContext, params):
+    b = ctx.max_batch
+    i32, _, _, keys = _row_avals(b)
+    bt = _sds((b, ctx.max_blocks_per_row), jnp.int32)
+    toks = _sds((b, ctx.prefill_chunk), jnp.int32)
+    return (params, ctx.pool_avals(), bt, toks, i32, i32, keys, keys)
+
+
+def _draft_prefill_dense_inputs(ctx: RootContext, params):
+    b = ctx.max_batch
+    _, _, _, keys = _row_avals(b)
+    rows = b if ctx.bucketed else 1
+    r_i32, _, _, r_keys = _row_avals(rows)
+    toks = _sds((rows, min(ctx.bucket, ctx.max_len)), jnp.int32)
+    return (params, ctx.cache_avals(), toks, r_i32, keys, r_keys)
+
+
+def serving_root_registry(layout: str,
+                          spec: bool = False) -> Tuple[RootSpec, ...]:
+    """Every serving jit root for one cache layout (plus the speculative
+    roots when ``spec``) — the engine's and the static auditor's single
+    source of truth for builder/donation/sharding/D2H wiring."""
+    if layout not in ("dense", "paged"):
+        raise ValueError(f"unknown cache layout {layout!r}")
+    paged = layout == "paged"
+    roots = []
+    if paged:
+        roots.append(RootSpec(
+            "paged_decode", "paged", "steady",
+            PAGED_DECODE_DONATE, (0,),
+            lambda ctx: make_paged_decode_step(ctx.model, ctx.max_len),
+            _paged_decode_inputs,
+            lambda sh, ctx, draft_params=None: sh.paged_decode(),
+        ))
+        roots.append(RootSpec(
+            "paged_prefill_chunk", "paged", "admission",
+            PAGED_PREFILL_DONATE, (0,),
+            lambda ctx: make_paged_prefill_chunk_step(ctx.model),
+            _paged_prefill_chunk_inputs,
+            lambda sh, ctx, draft_params=None: sh.paged_prefill_chunk(),
+        ))
+    else:
+        roots.append(RootSpec(
+            "decode", "dense", "steady",
+            DECODE_DONATE, (0,),
+            lambda ctx: make_decode_sample_step(ctx.model, ctx.max_len),
+            _decode_inputs,
+            lambda sh, ctx, draft_params=None: sh.decode(),
+        ))
+        roots.append(RootSpec(
+            "prefill_admit", "dense", "admission",
+            PREFILL_ADMIT_DONATE, (0,),
+            lambda ctx: make_prefill_admit_step(ctx.model, ctx.max_len,
+                                                kv_quant=ctx.kv_quant),
+            _prefill_admit_inputs,
+            lambda sh, ctx, draft_params=None: sh.prefill_admit(
+                bucketed=ctx.bucketed),
+        ))
+    if spec:
+        roots.append(RootSpec(
+            "spec_draft", layout, "draft",
+            SPEC_DRAFT_DONATE, (),
+            lambda ctx: make_spec_draft_step(ctx.model, ctx.spec_k),
+            _spec_draft_inputs(layout),
+            lambda sh, ctx, draft_params=None: sh.spec_draft(
+                draft_params if draft_params is not None else sh.params,
+                paged),
+            needs_draft=True,
+        ))
+        roots.append(RootSpec(
+            "spec_verify", layout, "steady",
+            SPEC_VERIFY_DONATE, (0,),
+            lambda ctx: make_spec_verify_step(ctx.model, ctx.spec_k,
+                                              ctx.max_len),
+            _spec_verify_inputs(layout),
+            lambda sh, ctx, draft_params=None: sh.spec_verify(paged),
+        ))
+        if paged:
+            roots.append(RootSpec(
+                "draft_prefill", "paged", "draft",
+                PAGED_DRAFT_PREFILL_DONATE, (),
+                lambda ctx: make_paged_draft_prefill_step(ctx.model),
+                _draft_prefill_paged_inputs,
+                lambda sh, ctx, draft_params=None: sh.draft_prefill_paged(
+                    draft_params if draft_params is not None else sh.params),
+                needs_draft=True,
+            ))
+        else:
+            roots.append(RootSpec(
+                "draft_prefill", "dense", "draft",
+                DENSE_DRAFT_PREFILL_DONATE, (),
+                lambda ctx: make_dense_draft_prefill_step(
+                    ctx.model, ctx.max_len, kv_quant=ctx.kv_quant),
+                _draft_prefill_dense_inputs,
+                lambda sh, ctx, draft_params=None: sh.draft_prefill_dense(
+                    draft_params if draft_params is not None else sh.params),
+                needs_draft=True,
+            ))
+    return tuple(roots)
 
 
 # -------------------------------------------------------------- shardings

@@ -17,7 +17,6 @@ import time
 from typing import Optional
 
 import jax
-import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_config

@@ -7,7 +7,7 @@ compressed (factored) parameters are drop-in.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Mapping, Optional
+from typing import Any, Dict, Mapping
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,6 @@ from repro.configs.base import ModelConfig
 from repro.parallel.sharding import NONE_PARALLEL, Parallelism
 
 from .blocks import (
-    StackGroup,
     group_apply,
     group_cache_init,
     group_init,

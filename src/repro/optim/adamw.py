@@ -101,7 +101,6 @@ def zero_pspec(param_spec: P, shape: Tuple[int, ...], dp_axes: Tuple[str, ...]) 
     """Shard an optimizer-state leaf over the DP axes on its largest dim not
     already claimed by TP.  Falls back to the param spec when no dim is free
     or divisible."""
-    import numpy as np
 
     entries = list(param_spec) + [None] * (len(shape) - len(param_spec))
 

@@ -14,7 +14,7 @@ payload int8-width on the wire for ring all-reduce segments.
 
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

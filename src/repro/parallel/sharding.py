@@ -36,7 +36,6 @@ import re
 from typing import Any, Dict, Mapping, Optional, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 

@@ -16,7 +16,6 @@ from __future__ import annotations
 import dataclasses
 import logging
 import time
-from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

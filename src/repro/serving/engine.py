@@ -92,6 +92,7 @@ size, slot/pool sharding falls back to replicated (weights stay TP).
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import itertools
 import os
@@ -104,24 +105,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.launch.steps import (
-    DECODE_DONATE,
-    DENSE_DRAFT_PREFILL_DONATE,
-    PAGED_DECODE_DONATE,
-    PAGED_DRAFT_PREFILL_DONATE,
-    PAGED_PREFILL_DONATE,
-    PREFILL_ADMIT_DONATE,
-    SPEC_DRAFT_DONATE,
-    SPEC_VERIFY_DONATE,
+    RootContext,
     ServingShardings,
-    make_decode_sample_step,
-    make_dense_draft_prefill_step,
-    make_paged_decode_step,
-    make_paged_draft_prefill_step,
-    make_paged_prefill_chunk_step,
-    make_prefill_admit_step,
-    make_spec_draft_step,
-    make_spec_verify_step,
     named,
+    serving_root_registry,
 )
 from repro.models.api import (
     Model,
@@ -185,6 +172,7 @@ class _InFlight:
 
 
 _PIPELINE_DEPTH_ENV = "REPRO_SERVING_PIPELINE_DEPTH"
+_TRANSFER_GUARD_ENV = "REPRO_SERVING_TRANSFER_GUARD"
 
 
 class ServingEngine:
@@ -205,6 +193,7 @@ class ServingEngine:
         spec_config: Optional[SpecConfig] = None,
         parallelism: Optional[Parallelism] = None,
         pipeline_depth: Optional[int] = None,
+        transfer_guard: Optional[bool] = None,
     ):
         if pipeline_depth is None:
             pipeline_depth = int(os.environ.get(_PIPELINE_DEPTH_ENV, "2"))
@@ -213,6 +202,10 @@ class ServingEngine:
                 f"pipeline_depth must be >= 1, got {pipeline_depth}"
             )
         self.pipeline_depth = pipeline_depth
+        if transfer_guard is None:
+            transfer_guard = os.environ.get(
+                _TRANSFER_GUARD_ENV, "0").lower() not in ("", "0", "false")
+        self.transfer_guard = bool(transfer_guard)
         par = (parallelism
                if parallelism is not None and parallelism.active else None)
         self.par = par
@@ -318,14 +311,6 @@ class ServingEngine:
                 # Cached block-table mirror must be born with the roots'
                 # expected (B, M) sharding (see PagedKVCache.table_device).
                 self.kv.table_sharding = self._sh.mat
-            self._decode = self._jit(
-                make_paged_decode_step(model, max_len), PAGED_DECODE_DONATE,
-                self._sh.paged_decode() if self._sh else None,
-            )
-            self._chunk_step = self._jit(
-                make_paged_prefill_chunk_step(model), PAGED_PREFILL_DONATE,
-                self._sh.paged_prefill_chunk() if self._sh else None,
-            )
         else:
             self.cache = model.init_cache(max_batch, max_len,
                                           kv_quant=kv_quant)
@@ -343,17 +328,29 @@ class ServingEngine:
                 self.params = params = jax.device_put(params,
                                                       self._sh.params)
                 self.cache = jax.device_put(self.cache, cache_sh)
-            self._decode = self._jit(
-                make_decode_sample_step(model, max_len), DECODE_DONATE,
-                self._sh.decode() if self._sh else None,
-            )
-            self._prefill = self._jit(
-                make_prefill_admit_step(model, max_len, kv_quant=kv_quant),
-                PREFILL_ADMIT_DONATE,
-                (self._sh.prefill_admit(bucketed=self._bucketed)
-                 if self._sh else None),
-            )
             self._buckets = self._make_buckets(bucket_min, max_len)
+
+        # All jit roots come from the serving root registry (the same specs
+        # the static auditor traces): builder, donate_argnums and sharding
+        # hook live in ONE place, so an audited contract is by construction
+        # the contract the engine runs.
+        self._ctx = RootContext(
+            model=model, max_batch=max_batch, max_len=max_len,
+            kv_quant=kv_quant, prefill_chunk=prefill_chunk,
+            block_size=block_size,
+            num_blocks=self.kv.num_blocks if self.paged else None,
+            spec_k=spec_config.k if spec_config is not None else 4,
+            bucketed=self._bucketed, dp_shards=self.dp_shards,
+        )
+        self._roots = {r.name: r for r in serving_root_registry(
+            "paged" if self.paged else "dense",
+            spec=spec_config is not None)}
+        if self.paged:
+            self._decode = self._root("paged_decode")
+            self._chunk_step = self._root("paged_prefill_chunk")
+        else:
+            self._decode = self._root("decode")
+            self._prefill = self._root("prefill_admit")
 
         if self._sh is not None:
             # Per-slot device state lives sharded from birth so the roots'
@@ -385,31 +382,9 @@ class ServingEngine:
             )
             if self.paged and self._sh is not None:
                 self.draft.kv.table_sharding = self._sh.mat
-            self._spec_draft = self._jit(
-                make_spec_draft_step(model, self.spec.k), SPEC_DRAFT_DONATE,
-                (self._sh.spec_draft(dparams_sh, self.paged)
-                 if self._sh else None),
-            )
-            self._spec_verify = self._jit(
-                make_spec_verify_step(model, self.spec.k, max_len),
-                SPEC_VERIFY_DONATE,
-                self._sh.spec_verify(self.paged) if self._sh else None,
-            )
-            if self.paged:
-                self._draft_prefill = self._jit(
-                    make_paged_draft_prefill_step(model),
-                    PAGED_DRAFT_PREFILL_DONATE,
-                    (self._sh.draft_prefill_paged(dparams_sh)
-                     if self._sh else None),
-                )
-            else:
-                self._draft_prefill = self._jit(
-                    make_dense_draft_prefill_step(model, max_len,
-                                                  kv_quant=kv_quant),
-                    DENSE_DRAFT_PREFILL_DONATE,
-                    (self._sh.draft_prefill_dense(dparams_sh)
-                     if self._sh else None),
-                )
+            self._spec_draft = self._root("spec_draft", dparams_sh)
+            self._spec_verify = self._root("spec_verify", dparams_sh)
+            self._draft_prefill = self._root("draft_prefill", dparams_sh)
             # Per-row speculation windows (all k unless dynamic_k shrinks).
             self._k_row = np.full((max_batch,), self.spec.k, np.int32)
             self.spec_proposed = 0
@@ -437,6 +412,26 @@ class ServingEngine:
         in_sh, out_sh = shardings
         return jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                        donate_argnums=donate)
+
+    def _root(self, name: str, draft_params_sh=None):
+        """Build one jitted serving root from its registry spec."""
+        spec = self._roots[name]
+        sh = (spec.shardings(self._sh, self._ctx, draft_params_sh)
+              if self._sh is not None else None)
+        return self._jit(spec.build(self._ctx), spec.donate, sh)
+
+    def _guard(self):
+        """Steady-state transfer guard (opt-in, ``transfer_guard=`` or
+        REPRO_SERVING_TRANSFER_GUARD=1): the decode/spec dispatch path runs
+        under jax.transfer_guard("disallow"), so any IMPLICIT device<->host
+        transfer — a stray numpy input, a silent sync — raises instead of
+        silently serializing the pipeline.  The engine's own sanctioned
+        movements (cached host-input rebuilds, block-table mirror uploads)
+        are explicit jax.device_put calls, and the per-step token readback
+        is an explicit jax.device_get outside the guarded region."""
+        if self.transfer_guard:
+            return jax.transfer_guard("disallow")
+        return contextlib.nullcontext()
 
     # --------------------------------------------------------------- API
 
@@ -842,14 +837,13 @@ class ServingEngine:
         """Device-resident (host_keep, temps, eos[, k_row]) for dispatch,
         rebuilt only when admission/finish bookkeeping dirtied them."""
         if self._host_dirty:
-            put = ((lambda x, s: jax.device_put(x, s))
-                   if self._sh is not None else (lambda x, s: jnp.asarray(x)))
+            # Explicit device_put (guard-sanctioned; sharded when meshed).
             row = self._sh.row if self._sh is not None else None
-            self._keep_dev = put(self.active, row)
-            self._temps_dev = put(self.temps, row)
-            self._eos_dev = put(self._eos, row)
+            self._keep_dev = jax.device_put(self.active, row)
+            self._temps_dev = jax.device_put(self.temps, row)
+            self._eos_dev = jax.device_put(self._eos, row)
             if self.spec is not None:
-                self._k_row_dev = put(self._k_row, row)
+                self._k_row_dev = jax.device_put(self._k_row, row)
             self._host_dirty = False
         return self._keep_dev, self._temps_dev, self._eos_dev
 
@@ -857,21 +851,22 @@ class ServingEngine:
         """Launch one decode root and ring its token future (no sync)."""
         t0 = time.perf_counter()
         mask = self.active.copy()
-        host_keep, temps, eos = self._host_inputs()
-        if self.paged:
-            (sampled, self.kv.pools, self.cache_len, self.budget_dev,
-             self.key_data, self._active_dev) = self._decode(
-                self.params, self.kv.pools, self.kv.table_device(),
-                self.last_token, self.cache_len, self.budget_dev,
-                self.key_data, self._active_dev, host_keep, temps, eos,
-            )
-        else:
-            (sampled, self.cache, self.cache_len, self.budget_dev,
-             self.key_data, self._active_dev) = self._decode(
-                self.params, self.cache, self.last_token, self.cache_len,
-                self.budget_dev, self.key_data, self._active_dev,
-                host_keep, temps, eos,
-            )
+        with self._guard():
+            host_keep, temps, eos = self._host_inputs()
+            if self.paged:
+                (sampled, self.kv.pools, self.cache_len, self.budget_dev,
+                 self.key_data, self._active_dev) = self._decode(
+                    self.params, self.kv.pools, self.kv.table_device(),
+                    self.last_token, self.cache_len, self.budget_dev,
+                    self.key_data, self._active_dev, host_keep, temps, eos,
+                )
+            else:
+                (sampled, self.cache, self.cache_len, self.budget_dev,
+                 self.key_data, self._active_dev) = self._decode(
+                    self.params, self.cache, self.last_token, self.cache_len,
+                    self.budget_dev, self.key_data, self._active_dev,
+                    host_keep, temps, eos,
+                )
         self.last_token = sampled
         self._ring.append(_InFlight(sampled, mask,
                                     time.perf_counter() - t0))
@@ -881,23 +876,26 @@ class ServingEngine:
         root) and ring its packed committed-token future (no sync)."""
         t0 = time.perf_counter()
         mask = self.active.copy()
-        host_keep, temps, eos = self._host_inputs()
-        k_row = self._k_row_dev
+        with self._guard():
+            host_keep, temps, eos = self._host_inputs()
+            k_row = self._k_row_dev
 
-        (proposals, q_probs, self.draft.pools,
-         self.draft.key_data) = self._spec_draft(
-            self.draft.params, self.draft.pools, self.draft.table_device(),
-            self.last_token, self.cache_len, self.draft.key_data,
-            self._active_dev, host_keep, temps,
-        )
-        target_cache = self.kv.pools if self.paged else self.cache
-        bt = self.kv.table_device() if self.paged else None
-        (pack, target_cache, self.cache_len, self.last_token,
-         self.budget_dev, self.key_data, self._active_dev) = self._spec_verify(
-            self.params, target_cache, bt, self.last_token, proposals,
-            q_probs, self.cache_len, self.budget_dev, self.key_data,
-            self._active_dev, host_keep, temps, eos, k_row,
-        )
+            (proposals, q_probs, self.draft.pools,
+             self.draft.key_data) = self._spec_draft(
+                self.draft.params, self.draft.pools,
+                self.draft.table_device(),
+                self.last_token, self.cache_len, self.draft.key_data,
+                self._active_dev, host_keep, temps,
+            )
+            target_cache = self.kv.pools if self.paged else self.cache
+            bt = self.kv.table_device() if self.paged else None
+            (pack, target_cache, self.cache_len, self.last_token,
+             self.budget_dev, self.key_data,
+             self._active_dev) = self._spec_verify(
+                self.params, target_cache, bt, self.last_token, proposals,
+                q_probs, self.cache_len, self.budget_dev, self.key_data,
+                self._active_dev, host_keep, temps, eos, k_row,
+            )
         if self.paged:
             self.kv.pools = target_cache
         else:

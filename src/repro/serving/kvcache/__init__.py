@@ -8,6 +8,6 @@ authoritative per shard (its own free list, backpressure, and peak).
 See serving/engine.py for how the pieces are driven."""
 
 from .allocator import BlockAllocator
-from .paged import PagedKVCache
+from .paged import PagedKVCache, resolve_num_blocks
 
-__all__ = ["BlockAllocator", "PagedKVCache"]
+__all__ = ["BlockAllocator", "PagedKVCache", "resolve_num_blocks"]

@@ -40,19 +40,33 @@ def _ceil_div(a: int, b: int) -> int:
     return -(-a // b)
 
 
+def resolve_num_blocks(max_batch: int, max_len: int, block_size: int,
+                       num_blocks: Optional[int] = None,
+                       dp_shards: int = 1) -> int:
+    """The pool size PagedKVCache actually allocates for these knobs.
+
+    Shared with launch/steps.RootContext so the static auditor traces jit
+    roots against EXACTLY the pool geometry the engine will build — the
+    default (dense-slab capacity parity) and the DP rounding live here and
+    nowhere else."""
+    if num_blocks is None:
+        # Capacity parity with the dense slab by default; size it down
+        # (expected live tokens / block_size) to realize the HBM win.
+        num_blocks = _ceil_div(max_batch * max_len, block_size)
+    if dp_shards > 1:
+        # The block dim shards over DP: round the pool up to a multiple
+        # of the shard count so every device holds the same slice.
+        num_blocks = _ceil_div(num_blocks, dp_shards) * dp_shards
+    return num_blocks
+
+
 class PagedKVCache:
     def __init__(self, model, max_batch: int, max_len: int,
                  block_size: int = 16, num_blocks: int | None = None,
                  kv_quant: bool = False, dp_shards: int = 1,
                  par=None):
-        if num_blocks is None:
-            # Capacity parity with the dense slab by default; size it down
-            # (expected live tokens / block_size) to realize the HBM win.
-            num_blocks = _ceil_div(max_batch * max_len, block_size)
-        if dp_shards > 1:
-            # The block dim shards over DP: round the pool up to a multiple
-            # of the shard count so every device holds the same slice.
-            num_blocks = _ceil_div(num_blocks, dp_shards) * dp_shards
+        num_blocks = resolve_num_blocks(max_batch, max_len, block_size,
+                                        num_blocks, dp_shards)
         self.block_size = block_size
         self.num_blocks = num_blocks
         self.dp_shards = dp_shards
@@ -191,11 +205,11 @@ class PagedKVCache:
 
     def table_device(self) -> jax.Array:
         if self._table_dev is None:
-            if self.table_sharding is not None:
-                self._table_dev = jax.device_put(self.table_np,
-                                                 self.table_sharding)
-            else:
-                self._table_dev = jnp.asarray(self.table_np)
+            # Explicit device_put (not jnp.asarray) so rebuilding the
+            # mirror inside a jax.transfer_guard("disallow") region is a
+            # sanctioned transfer — the guard exists to catch IMPLICIT ones.
+            self._table_dev = jax.device_put(self.table_np,
+                                             self.table_sharding)
         return self._table_dev
 
     # ----------------------------------------------------------- defrag

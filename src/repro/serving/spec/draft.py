@@ -30,7 +30,6 @@ from __future__ import annotations
 from typing import Any, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.serving.kvcache import PagedKVCache
 

@@ -1,0 +1,249 @@
+"""Static contract auditor tests.
+
+Two halves, mirroring the auditor's job description:
+
+  * the REAL serving roots (both cache layouts, meshless and on a (2, 2)
+    DP x TP mesh) pass every audit — transfer contract, donation aliasing,
+    sharding pins, dtype lint, Pallas VMEM lint, allocator interleavings;
+  * each audit class CATCHES a deliberately broken root: a dropped
+    donation, an extra D2H output, a drifted sharding pin, a large fp32
+    upcast, an oversized VMEM tile, and each injected allocator bug.
+
+The (2, 2) tests need ``XLA_FLAGS=--xla_force_host_platform_device_count=4``
+(the static-analysis CI job sets it); elsewhere they skip."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import (
+    audit_donation,
+    audit_dtypes,
+    audit_roots,
+    audit_sharding,
+    audit_transfers,
+    check_interleavings,
+    kernel_lint,
+)
+from repro.analysis.interleave import BUGS
+from repro.analysis.pallas_lint import serving_kernel_lints
+from repro.analysis.roots import make_root_context, trace_root
+from repro.configs.paper_models import small_lm
+from repro.launch.mesh import make_serving_mesh
+from repro.launch.steps import RootSpec
+from repro.models import build_model
+from repro.models.api import param_specs
+from repro.parallel.sharding import make_parallelism
+
+need4 = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=4",
+)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = small_lm(name="tiny-audit", vocab_size=256, num_layers=2,
+                   d_model=64, d_ff=96, num_heads=4)
+    model = build_model(cfg)
+    return cfg, model, param_specs(cfg)
+
+
+def _audit_all(model, avals, layout, par=None):
+    arts = audit_roots(model, avals, par=par, layout=layout, spec=True,
+                       max_batch=4, max_len=64, bucket=8)
+    assert arts, "registry returned no roots"
+    for art in arts:
+        tr = audit_transfers(art)
+        assert tr.ok, f"{art.name}: {tr.notes}"
+        dn = audit_donation(art)
+        assert dn.ok, f"{art.name}: {dn.missing or dn.notes}"
+        sh = audit_sharding(art)
+        assert sh.ok, f"{art.name}: {sh.mismatches}"
+        dt = audit_dtypes(art)
+        assert dt.ok, f"{art.name}: {dt.f64_ops + dt.large_upcasts}"
+        if par is not None:
+            assert not sh.skipped and sh.checked_leaves > 0
+    return arts
+
+
+class TestRealRootsPass:
+    def test_dense_meshless(self, tiny):
+        _, model, avals = tiny
+        _audit_all(model, avals, "dense")
+
+    def test_paged_meshless(self, tiny):
+        _, model, avals = tiny
+        arts = _audit_all(model, avals, "paged")
+        names = {a.name for a in arts}
+        assert {"paged_decode", "paged_prefill_chunk", "spec_draft",
+                "spec_verify", "draft_prefill"} <= names
+
+    @need4
+    @pytest.mark.parametrize("layout", ["dense", "paged"])
+    def test_meshed_2x2(self, tiny, layout):
+        _, model, avals = tiny
+        par = make_parallelism(make_serving_mesh(2, 2))
+        _audit_all(model, avals, layout, par=par)
+
+    def test_steady_roots_emit_one_small_d2h(self, tiny):
+        _, model, avals = tiny
+        for art in audit_roots(model, avals, layout="paged", spec=True,
+                               max_batch=4, max_len=64, bucket=8):
+            tr = audit_transfers(art)
+            if art.spec.kind == "steady":
+                assert len(tr.d2h_outputs) == 1
+                # tokens-per-row scale, not a logits matrix
+                assert tr.d2h_bytes <= 4 * 4 * (art.ctx.spec_k + 3)
+
+
+# --------------------------------------------------- seeded-violation half
+
+def _toy_spec(build, abstract_inputs, *, donate=(), d2h=(0,),
+              kind="steady", name="toy"):
+    return RootSpec(name=name, layout="dense", kind=kind, donate=donate,
+                    d2h=d2h, build=build, abstract_inputs=abstract_inputs,
+                    shardings=lambda sh, ctx, dp=None: (None, None))
+
+
+def _toy_ctx(model):
+    return make_root_context(model, max_batch=4, max_len=64)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+class TestSeededViolations:
+    def test_dropped_donation_caught(self, tiny):
+        _, model, _ = tiny
+        # state (arg 1) is donated but RESHAPED before output: no output
+        # buffer is shape-compatible, so the alias silently drops.
+        spec = _toy_spec(
+            lambda ctx: lambda x, state: (x * 2, state.reshape(8, 8).T),
+            lambda ctx, avals: (_sds((4,), jnp.float32),
+                                _sds((64,), jnp.float32)),
+            donate=(1,), name="dropped_donation")
+        art = trace_root(spec, _toy_ctx(model), None)
+        dn = audit_donation(art)
+        assert not dn.ok
+        assert dn.actual_aliases < dn.expected_aliases
+
+    def test_good_donation_passes(self, tiny):
+        _, model, _ = tiny
+        spec = _toy_spec(
+            lambda ctx: lambda x, state: (x * 2, state + 1),
+            lambda ctx, avals: (_sds((4,), jnp.float32),
+                                _sds((64,), jnp.float32)),
+            donate=(1,), name="good_donation")
+        assert audit_donation(trace_root(spec, _toy_ctx(model), None)).ok
+
+    def test_extra_d2h_caught(self, tiny):
+        _, model, _ = tiny
+        # A steady root declaring two host readbacks per step.
+        spec = _toy_spec(
+            lambda ctx: lambda x: (x * 2, x * 3),
+            lambda ctx, avals: (_sds((4,), jnp.float32),),
+            d2h=(0, 1), kind="steady", name="extra_d2h")
+        tr = audit_transfers(trace_root(spec, _toy_ctx(model), None))
+        assert not tr.ok and "exactly one" in " ".join(tr.notes)
+
+    def test_draft_d2h_caught(self, tiny):
+        _, model, _ = tiny
+        spec = _toy_spec(
+            lambda ctx: lambda x: (x * 2,),
+            lambda ctx, avals: (_sds((4,), jnp.float32),),
+            d2h=(0,), kind="draft", name="draft_d2h")
+        assert not audit_transfers(trace_root(spec, _toy_ctx(model), None)).ok
+
+    @need4
+    def test_sharding_drift_caught(self, tiny):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        _, model, _ = tiny
+        par = make_parallelism(make_serving_mesh(2, 2))
+        mesh = par.mesh
+        rep = NamedSharding(mesh, P())
+        row = NamedSharding(mesh, P("data"))
+        # Compile with replicated outputs but EXPECT row-sharded: the audit
+        # must flag the drift rather than trust the pin.
+        spec = dataclasses.replace(
+            _toy_spec(
+                lambda ctx: lambda x: (x * 2,),
+                lambda ctx, avals: (_sds((4, 8), jnp.float32),),
+                d2h=(0,), name="drifted"),
+            shardings=lambda sh, ctx, dp=None: ((rep,), (rep,)))
+        art = trace_root(spec, _toy_ctx(model), None,
+                         sh=object())  # sh only gates the hook call
+        # Overwrite the recorded expectation with the WRONG pin.
+        art = dataclasses.replace(art, expected_shardings=((row,), (row,)))
+        sh_audit = audit_sharding(art)
+        assert not sh_audit.ok and sh_audit.mismatches
+
+    def test_fp32_leak_caught(self, tiny):
+        _, model, _ = tiny
+        spec = _toy_spec(
+            lambda ctx: lambda w: (jnp.sum(w.astype(jnp.float32)),),
+            lambda ctx, avals: (_sds((512, 512), jnp.bfloat16),),
+            d2h=(0,), name="fp32_leak")
+        art = trace_root(spec, _toy_ctx(model), None)
+        dt = audit_dtypes(art, upcast_threshold=1024)
+        assert not dt.ok and dt.large_upcasts
+
+    def test_small_upcast_passes(self, tiny):
+        _, model, _ = tiny
+        spec = _toy_spec(
+            lambda ctx: lambda w: (jnp.sum(w.astype(jnp.float32)),),
+            lambda ctx, avals: (_sds((4, 8), jnp.bfloat16),),
+            d2h=(0,), name="softmax_upcast")
+        art = trace_root(spec, _toy_ctx(model), None)
+        assert audit_dtypes(art, upcast_threshold=1024).ok
+
+    def test_oversized_vmem_tile_caught(self):
+        lint = kernel_lint("huge", [
+            {"name": "monster", "shape": (4096, 4096), "dtype": "float32",
+             "buffers": 2},
+        ])
+        assert not lint.ok and lint.vmem_bytes > lint.vmem_limit
+
+    def test_unaligned_tile_flagged(self):
+        lint = kernel_lint("ragged", [
+            {"name": "odd", "shape": (7, 130), "dtype": "bfloat16",
+             "buffers": 1},
+        ])
+        assert lint.ok  # fits...
+        assert lint.misaligned  # ...but pays padding
+
+
+class TestPallasLint:
+    def test_serving_kernels_fit(self, tiny):
+        cfg, _, _ = tiny
+        lints = serving_kernel_lints(cfg, max_batch=4, max_len=64)
+        assert {l.kernel for l in lints} >= {"nested_lowrank", "gram"}
+        for lint in lints:
+            assert lint.ok, f"{lint.kernel}: {lint.vmem_bytes} bytes"
+
+    def test_dispatch_gate_matches_lint(self):
+        # The ops.py VMEM gate and the lint arithmetic share one estimator:
+        # a rank that the gate rejects must also be over the lint budget.
+        from repro.kernels.nested_lowrank.nested_lowrank import (
+            VMEM_LIMIT_BYTES,
+            kernel_vmem_bytes,
+        )
+        small = kernel_vmem_bytes(8, 512, 1024, 64, 32)
+        huge = kernel_vmem_bytes(8, 4096, 11008, 2400, 1200)
+        assert small <= VMEM_LIMIT_BYTES < huge
+
+
+class TestInterleave:
+    def test_clean_allocator_passes(self):
+        report = check_interleavings()
+        assert report.ok
+        assert report.states_explored > 100
+
+    @pytest.mark.parametrize("bug", BUGS)
+    def test_injected_bugs_caught(self, bug):
+        report = check_interleavings(bug=bug, max_ops=6)
+        assert not report.ok, f"checker missed injected bug {bug!r}"

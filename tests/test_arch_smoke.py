@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ASSIGNED, SHAPE_CASES, get_config
+from repro.configs import ASSIGNED, get_config
 from repro.models import build_model
 from repro.models.losses import next_token_xent
 

@@ -13,7 +13,6 @@ from repro.core import (
     asvd_compress,
     compress,
     gram_loss,
-    make_whitener,
     nested_compress,
     split_rank,
     truncated_svd,

@@ -8,7 +8,7 @@ import pytest
 
 from repro.calib.runner import calibration_batches, collect_grams
 from repro.configs import get_config
-from repro.configs.paper_models import LLAMA_7B, small_lm
+from repro.configs.paper_models import small_lm
 from repro.core import CompressionConfig, build_plan, compress_params
 from repro.eval.perplexity import eval_batches, evaluate_ppl
 from repro.models import build_model

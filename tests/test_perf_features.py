@@ -54,7 +54,6 @@ class TestMambaChunkLocal:
     def test_chunk_sizes_agree(self):
         """The chunked scan must be chunk-size invariant (the §Perf change
         moved tensor construction inside the body without changing math)."""
-        from repro.configs.base import MambaConfig, ModelConfig
         from repro.models.mamba import mamba_apply, mamba_init
 
         cfg = get_config("jamba-v0.1-52b").reduced()

@@ -343,19 +343,26 @@ class TestPipelineConfig:
 
 
 class TestBenchSchemaSmoke:
-    def test_repo_bench_file_migrates_to_schema4(self):
+    def test_repo_bench_file_migrates_to_schema5(self):
         """The checked-in BENCH_serving.json must parse and migrate: every
-        row of every entry carries pipeline_depth + the step breakdown
-        after _migrate_entry."""
+        row of every entry carries pipeline_depth + the step breakdown, and
+        every entry an audit stamp (null for pre-auditor runs) after
+        _migrate_entry."""
         st = pytest.importorskip("benchmarks.serving_throughput")
         path = os.path.join(os.path.dirname(__file__), "..",
                             "BENCH_serving.json")
         with open(path) as f:
             doc = json.load(f)
-        assert doc["schema"] in (1, 2, 3, 4)
+        assert doc["schema"] in (1, 2, 3, 4, 5)
         history = doc["history"] if "history" in doc else [doc]
         for entry in map(st._migrate_entry, history):
             assert entry["mesh"]["devices"] >= 1
+            assert "audit" in entry
+            audit = entry["audit"]
+            if audit is not None:
+                assert audit["d2h_per_step"] == 1
+                assert audit["donation_ok"] is True
+                assert audit["vmem_bytes_per_kernel"]
             for row in entry["rows"]:
                 assert row["pipeline_depth"] >= 1
                 assert "step_device_wait_ms" in row
@@ -372,7 +379,7 @@ class TestBenchSchemaSmoke:
                               "max_abs_err_vs_oracle": 1e-6},
         }
         doc = st.append_history(entry, path=str(tmp_path / "b.json"))
-        assert doc["schema"] == 4
+        assert doc["schema"] == 5
         fresh = doc["history"][-1]
         assert fresh["rows"][0]["pipeline_depth"] == 2
         assert fresh["packed_kernel"]["rows_per_pack"] == 2

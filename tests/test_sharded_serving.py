@@ -442,7 +442,7 @@ class TestBenchSchemaMigration:
              "rows": []},
             path=str(path),
         )
-        assert doc["schema"] == st.BENCH_SCHEMA == 4
+        assert doc["schema"] == st.BENCH_SCHEMA == 5
         migrated, fresh = doc["history"]
         assert migrated["mesh"] == {"dp": 1, "tp": 1, "devices": 1}
         assert migrated["rows"][0]["per_device_cache_bytes"] == 100
@@ -450,4 +450,6 @@ class TestBenchSchemaMigration:
         # with no device-wait/host breakdown recorded.
         assert migrated["rows"][0]["pipeline_depth"] == 1
         assert migrated["rows"][0]["step_device_wait_ms"] is None
+        # Schema 4 -> 5: pre-auditor entries carry a null contract stamp.
+        assert migrated["audit"] is None
         assert fresh["mesh"]["dp"] == 2
