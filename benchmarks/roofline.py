@@ -191,27 +191,29 @@ def roofline_row(arch: str, shape: str, mesh: str = "16x16") -> Optional[Dict]:
 
 # ------------------------------------------- serving-kernel static stamp
 
-def serving_kernel_rows(arch: str, *, max_batch: int = 64,
-                        max_len: int = 4096, block_size: int = 16,
-                        kv_quant: bool = False) -> List[Dict]:
+def serving_kernel_rows_for_cfg(cfg, *, arch: Optional[str] = None,
+                                max_batch: int = 64, max_len: int = 4096,
+                                block_size: int = 16,
+                                kv_quant: bool = False) -> List[Dict]:
     """Static per-kernel roofline stamp for the serving path: VMEM bytes
     per grid step (from repro.analysis.pallas_lint, the same inventory the
     contract auditor checks) plus the packed paged-attention cost model at
     the full context length — FLOPs, HBM bytes, arithmetic intensity, and
     the MXU junk-work factor of row packing.  No dry-run artifact needed:
-    everything is a closed-form function of the config geometry."""
+    everything is a closed-form function of the config geometry, so any
+    cfg works — registry archs AND the bench's ad-hoc small LMs (this is
+    the core ``benchmarks/serving_throughput.py`` stamps per run)."""
     from repro.analysis.pallas_lint import (
         paged_attention_cost,
         serving_kernel_lints,
     )
 
-    cfg = get_config(arch)
     rows: List[Dict] = []
     for lint in serving_kernel_lints(cfg, max_batch=max_batch,
                                      max_len=max_len, block_size=block_size,
                                      kv_quant=kv_quant):
         row = {
-            "arch": arch,
+            "arch": arch or getattr(cfg, "name", "custom"),
             "kernel": lint.kernel,
             "vmem_bytes": lint.vmem_bytes,
             "vmem_frac": lint.vmem_bytes / lint.vmem_limit,
@@ -235,6 +237,15 @@ def serving_kernel_rows(arch: str, *, max_batch: int = 64,
             )
         rows.append(row)
     return rows
+
+
+def serving_kernel_rows(arch: str, *, max_batch: int = 64,
+                        max_len: int = 4096, block_size: int = 16,
+                        kv_quant: bool = False) -> List[Dict]:
+    """Registry-arch wrapper over :func:`serving_kernel_rows_for_cfg`."""
+    return serving_kernel_rows_for_cfg(
+        get_config(arch), arch=arch, max_batch=max_batch, max_len=max_len,
+        block_size=block_size, kv_quant=kv_quant)
 
 
 def build_table(mesh: str = "16x16") -> List[Dict]:

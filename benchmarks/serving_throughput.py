@@ -46,7 +46,7 @@ import numpy as np
 from .common import get_grams, save_table, train_small_lm
 
 BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json")
-BENCH_SCHEMA = 5
+BENCH_SCHEMA = 6
 
 _UNSHARDED_MESH = {"dp": 1, "tp": 1, "devices": 1}
 
@@ -58,7 +58,12 @@ def _migrate_entry(entry: Dict) -> Dict:
     entries ran the serial dispatch->sync loop, i.e. pipeline_depth 1, with
     no device-wait/host breakdown recorded (stamped null).  Schema 4 -> 5:
     pre-auditor entries carry no static contract stamp (``audit: null``);
-    fresh entries record the auditor's verdict on the roots the run used."""
+    fresh entries record the auditor's verdict on the roots the run used.
+    Schema 5 -> 6: pre-observability entries carry no host-side telemetry
+    block (TTFT/TPOT percentiles, occupancy, spec win/loss per (k,
+    acceptance)) and no per-run serving-kernel roofline stamp — both
+    ``null``; fresh entries record them from the repro.obs layer and
+    ``benchmarks.roofline.serving_kernel_rows_for_cfg``."""
     if "mesh" not in entry:
         entry = dict(entry, mesh=dict(_UNSHARDED_MESH))
         entry["rows"] = [
@@ -73,6 +78,10 @@ def _migrate_entry(entry: Dict) -> Dict:
     ]
     if "audit" not in entry:
         entry = dict(entry, audit=None)
+    if "telemetry" not in entry:
+        entry = dict(entry, telemetry=None)
+    if "roofline" not in entry:
+        entry = dict(entry, roofline=None)
     return entry
 
 
@@ -128,16 +137,17 @@ def drive(model, params, prompts, label: str, max_batch: int, max_len: int,
           max_new: int, warmup: int = 1, paged: bool = False,
           num_blocks=None, block_size: int = 16,
           spec_config=None, parallelism=None,
-          pipeline_depth: int = 1) -> Dict[str, float]:
+          pipeline_depth: int = 1, telemetry=None) -> Dict[str, float]:
     from repro.serving.engine import ServingEngine
 
-    def make_engine():
+    def make_engine(tel=None):
         return ServingEngine(model, params, max_batch=max_batch,
                              max_len=max_len, paged=paged,
                              num_blocks=num_blocks, block_size=block_size,
                              spec_config=spec_config,
                              parallelism=parallelism,
-                             pipeline_depth=pipeline_depth)
+                             pipeline_depth=pipeline_depth,
+                             telemetry=tel)
 
     # Warmup pass triggers all jit compilations (prefill + decode) so the
     # timed pass measures steady-state serving.
@@ -147,7 +157,9 @@ def drive(model, params, prompts, label: str, max_batch: int, max_len: int,
             eng.submit(p, max_new_tokens=2)
         eng.run()
 
-    eng = make_engine()
+    # Telemetry (when requested) observes only the timed pass — warmup
+    # compilations would skew the TTFT/TPOT histograms by seconds.
+    eng = make_engine(telemetry)
     for p in prompts:
         eng.submit(p, max_new_tokens=max_new)
     t0 = time.perf_counter()
@@ -240,13 +252,22 @@ def run(model_name: str = "small-llama", requests: int = 24, max_new: int = 24,
     cparams = compress_params(params, plan, grams)
     nsvd = f"nsvd-{ratio:.0%}"
 
+    # Host-side telemetry rides the paged NSVD drive and the speculative
+    # drive — the two rows the schema-6 telemetry block (TTFT/TPOT
+    # percentiles, occupancy, spec win/loss per (k, acceptance)) reports.
+    from repro.obs import Telemetry
+
+    tel_paged = Telemetry()
+    tel_spec = Telemetry(spec_meta={"k": spec_k, "draft_ratio": draft_ratio})
+
     rows = []
     for label, p in (("dense", params), (nsvd, cparams)):
         rows.append(drive(model, p, prompts, label, max_batch, max_len,
                           max_new, paged=False, parallelism=parallelism))
         rows.append(drive(model, p, prompts, label, max_batch, max_len,
                           max_new, paged=True, num_blocks=num_blocks,
-                          block_size=block_size, parallelism=parallelism))
+                          block_size=block_size, parallelism=parallelism,
+                          telemetry=tel_paged if label == nsvd else None))
 
     # target vs target+spec: the NSVD target verifies proposals from its
     # own higher-ratio twin (same Grams, one extra training-free pass).
@@ -254,8 +275,9 @@ def run(model_name: str = "small-llama", requests: int = 24, max_new: int = 24,
     rows.append(drive(
         model, cparams, prompts, f"{nsvd}+spec", max_batch, max_len, max_new,
         paged=True, num_blocks=num_blocks, block_size=block_size,
-        spec_config=SpecConfig(draft_params=draft_params, k=spec_k),
-        parallelism=parallelism,
+        spec_config=SpecConfig(draft_params=draft_params, k=spec_k,
+                               draft_ratio=draft_ratio),
+        parallelism=parallelism, telemetry=tel_spec,
     ))
 
     # Pipelined vs depth-1 rows: same NSVD + paged workload with the
@@ -270,7 +292,8 @@ def run(model_name: str = "small-llama", requests: int = 24, max_new: int = 24,
     rows.append(drive(
         model, cparams, prompts, f"{nsvd}+spec+pipe2", max_batch, max_len,
         max_new, paged=True, num_blocks=num_blocks, block_size=block_size,
-        spec_config=SpecConfig(draft_params=draft_params, k=spec_k),
+        spec_config=SpecConfig(draft_params=draft_params, k=spec_k,
+                               draft_ratio=draft_ratio),
         parallelism=parallelism, pipeline_depth=2,
     ))
 
@@ -296,6 +319,8 @@ def run(model_name: str = "small-llama", requests: int = 24, max_new: int = 24,
         "rows": rows,
         "packed_kernel": _packed_kernel_stamp(model, block_size),
         "audit": _audit_stamp(model, max_batch, max_len, block_size),
+        "telemetry": _telemetry_block(tel_paged, tel_spec),
+        "roofline": _roofline_stamp(model, max_batch, max_len, block_size),
         "summary": {
             "per_device_cache_bytes_paged":
                 by[(nsvd, "paged")]["per_device_cache_bytes"],
@@ -330,6 +355,37 @@ def run(model_name: str = "small-llama", requests: int = 24, max_new: int = 24,
           f"-> BENCH_serving.json [{entry['git_sha']} "
           f"{entry['config_hash']}, {len(doc['history'])} run(s)]")
     return rows
+
+
+def _telemetry_block(tel_paged, tel_spec) -> Optional[Dict]:
+    """Schema-6 telemetry block: host-side latency/occupancy percentiles
+    from the paged NSVD drive plus the speculative drive's win/loss
+    histogram keyed by (k, acceptance) — the scheduler-facing signal the
+    dynamic-k controller (ROADMAP item 5) will consume."""
+    try:
+        block = tel_paged.bench_block()
+        block["spec"] = tel_spec.bench_block()["spec"]
+        return block
+    except Exception as e:  # telemetry must never sink a bench run
+        print(f"  telemetry block skipped: {e}")
+        return None
+
+
+def _roofline_stamp(model, max_batch: int, max_len: int,
+                    block_size: int) -> Optional[Dict]:
+    """Schema-6 serving-kernels roofline stamp: the static per-kernel
+    VMEM/cost table (``benchmarks.roofline.serving_kernel_rows_for_cfg``)
+    evaluated at THIS run's geometry, so every bench entry carries the
+    compute/memory-bound verdict next to its measured tok/s."""
+    try:
+        from .roofline import serving_kernel_rows_for_cfg
+
+        return {"serving_kernels": serving_kernel_rows_for_cfg(
+            model.cfg, arch=model.cfg.name, max_batch=max_batch,
+            max_len=max_len, block_size=block_size)}
+    except Exception as e:  # the stamp must never sink a bench run
+        print(f"  roofline stamp skipped: {e}")
+        return None
 
 
 def _audit_stamp(model, max_batch: int, max_len: int,

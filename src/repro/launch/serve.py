@@ -86,6 +86,26 @@ def main():
                          "host<->device transfer raises instead of "
                          "silently stalling the step pipeline (also via "
                          "REPRO_SERVING_TRANSFER_GUARD=1)")
+    obs_g = ap.add_argument_group(
+        "observability", "host-side telemetry (repro.obs): any flag here "
+        "enables the tracer + metrics registry; all are off by default "
+        "and the disabled path is a pinned no-op")
+    obs_g.add_argument("--metrics-port", type=int, default=None,
+                       help="serve Prometheus text at :PORT/metrics and a "
+                            "JSON snapshot at :PORT/metrics.json while "
+                            "running (0 picks a free port)")
+    obs_g.add_argument("--metrics-json", default=None, metavar="PATH",
+                       help="write a final JSON metrics snapshot here")
+    obs_g.add_argument("--trace-jsonl", default=None, metavar="PATH",
+                       help="export the event ring buffer as JSONL")
+    obs_g.add_argument("--trace-chrome", default=None, metavar="PATH",
+                       help="export the event ring buffer as a Chrome "
+                            "trace (load in chrome://tracing or Perfetto)")
+    obs_g.add_argument("--profile-dir", default=None, metavar="DIR",
+                       help="capture a jax.profiler trace of the first "
+                            "--profile-steps decode steps into DIR")
+    obs_g.add_argument("--profile-steps", type=int, default=8,
+                       help="steps to profile with --profile-dir")
     args = ap.parse_args()
 
     if args.arch.startswith("small-"):
@@ -124,7 +144,8 @@ def main():
         draft_params = build_draft_params(model, base_params, grams,
                                           args.spec_ratio)
         spec_config = SpecConfig(draft_params=draft_params, k=args.spec_k,
-                                 dynamic_k=args.spec_dynamic_k)
+                                 dynamic_k=args.spec_dynamic_k,
+                                 draft_ratio=args.spec_ratio)
         print(f"speculative decoding: nsvd-{args.spec_ratio:.0%} draft, "
               f"k={args.spec_k}"
               + (" (dynamic per-row)" if args.spec_dynamic_k else ""))
@@ -157,6 +178,21 @@ def main():
         print(f"audit: {len(rows)} {layout} roots clean "
               "(transfers/donation/sharding/dtypes)")
 
+    telemetry = None
+    metrics_server = None
+    obs_wanted = any(v is not None for v in (
+        args.metrics_port, args.metrics_json, args.trace_jsonl,
+        args.trace_chrome, args.profile_dir))
+    if obs_wanted:
+        from repro.obs import MetricsServer, Telemetry, write_metrics_json
+
+        telemetry = Telemetry(profile_dir=args.profile_dir,
+                              profile_steps=args.profile_steps)
+        if args.metrics_port is not None:
+            metrics_server = MetricsServer(telemetry.metrics,
+                                           port=args.metrics_port)
+            print(f"metrics: {metrics_server.url} (+ /metrics.json)")
+
     eng = ServingEngine(model, params, max_batch=args.max_batch,
                         max_len=args.max_len, seed=args.seed,
                         paged={"auto": None, "on": True, "off": False}[args.paged],
@@ -167,7 +203,8 @@ def main():
                         spec_config=spec_config,
                         parallelism=parallelism,
                         pipeline_depth=args.pipeline_depth,
-                        transfer_guard=args.transfer_guard or None)
+                        transfer_guard=args.transfer_guard or None,
+                        telemetry=telemetry)
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
         eng.submit(rng.integers(2, cfg.vocab_size // 2, size=8),
@@ -203,6 +240,31 @@ def main():
         print(f"spec[k={ss['k']}]: acceptance {ss['acceptance_rate']:.0%}, "
               f"{ss['committed_per_row_step']:.2f} committed tok/row-step, "
               f"draft cache {ss['draft_hbm_bytes']/1e6:.2f}MB")
+
+    if telemetry is not None:
+        if telemetry.profile is not None:
+            telemetry.profile.stop()
+        bb = telemetry.bench_block()
+        print(f"telemetry: ttft p50={bb['ttft_s']['p50']*1e3:.1f}ms "
+              f"p99={bb['ttft_s']['p99']*1e3:.1f}ms  "
+              f"tpot p50={bb['tpot_s']['p50']*1e3:.2f}ms  "
+              f"{len(telemetry.tracer)} events "
+              f"({telemetry.tracer.dropped} dropped)")
+        if args.metrics_json:
+            write_metrics_json(telemetry.metrics, args.metrics_json,
+                               extra={"engine": {"stats": s, "cache": cs,
+                                                 "spec": ss}})
+            print(f"metrics snapshot -> {args.metrics_json}")
+        if args.trace_jsonl:
+            telemetry.tracer.export_jsonl(args.trace_jsonl)
+            print(f"event trace (jsonl) -> {args.trace_jsonl}")
+        if args.trace_chrome:
+            telemetry.tracer.export_chrome(args.trace_chrome)
+            print(f"chrome trace -> {args.trace_chrome}")
+        if args.profile_dir:
+            print(f"jax.profiler trace -> {args.profile_dir}")
+        if metrics_server is not None:
+            metrics_server.close()
 
 
 if __name__ == "__main__":

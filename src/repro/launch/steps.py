@@ -17,6 +17,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models.api import Model
 from repro.models.losses import chunked_xent_from_hidden, next_token_xent
+from repro.obs.profiler import wrap_root
 from repro.optim import (
     AdamWConfig,
     AdamWState,
@@ -727,7 +728,13 @@ def serving_root_registry(layout: str,
                           spec: bool = False) -> Tuple[RootSpec, ...]:
     """Every serving jit root for one cache layout (plus the speculative
     roots when ``spec``) — the engine's and the static auditor's single
-    source of truth for builder/donation/sharding/D2H wiring."""
+    source of truth for builder/donation/sharding/D2H wiring.
+
+    Every build is wrapped in ``repro.obs.profiler.wrap_root``: a
+    ``jax.named_scope`` naming the root in profiler timelines / HLO dumps.
+    The scope is metadata-only (no ops, no transfers) and UNCONDITIONAL, so
+    engine and auditor always trace the same instrumented computation —
+    the contract audits run on exactly what serves."""
     if layout not in ("dense", "paged"):
         raise ValueError(f"unknown cache layout {layout!r}")
     paged = layout == "paged"
@@ -736,14 +743,18 @@ def serving_root_registry(layout: str,
         roots.append(RootSpec(
             "paged_decode", "paged", "steady",
             PAGED_DECODE_DONATE, (0,),
-            lambda ctx: make_paged_decode_step(ctx.model, ctx.max_len),
+            lambda ctx: wrap_root(
+                make_paged_decode_step(ctx.model, ctx.max_len),
+                "paged_decode"),
             _paged_decode_inputs,
             lambda sh, ctx, draft_params=None: sh.paged_decode(),
         ))
         roots.append(RootSpec(
             "paged_prefill_chunk", "paged", "admission",
             PAGED_PREFILL_DONATE, (0,),
-            lambda ctx: make_paged_prefill_chunk_step(ctx.model),
+            lambda ctx: wrap_root(
+                make_paged_prefill_chunk_step(ctx.model),
+                "paged_prefill_chunk"),
             _paged_prefill_chunk_inputs,
             lambda sh, ctx, draft_params=None: sh.paged_prefill_chunk(),
         ))
@@ -751,15 +762,18 @@ def serving_root_registry(layout: str,
         roots.append(RootSpec(
             "decode", "dense", "steady",
             DECODE_DONATE, (0,),
-            lambda ctx: make_decode_sample_step(ctx.model, ctx.max_len),
+            lambda ctx: wrap_root(
+                make_decode_sample_step(ctx.model, ctx.max_len), "decode"),
             _decode_inputs,
             lambda sh, ctx, draft_params=None: sh.decode(),
         ))
         roots.append(RootSpec(
             "prefill_admit", "dense", "admission",
             PREFILL_ADMIT_DONATE, (0,),
-            lambda ctx: make_prefill_admit_step(ctx.model, ctx.max_len,
-                                                kv_quant=ctx.kv_quant),
+            lambda ctx: wrap_root(
+                make_prefill_admit_step(ctx.model, ctx.max_len,
+                                        kv_quant=ctx.kv_quant),
+                "prefill_admit"),
             _prefill_admit_inputs,
             lambda sh, ctx, draft_params=None: sh.prefill_admit(
                 bucketed=ctx.bucketed),
@@ -768,7 +782,8 @@ def serving_root_registry(layout: str,
         roots.append(RootSpec(
             "spec_draft", layout, "draft",
             SPEC_DRAFT_DONATE, (),
-            lambda ctx: make_spec_draft_step(ctx.model, ctx.spec_k),
+            lambda ctx: wrap_root(
+                make_spec_draft_step(ctx.model, ctx.spec_k), "spec_draft"),
             _spec_draft_inputs(layout),
             lambda sh, ctx, draft_params=None: sh.spec_draft(
                 draft_params if draft_params is not None else sh.params,
@@ -778,8 +793,9 @@ def serving_root_registry(layout: str,
         roots.append(RootSpec(
             "spec_verify", layout, "steady",
             SPEC_VERIFY_DONATE, (0,),
-            lambda ctx: make_spec_verify_step(ctx.model, ctx.spec_k,
-                                              ctx.max_len),
+            lambda ctx: wrap_root(
+                make_spec_verify_step(ctx.model, ctx.spec_k, ctx.max_len),
+                "spec_verify"),
             _spec_verify_inputs(layout),
             lambda sh, ctx, draft_params=None: sh.spec_verify(paged),
         ))
@@ -787,7 +803,9 @@ def serving_root_registry(layout: str,
             roots.append(RootSpec(
                 "draft_prefill", "paged", "draft",
                 PAGED_DRAFT_PREFILL_DONATE, (),
-                lambda ctx: make_paged_draft_prefill_step(ctx.model),
+                lambda ctx: wrap_root(
+                    make_paged_draft_prefill_step(ctx.model),
+                    "draft_prefill"),
                 _draft_prefill_paged_inputs,
                 lambda sh, ctx, draft_params=None: sh.draft_prefill_paged(
                     draft_params if draft_params is not None else sh.params),
@@ -797,8 +815,10 @@ def serving_root_registry(layout: str,
             roots.append(RootSpec(
                 "draft_prefill", "dense", "draft",
                 DENSE_DRAFT_PREFILL_DONATE, (),
-                lambda ctx: make_dense_draft_prefill_step(
-                    ctx.model, ctx.max_len, kv_quant=ctx.kv_quant),
+                lambda ctx: wrap_root(
+                    make_dense_draft_prefill_step(
+                        ctx.model, ctx.max_len, kv_quant=ctx.kv_quant),
+                    "draft_prefill"),
                 _draft_prefill_dense_inputs,
                 lambda sh, ctx, draft_params=None: sh.draft_prefill_dense(
                     draft_params if draft_params is not None else sh.params),

@@ -117,6 +117,7 @@ from repro.models.api import (
     prefill_pad_safe,
     serving_cache_pspecs,
 )
+from repro.obs import NULL_TELEMETRY
 from repro.parallel.sharding import Parallelism
 from repro.serving.kvcache import PagedKVCache
 from repro.serving.spec import DraftState, SpecConfig
@@ -134,6 +135,11 @@ class Request:
     # Speculative-decoding accounting (spec_config engines only).
     spec_proposed: int = 0
     spec_accepted: int = 0
+    # Lifecycle timestamps (time.perf_counter; populated only when the
+    # engine runs with telemetry enabled — see repro.obs).
+    t_submit: float = 0.0
+    t_first: float = 0.0
+    t_last: float = 0.0
 
     @property
     def done(self) -> bool:
@@ -194,7 +200,20 @@ class ServingEngine:
         parallelism: Optional[Parallelism] = None,
         pipeline_depth: Optional[int] = None,
         transfer_guard: Optional[bool] = None,
+        telemetry=None,
     ):
+        # Observability (repro.obs.Telemetry, or the shared no-op).  All
+        # hooks consume host bookkeeping + the packed D2H word the step
+        # already transfers — never an extra device sync — and per-row
+        # work is gated on ``self.obs.enabled`` so the default path stays
+        # no-op (pinned by tests/test_observability.py).
+        self.obs = telemetry if telemetry is not None else NULL_TELEMETRY
+        self._obs_blocked: set = set()
+        if self.obs.enabled and spec_config is not None:
+            self.obs.spec_meta.setdefault("k", spec_config.k)
+            if spec_config.draft_ratio is not None:
+                self.obs.spec_meta.setdefault("draft_ratio",
+                                              spec_config.draft_ratio)
         if pipeline_depth is None:
             pipeline_depth = int(os.environ.get(_PIPELINE_DEPTH_ENV, "2"))
         if pipeline_depth < 1:
@@ -466,6 +485,9 @@ class ServingEngine:
                 )
         req = Request(next(self._uid), prompt, max_new_tokens, temperature,
                       eos_id if eos_id is not None else self.eos_id)
+        if self.obs.enabled:
+            req.t_submit = time.perf_counter()
+            self.obs.on_submit(req.uid, len(prompt), max_new_tokens)
         self.queue.append(req)
         return req.uid
 
@@ -524,11 +546,24 @@ class ServingEngine:
         )
         return finished
 
+    def _obs_finish(self, req: Request) -> None:
+        """Report one finished request (TTFT/TPOT from its timestamps)."""
+        n = len(req.generated)
+        ttft = req.t_first - req.t_submit if req.t_submit else 0.0
+        tpot = ((req.t_last - req.t_first) / (n - 1)
+                if n > 1 and req.t_last > req.t_first else 0.0)
+        self.obs.on_finish(req.uid, n, ttft, tpot)
+
     def _finish_or_activate(self, req: Request, slot: int, tok: int,
                             finished: List[Request]) -> None:
         """Shared post-prefill bookkeeping for a request's first token."""
         req.slot = slot
         req.generated.append(tok)
+        if self.obs.enabled:
+            req.t_first = req.t_last = time.perf_counter()
+            self.obs.on_first_token(req.uid, slot,
+                                    req.t_first - req.t_submit
+                                    if req.t_submit else 0.0)
         self.temps[slot] = req.temperature
         self._eos[slot] = -1 if req.eos_id is None else req.eos_id
         self._len_host[slot] = len(req.prompt)
@@ -539,6 +574,8 @@ class ServingEngine:
                 or tok == self._eos[slot]):
             finished.append(req)
             self._retire_slot(slot)
+            if self.obs.enabled:
+                self._obs_finish(req)
         else:
             self.slots[slot] = req
             self.active[slot] = True
@@ -622,9 +659,26 @@ class ServingEngine:
                 slot = cand
                 break
             if slot is None:
-                break  # every shard exhausted: FIFO backpressure
+                # Every shard exhausted: FIFO backpressure.  Flag the live
+                # row holding the most blocks as preempt-ready ONCE per
+                # blocked request — the signal a future continuous-batching
+                # scheduler consumes (nothing preempts today).
+                if self.obs.enabled and req.uid not in self._obs_blocked:
+                    self._obs_blocked.add(req.uid)
+                    owners = {t.slot: t.req for t in self._prefilling}
+                    owners.update({s: r for s, r in enumerate(self.slots)
+                                   if r is not None})
+                    cand = max(owners,
+                               key=lambda s: len(self.kv.alloc.owned_by(s)),
+                               default=None)
+                    if cand is not None:
+                        self.obs.on_preempt_ready(owners[cand].uid, cand)
+                break
             self.queue.popleft()
             busy.add(slot)
+            if self.obs.enabled:
+                self.obs.on_admit(req.uid, slot,
+                                  time.perf_counter() - req.t_submit)
             self._prefilling.append(_PrefillTask(req, slot))
         if self._prefilling:
             finished.extend(self._prefill_tick())
@@ -653,6 +707,8 @@ class ServingEngine:
         for r, task in enumerate(tasks):
             p = task.req.prompt
             n = min(len(p) - task.pos, c)
+            if self.obs.enabled and task.pos == 0:
+                self.obs.on_first_chunk(task.req.uid, task.slot)
             tokens[r, :n] = p[task.pos: task.pos + n]
             starts[r] = task.pos
             nvalid[r] = n
@@ -769,6 +825,9 @@ class ServingEngine:
                 slots[r] = free[r]
                 budgets[r] = max(0, req.max_new_tokens - 1)
                 temps[r] = req.temperature
+                if self.obs.enabled:
+                    self.obs.on_admit(req.uid, free[r],
+                                      time.perf_counter() - req.t_submit)
             uids = [req.uid for req in group]
             rkeys[: len(group)] = self._request_keys(uids)
             if d_keys is not None:
@@ -826,6 +885,8 @@ class ServingEngine:
         return self._pop_finished()
 
     def _drain_ring(self) -> None:
+        if self.obs.enabled and self._ring:
+            self.obs.on_drain(len(self._ring))
         while self._ring:
             self._consume_one()
 
@@ -851,7 +912,7 @@ class ServingEngine:
         """Launch one decode root and ring its token future (no sync)."""
         t0 = time.perf_counter()
         mask = self.active.copy()
-        with self._guard():
+        with self._guard(), self.obs.span("serving.dispatch.decode"):
             host_keep, temps, eos = self._host_inputs()
             if self.paged:
                 (sampled, self.kv.pools, self.cache_len, self.budget_dev,
@@ -870,6 +931,8 @@ class ServingEngine:
         self.last_token = sampled
         self._ring.append(_InFlight(sampled, mask,
                                     time.perf_counter() - t0))
+        if self.obs.enabled:
+            self._obs_dispatch("decode", mask)
 
     def _dispatch_spec(self) -> None:
         """Launch one speculative step (fused draft-K root + chunk-verify
@@ -880,28 +943,43 @@ class ServingEngine:
             host_keep, temps, eos = self._host_inputs()
             k_row = self._k_row_dev
 
-            (proposals, q_probs, self.draft.pools,
-             self.draft.key_data) = self._spec_draft(
-                self.draft.params, self.draft.pools,
-                self.draft.table_device(),
-                self.last_token, self.cache_len, self.draft.key_data,
-                self._active_dev, host_keep, temps,
-            )
+            with self.obs.span("serving.dispatch.spec_draft"):
+                (proposals, q_probs, self.draft.pools,
+                 self.draft.key_data) = self._spec_draft(
+                    self.draft.params, self.draft.pools,
+                    self.draft.table_device(),
+                    self.last_token, self.cache_len, self.draft.key_data,
+                    self._active_dev, host_keep, temps,
+                )
             target_cache = self.kv.pools if self.paged else self.cache
             bt = self.kv.table_device() if self.paged else None
-            (pack, target_cache, self.cache_len, self.last_token,
-             self.budget_dev, self.key_data,
-             self._active_dev) = self._spec_verify(
-                self.params, target_cache, bt, self.last_token, proposals,
-                q_probs, self.cache_len, self.budget_dev, self.key_data,
-                self._active_dev, host_keep, temps, eos, k_row,
-            )
+            with self.obs.span("serving.dispatch.spec_verify"):
+                (pack, target_cache, self.cache_len, self.last_token,
+                 self.budget_dev, self.key_data,
+                 self._active_dev) = self._spec_verify(
+                    self.params, target_cache, bt, self.last_token, proposals,
+                    q_probs, self.cache_len, self.budget_dev, self.key_data,
+                    self._active_dev, host_keep, temps, eos, k_row,
+                )
         if self.paged:
             self.kv.pools = target_cache
         else:
             self.cache = target_cache
         self._ring.append(_InFlight(pack, mask, time.perf_counter() - t0,
                                     spec=True, k_row=self._k_row.copy()))
+        if self.obs.enabled:
+            self._obs_dispatch("spec", mask)
+
+    def _obs_dispatch(self, kind: str, mask: np.ndarray) -> None:
+        """Step-dispatch telemetry: ring depth, live rows, per-shard pool
+        occupancy — all host ints the engine already tracks."""
+        pool = peaks = None
+        if self.paged:
+            alloc = self.kv.alloc
+            pool = [alloc.in_use(s) for s in range(alloc.num_shards)]
+            peaks = self.kv.blocks_per_shard
+        self.obs.on_step_dispatch(kind, len(self._ring), int(mask.sum()),
+                                  self._ring[-1].dispatch_s, pool, peaks)
 
     def _consume_one(self) -> None:
         """Sync the oldest in-flight step's tokens (the ONE D2H this step
@@ -909,7 +987,8 @@ class ServingEngine:
         newly finished requests to the pending list."""
         entry = self._ring.popleft()
         t0 = time.perf_counter()
-        toks = np.asarray(jax.device_get(entry.tokens))
+        with self.obs.span("serving.ring_sync"):
+            toks = np.asarray(jax.device_get(entry.tokens))
         t_sync = time.perf_counter() - t0
         self.decode_transfers += 1
         if entry.spec:
@@ -921,6 +1000,9 @@ class ServingEngine:
         self.step_device_wait_s.append(t_sync)
         self.step_host_s.append(t_host)
         self.step_times.append(entry.dispatch_s + t_sync + t_host)
+        if self.obs.enabled:
+            self.obs.on_step_consume("spec" if entry.spec else "decode",
+                                     t_sync, t_host)
 
     def _commit_decode(self, entry: _InFlight,
                        toks: np.ndarray) -> List[Request]:
@@ -934,15 +1016,21 @@ class ServingEngine:
         adv = entry.mask & live
         self._len_host += adv
         finished: List[Request] = []
+        now = time.perf_counter() if self.obs.enabled else 0.0
         for slot, req in enumerate(self.slots):
             if req is None or not adv[slot]:
                 continue
             tok = int(toks[slot])
             req.generated.append(tok)
+            if self.obs.enabled:
+                req.t_last = now
+                self.obs.on_commit(req.uid, slot, 1)
             if (req.done or self._len_host[slot] >= self.max_len - 1
                     or tok == self._eos[slot]):
                 finished.append(req)
                 self._retire_slot(slot)
+                if self.obs.enabled:
+                    self._obs_finish(req)
         return finished
 
     def _commit_spec(self, entry: _InFlight,
@@ -951,6 +1039,7 @@ class ServingEngine:
         toks_mat = toks[:, : k + 1]
         n_commit, m_acc = toks[:, k + 1], toks[:, k + 2]
         finished: List[Request] = []
+        now = time.perf_counter() if self.obs.enabled else 0.0
         for slot, req in enumerate(self.slots):
             if req is None or not entry.mask[slot]:
                 continue
@@ -961,6 +1050,8 @@ class ServingEngine:
             self.spec_proposed += k_eff
             self.spec_accepted += m
             self.spec_step_rows += 1
+            if self.obs.enabled:
+                self.obs.on_spec_row(k_eff, m)
             self._len_host[slot] += m + 1  # entries committed to cache
             if self.spec.dynamic_k:
                 if m == k_eff:
@@ -969,20 +1060,27 @@ class ServingEngine:
                     self._k_row[slot] = max(1, k_eff - 1)
                 self._host_dirty = True
             done = False
+            appended = 0
             base_len = self._len_host[slot] - (m + 1)
             for j in range(int(n_commit[slot])):
                 tok = int(toks_mat[slot, j])
                 req.generated.append(tok)
                 self.spec_committed += 1
+                appended += 1
                 # Sequential-decode finish semantics: cached length after
                 # this token is base_len + j + 1.
                 if (req.done or base_len + j + 1 >= self.max_len - 1
                         or tok == self._eos[slot]):
                     done = True
                     break
+            if self.obs.enabled and appended:
+                req.t_last = now
+                self.obs.on_commit(req.uid, slot, appended)
             if done:
                 finished.append(req)
                 self._retire_slot(slot)
+                if self.obs.enabled:
+                    self._obs_finish(req)
         return finished
 
     # ------------------------------------------------------------ telemetry
@@ -994,7 +1092,18 @@ class ServingEngine:
         ``host_*`` the emission/free bookkeeping that follows — the two
         halves the pipeline overlaps with the device's next step."""
         if not self.step_times:
-            return {"steps": 0, "pipeline_depth": self.pipeline_depth}
+            # Fully-keyed zero snapshot: callers (serve.py, benchmarks,
+            # dashboards) index timing keys unconditionally — an engine
+            # that never stepped must not crash them or emit NaN.
+            return {
+                "steps": 0,
+                "step_mean_s": 0.0, "step_p50_s": 0.0,
+                "step_p90_s": 0.0, "step_p99_s": 0.0,
+                "device_wait_mean_s": 0.0, "device_wait_p50_s": 0.0,
+                "host_mean_s": 0.0, "host_p50_s": 0.0,
+                "pipeline_depth": self.pipeline_depth,
+                "live_rows": int(self.active.sum()),
+            }
         ts = np.asarray(self.step_times)
         dw = np.asarray(self.step_device_wait_s)
         hb = np.asarray(self.step_host_s)
@@ -1079,4 +1188,11 @@ class ServingEngine:
         moved = len(self.kv.defrag())
         if self.spec is not None:
             moved += len(self.draft.kv.defrag())
+        if self.obs.enabled:
+            self.obs.on_defrag(moved)
         return moved
+
+    def telemetry_snapshot(self) -> Dict:
+        """Full observability snapshot (metrics + trace tail + engine
+        stats) — ``{}`` when the engine runs without telemetry."""
+        return self.obs.snapshot(self) if self.obs.enabled else {}

@@ -51,6 +51,15 @@ class BlockAllocator:
         # per shard — per-DEVICE HBM truthfulness when pools are sharded.
         self.peak_in_use = 0
         self.peak_by_shard: List[int] = [0] * num_shards
+        # Lifetime event counters (plain ints, no deps): scraped by the
+        # observability layer (repro.obs) and snapshotted by the engine —
+        # bookkeeping only, never consulted for allocation decisions.
+        self.counters: Dict[str, int] = {
+            "alloc_calls": 0, "alloc_denied": 0, "alloc_blocks": 0,
+            "free_calls": 0, "freed_blocks": 0,
+            "release_suffix_calls": 0, "defrag_calls": 0,
+            "defrag_moved_blocks": 0,
+        }
 
     # ------------------------------------------------------------ queries
 
@@ -87,11 +96,14 @@ class BlockAllocator:
         backpressure is per shard."""
         if n < 0:
             raise ValueError(f"negative block count {n}")
+        self.counters["alloc_calls"] += 1
         free = self._free[shard]
         if n > len(free):
+            self.counters["alloc_denied"] += 1
             return None
         ids = free[:n]
         del free[:n]
+        self.counters["alloc_blocks"] += n
         self._owned.setdefault(owner, []).extend(ids)
         self._note_peaks()
         return ids
@@ -100,6 +112,9 @@ class BlockAllocator:
         """Release all blocks held by owner to their home shards (no-op for
         unknown owners)."""
         ids = self._owned.pop(owner, [])
+        if ids:
+            self.counters["free_calls"] += 1
+            self.counters["freed_blocks"] += len(ids)
         self._return(ids)
         return ids
 
@@ -124,6 +139,8 @@ class BlockAllocator:
         ids = self._owned.get(owner, [])
         freed = ids[n_keep:]
         if freed:
+            self.counters["release_suffix_calls"] += 1
+            self.counters["freed_blocks"] += len(freed)
             self._owned[owner] = ids[:n_keep]
             if not self._owned[owner]:
                 del self._owned[owner]
@@ -147,4 +164,6 @@ class BlockAllocator:
         if moves:
             for ids in self._owned.values():
                 ids[:] = [moves.get(b, b) for b in ids]
+        self.counters["defrag_calls"] += 1
+        self.counters["defrag_moved_blocks"] += len(moves)
         return moves

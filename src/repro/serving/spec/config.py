@@ -3,7 +3,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, Optional
 
 
 @dataclasses.dataclass
@@ -27,12 +27,18 @@ class SpecConfig:
         rate, not FLOPs.
     seed: draft-side PRNG seed (independent of the target's sampling keys:
         proposals consume draft keys, accept/resample consumes target keys).
+    draft_ratio: OPTIONAL metadata — the NSVD compression ratio the draft
+        was built at.  Never consulted by the decode path; it keys the
+        observability layer's spec-acceptance histogram (win/loss per
+        (k, draft-ratio) in the bench history, the signal ROADMAP item 5's
+        dynamic-k controller consumes).
     """
 
     draft_params: Any
     k: int = 4
     dynamic_k: bool = False
     seed: int = 1234
+    draft_ratio: Optional[float] = None
 
     def __post_init__(self):
         if self.k < 1:

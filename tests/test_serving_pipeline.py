@@ -3,7 +3,7 @@ depth>1 produces token-identical streams (greedy, temperature with slot
 reuse, speculative) on both cache layouts, drain discipline around the
 host-mutating events (admission, defrag, EOS/completion flush), device-side
 finish exits (token budget + max_len + EOS all clear `active` on device),
-the cached loop-invariant host inputs, and the schema-4 BENCH_serving.json
+the cached loop-invariant host inputs, and the schema-6 BENCH_serving.json
 smoke."""
 
 import json
@@ -343,17 +343,18 @@ class TestPipelineConfig:
 
 
 class TestBenchSchemaSmoke:
-    def test_repo_bench_file_migrates_to_schema5(self):
+    def test_repo_bench_file_migrates_to_schema6(self):
         """The checked-in BENCH_serving.json must parse and migrate: every
-        row of every entry carries pipeline_depth + the step breakdown, and
-        every entry an audit stamp (null for pre-auditor runs) after
+        row of every entry carries pipeline_depth + the step breakdown,
+        every entry an audit stamp (null for pre-auditor runs) and a
+        telemetry + roofline block (null for pre-observability runs) after
         _migrate_entry."""
         st = pytest.importorskip("benchmarks.serving_throughput")
         path = os.path.join(os.path.dirname(__file__), "..",
                             "BENCH_serving.json")
         with open(path) as f:
             doc = json.load(f)
-        assert doc["schema"] in (1, 2, 3, 4, 5)
+        assert doc["schema"] in (1, 2, 3, 4, 5, 6)
         history = doc["history"] if "history" in doc else [doc]
         for entry in map(st._migrate_entry, history):
             assert entry["mesh"]["devices"] >= 1
@@ -363,6 +364,15 @@ class TestBenchSchemaSmoke:
                 assert audit["d2h_per_step"] == 1
                 assert audit["donation_ok"] is True
                 assert audit["vmem_bytes_per_kernel"]
+            assert "telemetry" in entry
+            tel = entry["telemetry"]
+            if tel is not None:
+                assert tel["ttft_s"]["count"] >= 1
+                assert tel["occupancy"]["rows_peak"] >= 1
+                assert tel["spec"] is None or tel["spec"]["outcomes"]
+            assert "roofline" in entry
+            if entry["roofline"] is not None:
+                assert entry["roofline"]["serving_kernels"]
             for row in entry["rows"]:
                 assert row["pipeline_depth"] >= 1
                 assert "step_device_wait_ms" in row
@@ -379,7 +389,17 @@ class TestBenchSchemaSmoke:
                               "max_abs_err_vs_oracle": 1e-6},
         }
         doc = st.append_history(entry, path=str(tmp_path / "b.json"))
-        assert doc["schema"] == 5
+        assert doc["schema"] == 6
         fresh = doc["history"][-1]
         assert fresh["rows"][0]["pipeline_depth"] == 2
         assert fresh["packed_kernel"]["rows_per_pack"] == 2
+
+    def test_schema5_entry_migrates_telemetry_null(self):
+        st = pytest.importorskip("benchmarks.serving_throughput")
+        old = {"git_sha": "abc", "mesh": {"dp": 1, "tp": 1, "devices": 1},
+               "audit": {"d2h_per_step": 1, "donation_ok": True,
+                         "vmem_bytes_per_kernel": {"x": 1}},
+               "rows": []}
+        mig = st._migrate_entry(old)
+        assert mig["telemetry"] is None
+        assert mig["roofline"] is None

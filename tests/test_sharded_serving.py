@@ -442,7 +442,7 @@ class TestBenchSchemaMigration:
              "rows": []},
             path=str(path),
         )
-        assert doc["schema"] == st.BENCH_SCHEMA == 5
+        assert doc["schema"] == st.BENCH_SCHEMA == 6
         migrated, fresh = doc["history"]
         assert migrated["mesh"] == {"dp": 1, "tp": 1, "devices": 1}
         assert migrated["rows"][0]["per_device_cache_bytes"] == 100
@@ -452,4 +452,8 @@ class TestBenchSchemaMigration:
         assert migrated["rows"][0]["step_device_wait_ms"] is None
         # Schema 4 -> 5: pre-auditor entries carry a null contract stamp.
         assert migrated["audit"] is None
+        # Schema 5 -> 6: pre-observability entries carry null telemetry
+        # and roofline blocks.
+        assert migrated["telemetry"] is None
+        assert migrated["roofline"] is None
         assert fresh["mesh"]["dp"] == 2
