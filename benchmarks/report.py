@@ -120,7 +120,9 @@ def repro_tables_section() -> str:
     out = []
     for name in sorted(glob.glob(os.path.join(EXP, "repro", "*.json"))):
         data = load_json(name)
-        rows = data["rows"]
+        # Non-table artifacts (e.g. the decomposition report) share the
+        # directory; only {"rows": [...]} documents are tables.
+        rows = data.get("rows") if isinstance(data, dict) else None
         if not rows:
             continue
         title = os.path.basename(name)[:-5]
@@ -138,6 +140,55 @@ def repro_tables_section() -> str:
     return "\n".join(out)
 
 
+def quality_section() -> str:
+    """Newest BENCH_quality.json entry: per-domain dense vs compressed
+    perplexity plus the top per-target drift attribution."""
+    path = os.path.join(EXP, "..", "BENCH_quality.json")
+    if not os.path.exists(path):
+        return ("(BENCH_quality.json missing — run "
+                "`python -m repro.obs.quality_report`)")
+    hist = load_json(path).get("history", [])
+    if not hist:
+        return "(BENCH_quality.json has no entries)"
+    e = hist[-1]
+    m = e["meta"]
+    lines = [
+        f"### Quality drift ({m['model']}, {m['method']} "
+        f"ratio={m['ratio']}, {len(hist)} run(s), newest "
+        f"{e['git_sha']} cfg={e['config_hash']})",
+        "",
+        "| domain | dense ppl | compressed ppl | ratio |",
+        "|---|---|---|---|",
+    ]
+    for d, dp in e["dense_ppl"].items():
+        cp = e["compressed_ppl"][d]
+        lines.append(f"| {d} | {dp:.2f} | {cp:.2f} | x{cp / dp:.3f} |")
+    lines.append("")
+    lines.append(f"logit KL (dense ‖ compressed): {e['logit_kl']:.5f} "
+                 "nats/token")
+    attr = e.get("attribution") or []
+    if attr:
+        worst = ", ".join(f"{r['target']} ({r['share']:.0%})"
+                          for r in attr[:3])
+        lines.append(f"drift attribution (top targets): {worst}")
+    dec = e.get("decomposition") or {}
+    if dec:
+        lines.append(
+            f"decomposition: {dec['targets']} targets, whitened rel err "
+            f"mean {dec['whitened_rel_err_mean']:.4f} (plain "
+            f"{dec['plain_rel_err_mean']:.4f}), outlier absorption "
+            f"{dec['outlier_absorption_mean']:.3f}")
+    return "\n".join(lines)
+
+
+def sentinel_section() -> str:
+    """The regression sentinel's verdict over both bench histories."""
+    from .sentinel import format_verdict, run_sentinel
+
+    ok, findings, context = run_sentinel()
+    return "```\n" + format_verdict(ok, findings, context) + "\n```"
+
+
 def main():
     print("## §Dry-run\n")
     print(dryrun_section())
@@ -145,6 +196,10 @@ def main():
     print(roofline_section())
     print("\n## §Repro tables\n")
     print(repro_tables_section())
+    print("\n## §Quality drift\n")
+    print(quality_section())
+    print("\n## §Regression sentinel\n")
+    print(sentinel_section())
 
 
 if __name__ == "__main__":

@@ -1,0 +1,208 @@
+"""Perf/quality regression sentinel over the append-only bench histories.
+
+    PYTHONPATH=src:. python -m benchmarks.sentinel [--json] \
+        [--tok-threshold 0.8] [--ppl-threshold 1.10]
+
+Compares the NEWEST entry of ``BENCH_serving.json`` and
+``BENCH_quality.json`` against all PRIOR entries at the same config hash
+(and, for serving, the same mesh geometry — tok/s across different
+dp x tp shapes is not a regression signal).  Exits nonzero when
+
+  * any serving summary tok/s figure drops below ``tok_threshold`` x the
+    best prior figure at matching config/mesh, or
+  * any compressed-model eval-domain perplexity rises above
+    ``ppl_threshold`` x the best (lowest) prior at matching config.
+
+Entries at a config hash never seen before pass vacuously — a new
+benchmark geometry has no baseline to regress against.  Absolute numbers
+differ across machines, which is why the sentinel only ever diffs entries
+within one history file (same-machine appends) at matching config.
+
+CI runs this after appending fresh entries; ``benchmarks.report`` prints
+the same verdict in its summary.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+SERVING_PATH = os.path.join(REPO_ROOT, "BENCH_serving.json")
+QUALITY_PATH = os.path.join(REPO_ROOT, "BENCH_quality.json")
+
+# Serving summary keys worth guarding: the headline decode rates.  Ratios
+# (speedups) are guarded transitively through their numerators.
+TOK_KEYS = (
+    "tok_per_s_dense_slab",
+    "tok_per_s_paged",
+    "tok_per_s_spec",
+    "tok_per_s_pipelined",
+    "tok_per_s_spec_pipelined",
+)
+
+DEFAULT_TOK_THRESHOLD = 0.80   # fail below 80% of best prior tok/s
+DEFAULT_PPL_THRESHOLD = 1.10   # fail above 110% of best prior ppl
+
+
+def load_history(path: str) -> List[Dict]:
+    if not os.path.exists(path):
+        return []
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (json.JSONDecodeError, OSError):
+        return []
+    hist = doc.get("history")
+    return hist if isinstance(hist, list) else []
+
+
+def _match_serving(entry: Dict, other: Dict) -> bool:
+    return (other.get("config_hash") == entry.get("config_hash")
+            and other.get("mesh") == entry.get("mesh"))
+
+
+def check_serving(
+    history: List[Dict], tok_threshold: float = DEFAULT_TOK_THRESHOLD
+) -> List[Dict]:
+    """Findings for the newest serving entry vs its matching priors."""
+    if len(history) < 2:
+        return []
+    newest = history[-1]
+    priors = [e for e in history[:-1] if _match_serving(newest, e)]
+    findings: List[Dict] = []
+    summary = newest.get("summary") or {}
+    for key in TOK_KEYS:
+        cur = summary.get(key)
+        if cur is None:
+            continue
+        base_vals = [
+            (e.get("summary") or {}).get(key)
+            for e in priors
+        ]
+        base_vals = [v for v in base_vals if isinstance(v, (int, float))]
+        if not base_vals:
+            continue
+        best = max(base_vals)
+        if best > 0 and cur < tok_threshold * best:
+            findings.append({
+                "kind": "serving",
+                "metric": key,
+                "baseline": best,
+                "current": cur,
+                "ratio": cur / best,
+                "threshold": tok_threshold,
+                "config_hash": newest.get("config_hash"),
+                "git_sha": newest.get("git_sha"),
+            })
+    return findings
+
+
+def check_quality(
+    history: List[Dict], ppl_threshold: float = DEFAULT_PPL_THRESHOLD
+) -> List[Dict]:
+    """Findings for the newest quality entry vs its matching priors."""
+    if len(history) < 2:
+        return []
+    newest = history[-1]
+    priors = [e for e in history[:-1]
+              if e.get("config_hash") == newest.get("config_hash")]
+    findings: List[Dict] = []
+    for domain, cur in (newest.get("compressed_ppl") or {}).items():
+        base_vals = [
+            (e.get("compressed_ppl") or {}).get(domain)
+            for e in priors
+        ]
+        base_vals = [v for v in base_vals if isinstance(v, (int, float))]
+        if not base_vals or not isinstance(cur, (int, float)):
+            continue
+        best = min(base_vals)  # lowest prior ppl is the bar
+        if best > 0 and cur > ppl_threshold * best:
+            findings.append({
+                "kind": "quality",
+                "metric": f"compressed_ppl/{domain}",
+                "baseline": best,
+                "current": cur,
+                "ratio": cur / best,
+                "threshold": ppl_threshold,
+                "config_hash": newest.get("config_hash"),
+                "git_sha": newest.get("git_sha"),
+            })
+    return findings
+
+
+def run_sentinel(
+    serving_path: str = SERVING_PATH,
+    quality_path: str = QUALITY_PATH,
+    tok_threshold: float = DEFAULT_TOK_THRESHOLD,
+    ppl_threshold: float = DEFAULT_PPL_THRESHOLD,
+) -> Tuple[bool, List[Dict], Dict]:
+    """Returns (ok, findings, context).  ok is False iff any finding."""
+    serving = load_history(serving_path)
+    quality = load_history(quality_path)
+    findings = (check_serving(serving, tok_threshold)
+                + check_quality(quality, ppl_threshold))
+    context = {
+        "serving_entries": len(serving),
+        "quality_entries": len(quality),
+        "serving_comparable": 0,
+        "quality_comparable": 0,
+    }
+    if serving:
+        context["serving_comparable"] = sum(
+            1 for e in serving[:-1] if _match_serving(serving[-1], e))
+    if quality:
+        context["quality_comparable"] = sum(
+            1 for e in quality[:-1]
+            if e.get("config_hash") == quality[-1].get("config_hash"))
+    return (not findings), findings, context
+
+
+def format_verdict(ok: bool, findings: List[Dict], context: Dict) -> str:
+    lines = [
+        f"sentinel: {context['serving_entries']} serving entr(ies) "
+        f"({context['serving_comparable']} comparable), "
+        f"{context['quality_entries']} quality entr(ies) "
+        f"({context['quality_comparable']} comparable)"
+    ]
+    for f in findings:
+        lines.append(
+            f"  REGRESSION [{f['kind']}] {f['metric']}: "
+            f"{f['current']:.3f} vs baseline {f['baseline']:.3f} "
+            f"(x{f['ratio']:.3f}, threshold x{f['threshold']:.2f}) "
+            f"@ {f['git_sha']} cfg={f['config_hash']}")
+    lines.append("sentinel: OK" if ok else
+                 f"sentinel: FAIL ({len(findings)} regression(s))")
+    return "\n".join(lines)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail on tok/s or perplexity regressions vs bench history")
+    ap.add_argument("--serving", default=SERVING_PATH)
+    ap.add_argument("--quality", default=QUALITY_PATH)
+    ap.add_argument("--tok-threshold", type=float,
+                    default=DEFAULT_TOK_THRESHOLD,
+                    help="fail when tok/s < threshold x best prior")
+    ap.add_argument("--ppl-threshold", type=float,
+                    default=DEFAULT_PPL_THRESHOLD,
+                    help="fail when compressed ppl > threshold x best prior")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the machine-readable verdict")
+    args = ap.parse_args(argv)
+
+    ok, findings, context = run_sentinel(
+        args.serving, args.quality, args.tok_threshold, args.ppl_threshold)
+    if args.json:
+        print(json.dumps({"ok": ok, "findings": findings,
+                          "context": context}, indent=1))
+    else:
+        print(format_verdict(ok, findings, context))
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

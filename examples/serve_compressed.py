@@ -141,6 +141,27 @@ def main():
     print("  chrome trace -> /tmp/serve_compressed_trace.json "
           "(load in chrome://tracing or ui.perfetto.dev)")
 
+    # Quality-report leg: the compression-side twin of the telemetry
+    # above.  Re-compress with CompressionTelemetry attached (params stay
+    # bit-identical — it only observes) and read back the per-target
+    # decomposition diagnostics the quality-report CLI exports.  The full
+    # pipeline — dense-vs-compressed ppl per domain, per-target logit-KL
+    # attribution, append to BENCH_quality.json — is
+    #   PYTHONPATH=src:. python -m repro.obs.quality_report
+    # and `python -m benchmarks.sentinel` fails the build when a fresh
+    # entry regresses against history at the same config.
+    from repro.obs import CompressionTelemetry
+
+    ctel = CompressionTelemetry()
+    compress_params(params, plan, grams, telemetry=ctel)
+    worst = max(ctel.reports.values(), key=lambda r: r.whitened_rel_err)
+    print(f"  quality report: {len(ctel.reports)} targets; worst whitened "
+          f"rel err {worst.whitened_rel_err:.4f} ({worst.target}, "
+          f"k1/k2={worst.k1}/{worst.k2}, outlier absorption "
+          f"{worst.outlier_absorption:.2f})")
+    ctel.write_report("/tmp/serve_compressed_quality.json", plan=plan)
+    print("  decomposition artifact -> /tmp/serve_compressed_quality.json")
+
 
 if __name__ == "__main__":
     main()

@@ -61,8 +61,19 @@ def expert_gram_update(buf: jax.Array):
     return g, a, cnt
 
 
-def accumulate_taps(store: GramStore, taps: Dict[str, jax.Array]) -> None:
-    """Fold one batch of taps into the host GramStore."""
+def accumulate_taps(
+    store: GramStore,
+    taps: Dict[str, jax.Array],
+    telemetry=None,
+) -> None:
+    """Fold one batch of taps into the host GramStore.
+
+    ``telemetry`` (``repro.obs.compression.CompressionTelemetry``) gets the
+    cheap per-batch signal only — rows folded per normalized tap; the
+    expensive per-tap statistics (outlier fractions, Gram condition) run
+    once at the end of calibration in ``runner.collect_grams``."""
+    tap_rows: Dict[str, float] = {}
+    observing = telemetry is not None and telemetry.enabled
     for name, x in taps.items():
         base, suffix = normalize_tap(name)
         if base.endswith(("expert_buf", "expert_mid")):
@@ -75,6 +86,8 @@ def accumulate_taps(store: GramStore, taps: Dict[str, jax.Array]) -> None:
                 store.update(key, g[ei], a[ei], float(cnt[ei]))
             # Shared fallback across experts (+ layers).
             store.update(base, g.sum(0), a.sum(0), float(cnt.sum()))
+            if observing:
+                tap_rows[base] = tap_rows.get(base, 0.0) + float(cnt.sum())
         else:
             g, a, c = gram_update(x)
             g = np.asarray(g, np.float64)
@@ -82,3 +95,7 @@ def accumulate_taps(store: GramStore, taps: Dict[str, jax.Array]) -> None:
             if suffix:
                 store.update(f"{base}/{suffix}", g, a, float(c))
             store.update(base, g, a, float(c))
+            if observing:
+                tap_rows[base] = tap_rows.get(base, 0.0) + float(c)
+    if observing:
+        telemetry.on_calib_batch(tap_rows)

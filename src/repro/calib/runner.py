@@ -26,7 +26,14 @@ def collect_grams(
     params,
     batches: Iterable[Dict[str, np.ndarray]],
     max_batches: Optional[int] = None,
+    telemetry=None,
 ) -> GramStore:
+    """Accumulate calibration Grams; ``telemetry`` (a
+    ``repro.obs.compression.CompressionTelemetry``) observes without
+    changing the store: per-batch row counts stream in during the pass and
+    the per-tap activation statistics (absmean distribution, outlier
+    fractions, Gram condition numbers) are computed exactly once over the
+    final accumulated store."""
     store = GramStore()
 
     def fwd(p, batch):
@@ -45,9 +52,11 @@ def collect_grams(
         if max_batches is not None and i >= max_batches:
             break
         taps = jitted(params, batch)
-        accumulate_taps(store, taps)
+        accumulate_taps(store, taps, telemetry=telemetry)
         n += 1
     logger.info("calibration: %d batches, %d gram keys", n, len(list(store.keys())))
+    if telemetry is not None and telemetry.enabled:
+        telemetry.on_calib_store(store)
     return store
 
 

@@ -12,11 +12,11 @@ FLOPs and storage of a single rank-k ASVD factorization (paper Eq. 6).
 
 from __future__ import annotations
 
-from typing import Optional
+from typing import Dict, Optional
 
 import numpy as np
 
-from .asvd import LowRankFactors, asvd_compress, plain_svd_compress
+from .asvd import LowRankFactors, asvd_compress, gram_loss, plain_svd_compress
 from .nid import id_compress
 from .whitening import make_whitener
 
@@ -116,3 +116,63 @@ ALL_METHODS = (
     "svd", "asvd0", "asvd1", "asvd2", "asvd3", "nsvd1", "nsvd2", "nid1", "nid2",
 )
 NESTED_METHODS = ("nsvd1", "nsvd2", "nid1", "nid2")
+
+
+def decomposition_diagnostics(
+    a: Array,
+    factors: LowRankFactors,
+    gram: Optional[Array] = None,
+    compare_plain: bool = True,
+    use_randomized: bool = False,
+) -> Dict[str, float]:
+    """Pure observation of a finished decomposition (never mutates inputs).
+
+    Returns per-matrix quality numbers the compression observability layer
+    aggregates into ``DecompositionReport``s:
+
+      plain_rel_err      ||A - Ã||_F / ||A||_F            (weight space)
+      whitened_rel_err   ||(A - Ã) X||_F / ||A X||_F      (activation space,
+                         computed from the calibration Gram only)
+      sv_tail_mass       whitened_rel_err² — for the activation-aware step
+                         this is exactly Σ_{i>k} σ_i² / Σ_i σ_i² of A·S
+                         (Eckart–Young in the whitened space), so the
+                         singular-value tail at the chosen rank costs no
+                         extra SVD.
+      outlier_absorption 1 - whitened_loss / plain_svd_whitened_loss: the
+                         fraction of activation-weighted error the
+                         whitening step (absorbing activation outliers
+                         into the transformed weight) removed relative to
+                         a rank-matched PLAIN SVD.  Requires one extra
+                         truncated SVD; skipped when ``compare_plain`` is
+                         False (reported as nan).
+      k1 / k2            the nested split actually used.
+    """
+    a = np.asarray(a, np.float64)
+    approx = factors.matrix()
+    fro_a = float(np.linalg.norm(a, "fro"))
+    plain_rel = float(np.linalg.norm(a - approx, "fro")) / max(fro_a, 1e-300)
+    k1 = int(factors.w.shape[1])
+    k2 = int(factors.w2.shape[1]) if factors.nested else 0
+    out: Dict[str, float] = {
+        "rank": float(factors.rank),
+        "k1": float(k1),
+        "k2": float(k2),
+        "param_count": float(factors.param_count()),
+        "plain_rel_err": plain_rel,
+        "whitened_rel_err": float("nan"),
+        "sv_tail_mass": float("nan"),
+        "outlier_absorption": float("nan"),
+    }
+    if gram is None:
+        return out
+    g = np.asarray(gram, np.float64)
+    g = 0.5 * (g + g.T)
+    total = gram_loss(a, np.zeros_like(a), g)  # ||A X||_F
+    whit = gram_loss(a, approx, g)
+    out["whitened_rel_err"] = whit / max(total, 1e-300)
+    out["sv_tail_mass"] = (whit / max(total, 1e-300)) ** 2
+    if compare_plain:
+        base = plain_svd_compress(a, factors.rank, use_randomized=use_randomized)
+        base_whit = gram_loss(a, base.matrix(), g)
+        out["outlier_absorption"] = 1.0 - whit / max(base_whit, 1e-300)
+    return out

@@ -15,7 +15,14 @@ from typing import Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .ratio import MatrixSpec, achieved_ratio, importance_ranks, uniform_ranks
+from .ratio import (
+    MatrixSpec,
+    achieved_ratio,
+    importance_ranks,
+    rank_for_ratio,
+    ratio_for_rank,
+    uniform_ranks,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,17 +94,47 @@ class CompressionPlan:
     def rank_of(self, spec: TargetSpec) -> int:
         return self.ranks[spec.name]
 
+    def target_rows(self) -> list:
+        """Structured per-target summary: the assigned rank next to the
+        unaligned budget rank for the requested ratio, and the per-target
+        achieved ratio with its delta against the request — so a plan
+        artifact is self-describing about where alignment/min-rank
+        rounding spent or saved budget."""
+        rows = []
+        for t in self.targets:
+            k = self.ranks[t.name]
+            m, n = t.out_dim, t.in_dim
+            requested = rank_for_ratio(m, n, self.config.ratio)
+            ach = ratio_for_rank(m, n, k)
+            rows.append({
+                "target": t.name,
+                "shape": [m, n],
+                "stacked": list(t.stacked),
+                "rank": int(k),
+                "requested_rank": int(requested),
+                "achieved_ratio": ach,
+                "ratio_delta": ach - self.config.ratio,
+            })
+        return rows
+
     def summary(self) -> str:
         lines = [
             f"method={self.config.method} ratio={self.config.ratio} "
-            f"k1_frac={self.config.k1_frac} achieved_ratio={self.achieved_ratio:.4f}"
+            f"k1_frac={self.config.k1_frac} "
+            f"achieved_ratio={self.achieved_ratio:.4f} "
+            f"(delta {self.achieved_ratio - self.config.ratio:+.4f})"
         ]
-        for t in self.targets:
-            k = self.ranks[t.name]
-            stack = "x".join(str(s) for s in t.stacked)
+        for r in self.target_rows():
+            stack = "x".join(str(s) for s in r["stacked"])
+            m, n = r["shape"]
+            req = ""
+            if r["rank"] != r["requested_rank"]:
+                req = f" (requested {r['requested_rank']})"
             lines.append(
-                f"  {t.name}: ({t.out_dim}x{t.in_dim})"
-                f"{'x' + stack if stack else ''} -> rank {k}"
+                f"  {r['target']}: ({m}x{n})"
+                f"{'x' + stack if stack else ''} -> rank {r['rank']}{req}"
+                f" ratio={r['achieved_ratio']:.4f}"
+                f" (delta {r['ratio_delta']:+.4f})"
             )
         return "\n".join(lines)
 

@@ -1,0 +1,103 @@
+"""Quality-drift attribution: which layers pay for a compression ratio.
+
+End-to-end perplexity drift (dense vs compressed) is one number; serving
+it per layer needs two views, both computed here:
+
+  * **Logit KL** — mean per-token KL(dense || test) in nats between the
+    dense model's next-token distribution and a test param tree's.  Both
+    forwards run inside ONE jitted function per batch, so the comparison
+    sees identical inputs.
+  * **Per-target patching** — for each compressed ``TargetSpec``, build a
+    params tree that is dense EVERYWHERE except that one target (the
+    compressed factored leaf swapped in) and measure its logit KL: the
+    drift attributable to that target alone.  Patching is supported by
+    construction — ``linear_apply`` dispatches per leaf on "kernel" vs
+    "u", exactly how partially-compressed plans already run.
+
+Shares of the summed per-target KL are the attribution the quality-report
+CLI stamps into BENCH_quality.json.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def swap_subtree(params: Any, path: Tuple[str, ...], leaf: Any) -> Any:
+    """Copy-on-path: a new tree sharing every leaf with ``params`` except
+    the subtree at ``path``, which is replaced by ``leaf``."""
+    if not path:
+        return leaf
+    out = dict(params)
+    out[path[0]] = swap_subtree(params[path[0]], path[1:], leaf)
+    return out
+
+
+def get_subtree(params: Any, path: Tuple[str, ...]) -> Any:
+    node = params
+    for p in path:
+        node = node[p]
+    return node
+
+
+def mean_logit_kl(
+    model,
+    params_ref: Any,
+    params_test: Any,
+    batches: Iterable[Dict[str, np.ndarray]],
+    max_batches: Optional[int] = None,
+) -> float:
+    """Mean per-token KL(ref || test) over the batch stream, in nats."""
+
+    def kl(pr, pt, batch):
+        kwargs = {}
+        if model.cfg.is_encdec:
+            kwargs["frames"] = batch["frames"]
+        elif "patches" in batch:
+            kwargs["patches"] = batch["patches"]
+        la, _, _ = model.apply(pr, batch["tokens"], mode="train", **kwargs)
+        lb, _, _ = model.apply(pt, batch["tokens"], mode="train", **kwargs)
+        la = la.astype(jnp.float32)
+        lb = lb.astype(jnp.float32)
+        pa = jax.nn.softmax(la, axis=-1)
+        diff = jax.nn.log_softmax(la, axis=-1) - jax.nn.log_softmax(lb, axis=-1)
+        return jnp.mean(jnp.sum(pa * diff, axis=-1))
+
+    jitted = jax.jit(kl)
+    tot, n = 0.0, 0
+    for i, batch in enumerate(batches):
+        if max_batches is not None and i >= max_batches:
+            break
+        tot += float(jitted(params_ref, params_test, batch))
+        n += 1
+    return tot / max(n, 1)
+
+
+def per_target_attribution(
+    model,
+    dense_params: Any,
+    compressed_params: Any,
+    targets: Sequence,
+    make_batches,
+) -> List[Dict]:
+    """Logit-KL of each single-target patch (dense everywhere, one
+    compressed leaf swapped in), plus each target's share of the summed
+    per-target KL.
+
+    ``make_batches`` is a zero-arg callable returning a fresh batch
+    iterator (the same batches must feed every patch for the deltas to be
+    comparable)."""
+    rows: List[Dict] = []
+    for spec in targets:
+        leaf = get_subtree(compressed_params, spec.path)
+        patched = swap_subtree(dense_params, spec.path, leaf)
+        kl = mean_logit_kl(model, dense_params, patched, make_batches())
+        rows.append({"target": spec.name, "logit_kl": kl})
+    total = sum(max(r["logit_kl"], 0.0) for r in rows)
+    for r in rows:
+        r["share"] = max(r["logit_kl"], 0.0) / total if total > 0 else 0.0
+    return sorted(rows, key=lambda r: -r["logit_kl"])

@@ -91,8 +91,9 @@ def main():
         "enables the tracer + metrics registry; all are off by default "
         "and the disabled path is a pinned no-op")
     obs_g.add_argument("--metrics-port", type=int, default=None,
-                       help="serve Prometheus text at :PORT/metrics and a "
-                            "JSON snapshot at :PORT/metrics.json while "
+                       help="serve Prometheus text at :PORT/metrics, a "
+                            "JSON snapshot at :PORT/metrics.json and a "
+                            "liveness probe at :PORT/healthz while "
                             "running (0 picks a free port)")
     obs_g.add_argument("--metrics-json", default=None, metavar="PATH",
                        help="write a final JSON metrics snapshot here")
@@ -120,6 +121,27 @@ def main():
         model = build_model(cfg)
         params = model.init(jax.random.key(0))
 
+    # Observability comes up BEFORE compression so the compression pass
+    # (when --compress rides along) reports into the same registry the
+    # serving loop exports on --metrics-port.
+    telemetry = None
+    metrics_server = None
+    compress_telemetry = None
+    obs_wanted = any(v is not None for v in (
+        args.metrics_port, args.metrics_json, args.trace_jsonl,
+        args.trace_chrome, args.profile_dir))
+    if obs_wanted:
+        from repro.obs import CompressionTelemetry, MetricsServer, Telemetry
+
+        telemetry = Telemetry(profile_dir=args.profile_dir,
+                              profile_steps=args.profile_steps)
+        compress_telemetry = CompressionTelemetry(registry=telemetry.metrics)
+        if args.metrics_port is not None:
+            metrics_server = MetricsServer(telemetry.metrics,
+                                           port=args.metrics_port)
+            print(f"metrics: {metrics_server.url} "
+                  "(+ /metrics.json, /healthz)")
+
     base_params = params
     if args.compress is not None:
         from benchmarks.common import get_grams
@@ -131,7 +153,8 @@ def main():
             CompressionConfig(method="nsvd1", ratio=args.compress,
                               dtype="float32", use_randomized=False),
         )
-        params = compress_params(base_params, plan, grams)
+        params = compress_params(base_params, plan, grams,
+                                 telemetry=compress_telemetry)
         print(f"serving NSVD-compressed weights ({plan.achieved_ratio:.0%} removed)")
 
     spec_config = None
@@ -178,21 +201,6 @@ def main():
         print(f"audit: {len(rows)} {layout} roots clean "
               "(transfers/donation/sharding/dtypes)")
 
-    telemetry = None
-    metrics_server = None
-    obs_wanted = any(v is not None for v in (
-        args.metrics_port, args.metrics_json, args.trace_jsonl,
-        args.trace_chrome, args.profile_dir))
-    if obs_wanted:
-        from repro.obs import MetricsServer, Telemetry, write_metrics_json
-
-        telemetry = Telemetry(profile_dir=args.profile_dir,
-                              profile_steps=args.profile_steps)
-        if args.metrics_port is not None:
-            metrics_server = MetricsServer(telemetry.metrics,
-                                           port=args.metrics_port)
-            print(f"metrics: {metrics_server.url} (+ /metrics.json)")
-
     eng = ServingEngine(model, params, max_batch=args.max_batch,
                         max_len=args.max_len, seed=args.seed,
                         paged={"auto": None, "on": True, "off": False}[args.paged],
@@ -211,7 +219,15 @@ def main():
                    max_new_tokens=args.max_new,
                    temperature=args.temperature)
     t0 = time.time()
-    out = eng.run()
+    # The metrics server thread must come down with the engine, crash or
+    # clean exit alike — a daemon thread holding the port would outlive a
+    # failed run in long-lived launchers.
+    try:
+        out = eng.run()
+    except BaseException:
+        if metrics_server is not None:
+            metrics_server.close()
+        raise
     dt = time.time() - t0
     n = sum(len(v) for v in out.values())
     print(f"{len(out)} requests, {n} tokens, {n/dt:.1f} tok/s")
@@ -251,6 +267,8 @@ def main():
               f"{len(telemetry.tracer)} events "
               f"({telemetry.tracer.dropped} dropped)")
         if args.metrics_json:
+            from repro.obs import write_metrics_json
+
             write_metrics_json(telemetry.metrics, args.metrics_json,
                                extra={"engine": {"stats": s, "cache": cs,
                                                  "spec": ss}})

@@ -25,6 +25,12 @@ from __future__ import annotations
 import contextlib
 from typing import Dict, List, Optional
 
+from repro.obs.compression import (
+    NULL_COMPRESSION_TELEMETRY,
+    CompressionTelemetry,
+    DecompositionReport,
+    gram_activation_stats,
+)
 from repro.obs.metrics import (
     COUNT_BUCKETS,
     FRACTION_BUCKETS,
@@ -41,6 +47,8 @@ from repro.obs.trace import PID_ENGINE, PID_REQUESTS, EventTracer
 
 __all__ = [
     "Telemetry", "NULL_TELEMETRY", "disabled",
+    "CompressionTelemetry", "DecompositionReport",
+    "NULL_COMPRESSION_TELEMETRY", "gram_activation_stats",
     "EventTracer", "MetricsRegistry", "MetricsServer",
     "Counter", "Gauge", "Histogram", "ProfileCapture",
     "annotation", "wrap_root", "write_metrics_json",

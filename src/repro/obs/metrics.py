@@ -282,9 +282,10 @@ def _escape(v: str) -> str:
 
 class MetricsServer:
     """Minimal scrape endpoint: ``GET /metrics`` serves the Prometheus
-    text exposition, ``GET /metrics.json`` the snapshot dict.  Runs on a
-    daemon thread; ``port=0`` binds an ephemeral port (``.port`` reports
-    the bound one)."""
+    text exposition, ``GET /metrics.json`` the snapshot dict, and
+    ``GET /healthz`` a liveness probe ("ok" while the server thread is
+    up).  Runs on a daemon thread; ``port=0`` binds an ephemeral port
+    (``.port`` reports the bound one)."""
 
     def __init__(self, source, port: int = 0, host: str = "127.0.0.1"):
         import http.server
@@ -300,6 +301,9 @@ class MetricsServer:
                 elif self.path.startswith("/metrics"):
                     body = prometheus().encode()
                     ctype = "text/plain; version=0.0.4; charset=utf-8"
+                elif self.path.startswith("/healthz"):
+                    body = b"ok\n"
+                    ctype = "text/plain; charset=utf-8"
                 else:
                     self.send_error(404)
                     return

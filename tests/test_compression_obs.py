@@ -1,0 +1,307 @@
+"""Compression-observability tests: telemetry is a pure observer.
+
+Load-bearing invariants: (1) compressed params are BIT-IDENTICAL with
+``CompressionTelemetry`` attached vs absent — diagnostics are computed
+from the finished factors, never fed back; (2) every planned TargetSpec
+yields a ``DecompositionReport`` with the full field set, exported both
+as the plan-level JSON artifact and as Prometheus families; (3) the
+diagnostics are honest — whitening can only help in activation space
+(outlier absorption >= -eps vs a rank-matched plain SVD), tail mass is
+the squared whitened error; (4) calibration telemetry sees a constructed
+outlier channel and the min_count/missing Gram fallbacks; (5) the
+GramStore schema stamp round-trips, legacy unstamped files load, and
+unknown-schema/corrupt files are rejected instead of misread."""
+
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CompressionConfig,
+    GramStore,
+    build_plan,
+    compress_params,
+)
+from repro.core.compress import GRAM_STORE_SCHEMA
+from repro.core.nsvd import decomposition_diagnostics, nested_compress
+from repro.core.plan import TargetSpec
+from repro.obs import NULL_COMPRESSION_TELEMETRY, CompressionTelemetry
+from repro.obs.compression import gram_activation_stats
+
+N_IN, N_OUT, LAYERS = 24, 16, 3
+
+
+def _tree_leaves(tree, prefix=()):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _tree_leaves(v, prefix + (k,))
+    else:
+        yield prefix, np.asarray(tree)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    rng = np.random.default_rng(0)
+    params = {
+        "blk": {
+            "wi": {"kernel": rng.standard_normal(
+                (LAYERS, N_IN, N_OUT)).astype(np.float32)},
+            "wo": {"kernel": rng.standard_normal(
+                (N_IN, N_OUT)).astype(np.float32)},
+        }
+    }
+    targets = [
+        TargetSpec(path=("blk", "wi"), in_dim=N_IN, out_dim=N_OUT,
+                   gram_key="g/in", stacked=(LAYERS,)),
+        TargetSpec(path=("blk", "wo"), in_dim=N_IN, out_dim=N_OUT,
+                   gram_key="g/out"),
+    ]
+    store = GramStore()
+    for key in ("g/in", "g/in/0", "g/in/1", "g/out"):
+        x = rng.standard_normal((200, N_IN))
+        x[:, 3] *= 10.0  # one hot outlier channel
+        store.update(key, x.T @ x, np.abs(x).sum(0), 200.0)
+    # "g/in/2" exists but starved below min_count (= N_IN // 4 = 6 rows):
+    # the stacked pass must fall back to the shared key for that slice.
+    x = rng.standard_normal((2, N_IN))
+    store.update("g/in/2", x.T @ x, np.abs(x).sum(0), 2.0)
+    cfg = CompressionConfig(method="nsvd1", ratio=0.3, dtype="float32",
+                            use_randomized=False)
+    plan = build_plan(targets, cfg)
+    return params, plan, store
+
+
+def test_params_bit_identical_with_telemetry(setup):
+    params, plan, store = setup
+    tel = CompressionTelemetry()
+    with_tel = compress_params(params, plan, store, telemetry=tel)
+    without = compress_params(params, plan, store)
+    null = compress_params(params, plan, store,
+                           telemetry=NULL_COMPRESSION_TELEMETRY)
+    a = dict(_tree_leaves(with_tel))
+    b = dict(_tree_leaves(without))
+    c = dict(_tree_leaves(null))
+    assert a.keys() == b.keys() == c.keys()
+    for k in a:
+        assert (a[k] == b[k]).all(), k
+        assert (a[k] == c[k]).all(), k
+
+
+def test_report_per_target_and_fields(setup):
+    params, plan, store = setup
+    tel = CompressionTelemetry()
+    compress_params(params, plan, store, telemetry=tel)
+    assert set(tel.reports) == {t.name for t in plan.targets}
+    for name, r in tel.reports.items():
+        assert r.rank == plan.ranks[name]
+        assert r.k1 + r.k2 == r.rank
+        assert r.k1 >= 1
+        assert 0.0 <= r.plain_rel_err <= 1.5
+        assert 0.0 <= r.whitened_rel_err <= 1.5
+        # per slice the tail mass IS the squared whitened error; the
+        # target aggregate averages each separately, so mean-of-squares
+        # >= square-of-mean (Jensen) is the invariant that survives
+        for s in r.slices:
+            assert s["sv_tail_mass"] == pytest.approx(
+                s["whitened_rel_err"] ** 2, rel=1e-9)
+        assert r.sv_tail_mass >= r.whitened_rel_err ** 2 - 1e-12
+        assert r.dense_params > r.factored_params > 0
+        assert r.achieved_ratio == pytest.approx(
+            1.0 - r.factored_params / r.dense_params)
+        assert r.seconds >= 0.0
+    # Stacked target: one slice record per layer, starved slice counted.
+    wi = tel.reports["blk/wi"]
+    assert len(wi.slices) == LAYERS
+    assert wi.gram_fallback_slices == 1
+    assert tel.reports["blk/wo"].gram_fallback_slices == 0
+
+
+def test_whitening_beats_plain_svd_in_activation_space(setup):
+    """The paper's mechanism: the activation-aware step absorbs the
+    outlier channel, so its activation-weighted error never exceeds a
+    rank-matched plain SVD's (absorption ratio >= -eps)."""
+    params, plan, store = setup
+    tel = CompressionTelemetry()
+    compress_params(params, plan, store, telemetry=tel)
+    for r in tel.reports.values():
+        assert not math.isnan(r.outlier_absorption)
+        assert r.outlier_absorption >= -1e-9
+        for s in r.slices:
+            assert s["outlier_absorption"] >= -1e-9
+
+
+def test_plan_report_artifact_and_prometheus(setup, tmp_path):
+    params, plan, store = setup
+    tel = CompressionTelemetry()
+    tel.on_calib_store(store)
+    compress_params(params, plan, store, telemetry=tel)
+
+    path = tmp_path / "report.json"
+    doc = tel.write_report(str(path), plan=plan)
+    loaded = json.loads(path.read_text())
+    assert loaded["schema"] == 1
+    assert {t["target"] for t in loaded["targets"]} == \
+        {t.name for t in plan.targets}
+    tot = loaded["totals"]
+    assert tot["targets"] == len(plan.targets)
+    assert 0.0 < tot["achieved_ratio"] < 1.0
+    assert tot["gram_fallback_slices"] == 1
+    assert loaded["plan"]["ranks"] == dict(plan.ranks)
+    assert "g/in" in loaded["calibration"]
+    # json round-trip must be strict-parser safe (no NaN/Infinity tokens)
+    json.loads(path.read_text(), parse_constant=lambda c: pytest.fail(c))
+    assert doc["totals"]["targets"] == tot["targets"]
+
+    text = tel.metrics.prometheus_text()
+    for fam in ("compress_plain_rel_err", "compress_whitened_rel_err",
+                "compress_sv_tail_mass", "compress_outlier_absorption",
+                "compress_rank_achieved", "compress_rank_requested",
+                "compress_factored_params", "compress_targets_total",
+                "compress_gram_fallbacks_total",
+                "compress_calib_outlier_channel_frac",
+                "compress_calib_gram_condition_number"):
+        assert fam in text, fam
+    for t in plan.targets:
+        assert f'target="{t.name}"' in text
+
+
+def test_calibration_outlier_stats(setup):
+    _, _, store = setup
+    stats = gram_activation_stats(
+        store.gram("g/in"), store.absmean("g/in"), store.count("g/in"))
+    assert stats["channels"] == N_IN
+    assert stats["samples"] == 200.0
+    # exactly the one scaled channel crosses 2x and 4x the mean; none 8x
+    assert stats["outlier_frac"][2.0] == pytest.approx(1 / N_IN)
+    assert stats["outlier_frac"][4.0] == pytest.approx(1 / N_IN)
+    assert stats["outlier_frac"][8.0] == 0.0
+    assert stats["absmean_max"] > 4 * stats["absmean_mean"]
+    assert stats["gram_cond"] > 10.0 and math.isfinite(stats["gram_cond"])
+    assert 0.0 < stats["gram_rank_frac"] <= 1.0
+
+
+def test_calib_hooks_fill_registry(setup):
+    _, _, store = setup
+    tel = CompressionTelemetry()
+    tel.on_calib_batch({"g/in": 320, "g/out": 320})
+    tel.on_calib_batch({"g/in": 320, "g/out": 320})
+    tel.on_calib_store(store)
+    snap = tel.metrics.snapshot()
+    assert snap["compress_calib_batches_total"]["series"][0]["value"] == 2
+    rows = {tuple(sorted(s["labels"].items())): s["value"]
+            for s in snap["compress_calib_rows_total"]["series"]}
+    assert rows[(("tap", "g/in"),)] == 640
+    assert set(tel.calib) == set(store.keys())
+
+
+def test_decomposition_diagnostics_consistency():
+    rng = np.random.default_rng(3)
+    a = rng.standard_normal((N_OUT, N_IN))
+    x = rng.standard_normal((500, N_IN))
+    x[:, 1] *= 8.0
+    gram = x.T @ x
+    k = 6
+    factors = nested_compress(a, k, "nsvd1", gram=gram, k1_frac=0.9,
+                              use_randomized=False)
+    d = decomposition_diagnostics(a, factors, gram=gram,
+                                  use_randomized=False)
+    assert d["rank"] == k
+    assert d["k1"] + d["k2"] == k
+    # whitened_rel_err matches the direct activation-space computation
+    approx = factors.matrix()
+    num = np.linalg.norm((a - approx) @ x.T, "fro")
+    den = np.linalg.norm(a @ x.T, "fro")
+    assert d["whitened_rel_err"] == pytest.approx(num / den, rel=1e-6)
+    assert d["sv_tail_mass"] == pytest.approx((num / den) ** 2, rel=1e-6)
+    # without a Gram only weight-space numbers exist
+    d2 = decomposition_diagnostics(a, factors, gram=None)
+    assert math.isnan(d2["whitened_rel_err"])
+    assert d2["plain_rel_err"] == pytest.approx(d["plain_rel_err"])
+    # compare_plain=False skips the extra SVD
+    d3 = decomposition_diagnostics(a, factors, gram=gram,
+                                   compare_plain=False)
+    assert math.isnan(d3["outlier_absorption"])
+
+
+# ---------------------------------------------------------------- GramStore
+
+
+def test_gramstore_schema_roundtrip(setup, tmp_path):
+    _, _, store = setup
+    path = tmp_path / "grams.npz"
+    store.save(str(path))
+    data = np.load(path)
+    assert int(data["__schema__"]) == GRAM_STORE_SCHEMA
+    loaded = GramStore.load(str(path))
+    assert set(loaded.keys()) == set(store.keys())
+    for k in store.keys():
+        np.testing.assert_array_equal(loaded.gram(k), store.gram(k))
+        np.testing.assert_array_equal(loaded.absmean(k), store.absmean(k))
+        assert loaded.count(k) == store.count(k)
+    # fallback decisions survive the round trip
+    assert loaded.resolve("g/in/2", fallback="g/in", min_count=6) == \
+        ("g/in", "min_count")
+    assert loaded.resolve("g/in/9", fallback="g/in") == ("g/in", "missing")
+    assert loaded.resolve("g/in/0", fallback="g/in", min_count=6) == \
+        ("g/in/0", None)
+
+
+def test_gramstore_legacy_unstamped_load(setup, tmp_path):
+    _, _, store = setup
+    path = tmp_path / "legacy.npz"
+    np.savez_compressed(  # schema-1 layout: same arrays, no stamp
+        path,
+        **{f"g::{k}": store.gram(k) for k in store.keys()},
+        **{f"a::{k}": store._absmean[k] for k in store.keys()},
+        **{f"c::{k}": np.asarray(store.count(k)) for k in store.keys()},
+    )
+    loaded = GramStore.load(str(path))
+    assert set(loaded.keys()) == set(store.keys())
+    np.testing.assert_array_equal(loaded.gram("g/in"), store.gram("g/in"))
+
+
+def test_gramstore_rejects_unknown_schema(tmp_path):
+    path = tmp_path / "future.npz"
+    np.savez_compressed(path, __schema__=np.asarray(GRAM_STORE_SCHEMA + 1))
+    with pytest.raises(ValueError, match="schema"):
+        GramStore.load(str(path))
+
+
+def test_gramstore_rejects_corrupt_file(tmp_path):
+    g = np.eye(4)
+    path = tmp_path / "missing_count.npz"
+    np.savez_compressed(path, **{"g::k": g, "a::k": np.ones(4)})
+    with pytest.raises(ValueError, match="corrupt"):
+        GramStore.load(str(path))
+    path2 = tmp_path / "shape_mismatch.npz"
+    np.savez_compressed(path2, **{"g::k": g, "a::k": np.ones(3),
+                                  "c::k": np.asarray(1.0)})
+    with pytest.raises(ValueError, match="corrupt"):
+        GramStore.load(str(path2))
+
+
+# --------------------------------------------------------------- plan summary
+
+
+def test_plan_summary_achieved_vs_requested(setup):
+    _, plan, _ = setup
+    rows = plan.target_rows()
+    assert {r["target"] for r in rows} == {t.name for t in plan.targets}
+    for r in rows:
+        assert r["rank"] >= 1
+        assert r["ratio_delta"] == pytest.approx(
+            r["achieved_ratio"] - plan.config.ratio)
+    text = plan.summary()
+    assert "delta" in text
+    for t in plan.targets:
+        assert t.name in text
+
+    # rank alignment forces achieved != requested; summary surfaces it
+    cfg = CompressionConfig(method="nsvd1", ratio=0.3, multiple_of=4,
+                            dtype="float32", use_randomized=False)
+    aligned = build_plan(plan.targets, cfg)
+    arows = aligned.target_rows()
+    assert any(r["rank"] != r["requested_rank"] for r in arows)
+    assert "requested" in aligned.summary()

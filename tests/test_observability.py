@@ -12,6 +12,7 @@ Chrome trace, JSONL) and the ring buffer is bounded with an honest
 dropped count."""
 
 import json
+import urllib.error
 import urllib.request
 from collections import Counter as MultiSet
 
@@ -261,6 +262,50 @@ class TestEventStream:
         assert len(lines) == len(eng.obs.tracer)
         assert all("name" in ln and "ts" in ln for ln in lines)
 
+    def test_chrome_trace_on_empty_ring(self, tmp_path):
+        """A tracer that never recorded must still export a loadable
+        trace: just the process-name metadata, honest zero counts."""
+        tr = EventTracer(capacity=4)
+        doc = tr.chrome_trace()
+        assert all(e["ph"] == "M" for e in doc["traceEvents"])
+        assert doc["otherData"] == {"dropped_events": 0, "total_events": 0}
+        p = tmp_path / "empty.json"
+        tr.export_chrome(str(p))
+        assert json.loads(p.read_text())["traceEvents"]
+        p2 = tmp_path / "empty.jsonl"
+        tr.export_jsonl(str(p2))
+        assert p2.read_text() == ""
+
+    def test_instant_timestamps_monotone(self):
+        """Auto-stamped instants never go backwards, and an explicit
+        ts_us override lands verbatim (the engine backdates nothing)."""
+        tr = EventTracer()
+        for i in range(50):
+            tr.instant(f"e{i}", "step")
+        ts = [e.ts_us for e in tr.events()]
+        assert ts == sorted(ts)
+        assert all(t >= 0.0 for t in ts)
+        tr.instant("pinned", "step", ts_us=123.5)
+        assert tr.events()[-1].ts_us == 123.5
+
+    def test_chrome_events_carry_required_keys(self):
+        """Perfetto's legacy loader needs name/ph/ts/pid/tid on every
+        event, dur on X (complete) and a scope on i (instant)."""
+        tr = EventTracer()
+        tr.instant("inst", "cat", pid=1, tid=7, args={"k": 1})
+        tr.complete("span", "cat", dur_s=0.002, pid=0, tid=3)
+        evs = [e.to_chrome() for e in tr.events()]
+        for e in evs:
+            assert {"name", "cat", "ph", "ts", "pid", "tid"} <= e.keys()
+        inst = next(e for e in evs if e["ph"] == "i")
+        assert inst["s"] == "t" and "dur" not in inst
+        assert inst["args"] == {"k": 1}
+        span = next(e for e in evs if e["ph"] == "X")
+        assert span["dur"] == pytest.approx(2000.0)
+        # complete() backdates the start by dur: end = ts + dur is "now"
+        assert span["ts"] + span["dur"] >= inst["ts"]
+        assert "s" not in span
+
 
 # ----------------------------------------------------- metrics registry
 
@@ -320,6 +365,25 @@ class TestMetrics:
                 assert doc["smoke_total"]["series"][0]["value"] == 3
         finally:
             srv.close()
+
+    def test_metrics_server_healthz_and_shutdown(self):
+        """/healthz answers while the server lives; close() releases the
+        port (a daemon thread must not linger holding the socket)."""
+        reg = MetricsRegistry()
+        srv = MetricsServer(reg, port=0)
+        try:
+            with urllib.request.urlopen(
+                    f"http://127.0.0.1:{srv.port}/healthz") as r:
+                assert r.status == 200
+                assert r.read() == b"ok\n"
+            with pytest.raises(urllib.error.HTTPError):
+                urllib.request.urlopen(
+                    f"http://127.0.0.1:{srv.port}/nope")
+        finally:
+            srv.close()
+        with pytest.raises(urllib.error.URLError):
+            urllib.request.urlopen(
+                f"http://127.0.0.1:{srv.port}/healthz", timeout=2)
 
 
 # ---------------------------------------------- engine-side accounting

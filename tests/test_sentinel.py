@@ -1,0 +1,186 @@
+"""Regression-sentinel tests: a seeded regression must trip it.
+
+The sentinel only compares the NEWEST history entry against PRIOR entries
+at the same config hash (and mesh, for serving) — cross-machine absolute
+numbers never meet in one comparison.  These tests seed synthetic
+histories with a known tok/s drop and a known perplexity rise and pin the
+nonzero exit; the committed BENCH_serving.json / BENCH_quality.json must
+pass, since CI runs the sentinel on them after every append."""
+
+import json
+import os
+
+import pytest
+
+from benchmarks.sentinel import (
+    DEFAULT_PPL_THRESHOLD,
+    DEFAULT_TOK_THRESHOLD,
+    QUALITY_PATH,
+    SERVING_PATH,
+    check_quality,
+    check_serving,
+    load_history,
+    main,
+    run_sentinel,
+)
+
+MESH = {"dp": 1, "tp": 1, "devices": 1}
+
+
+def serving_entry(tok_paged=100.0, tok_spec=150.0, config_hash="cfgA",
+                  mesh=MESH, sha="aaa"):
+    return {
+        "git_sha": sha,
+        "config_hash": config_hash,
+        "mesh": dict(mesh),
+        "summary": {
+            "tok_per_s_paged": tok_paged,
+            "tok_per_s_spec": tok_spec,
+        },
+    }
+
+
+def quality_entry(ppl=None, config_hash="cfgQ", sha="aaa"):
+    return {
+        "git_sha": sha,
+        "config_hash": config_hash,
+        "compressed_ppl": dict(ppl or {"en_a": 30.0, "zh": 45.0}),
+    }
+
+
+def write_doc(path, entries):
+    with open(path, "w") as f:
+        json.dump({"schema": 1, "history": entries}, f)
+
+
+# ------------------------------------------------------------- serving side
+
+
+def test_serving_regression_detected():
+    hist = [serving_entry(tok_paged=100.0),
+            serving_entry(tok_paged=70.0, sha="bbb")]  # 0.7 < 0.8 bar
+    findings = check_serving(hist)
+    assert len(findings) == 1
+    f = findings[0]
+    assert f["metric"] == "tok_per_s_paged"
+    assert f["ratio"] == pytest.approx(0.7)
+    assert f["git_sha"] == "bbb"
+
+
+def test_serving_within_threshold_passes():
+    hist = [serving_entry(tok_paged=100.0),
+            serving_entry(tok_paged=85.0, sha="bbb")]
+    assert check_serving(hist) == []
+
+
+def test_serving_best_prior_is_the_bar():
+    # A slow middle run must not lower the bar set by the best prior.
+    hist = [serving_entry(tok_paged=100.0),
+            serving_entry(tok_paged=60.0, sha="mid"),
+            serving_entry(tok_paged=75.0, sha="new")]
+    findings = check_serving(hist)
+    assert [f["metric"] for f in findings] == ["tok_per_s_paged"]
+    assert findings[0]["baseline"] == 100.0
+
+
+def test_serving_mismatched_config_or_mesh_is_not_compared():
+    hist = [serving_entry(tok_paged=100.0, config_hash="other"),
+            serving_entry(tok_paged=10.0, sha="bbb")]
+    assert check_serving(hist) == []
+    hist = [serving_entry(tok_paged=100.0,
+                          mesh={"dp": 2, "tp": 2, "devices": 4}),
+            serving_entry(tok_paged=10.0, sha="bbb")]
+    assert check_serving(hist) == []
+
+
+# ------------------------------------------------------------- quality side
+
+
+def test_quality_regression_detected():
+    hist = [quality_entry({"en_a": 30.0, "zh": 45.0}),
+            quality_entry({"en_a": 36.0, "zh": 45.0}, sha="bbb")]  # 1.2x
+    findings = check_quality(hist)
+    assert len(findings) == 1
+    assert findings[0]["metric"] == "compressed_ppl/en_a"
+    assert findings[0]["ratio"] == pytest.approx(1.2)
+
+
+def test_quality_within_threshold_passes():
+    hist = [quality_entry({"en_a": 30.0}),
+            quality_entry({"en_a": 31.0}, sha="bbb")]
+    assert check_quality(hist) == []
+
+
+def test_quality_lowest_prior_is_the_bar():
+    hist = [quality_entry({"en_a": 30.0}),
+            quality_entry({"en_a": 50.0}, sha="mid"),
+            quality_entry({"en_a": 34.0}, sha="new")]  # 34 > 1.1 * 30
+    findings = check_quality(hist)
+    assert len(findings) == 1
+    assert findings[0]["baseline"] == 30.0
+
+
+def test_no_baseline_passes_vacuously():
+    assert check_serving([serving_entry()]) == []
+    assert check_quality([quality_entry()]) == []
+    assert check_serving([]) == [] and check_quality([]) == []
+
+
+# ------------------------------------------------------------ CLI / end2end
+
+
+def test_cli_exit_codes(tmp_path):
+    sp = tmp_path / "BENCH_serving.json"
+    qp = tmp_path / "BENCH_quality.json"
+    write_doc(sp, [serving_entry(100.0), serving_entry(95.0, sha="bbb")])
+    write_doc(qp, [quality_entry(), quality_entry(sha="bbb")])
+    assert main(["--serving", str(sp), "--quality", str(qp)]) == 0
+
+    write_doc(sp, [serving_entry(100.0), serving_entry(50.0, sha="bbb")])
+    assert main(["--serving", str(sp), "--quality", str(qp)]) == 1
+    # tightened quality threshold trips on an otherwise-passing history
+    write_doc(sp, [serving_entry(100.0)])
+    write_doc(qp, [quality_entry({"en_a": 30.0}),
+                   quality_entry({"en_a": 31.5}, sha="bbb")])
+    assert main(["--serving", str(sp), "--quality", str(qp),
+                 "--ppl-threshold", "1.01"]) == 1
+
+
+def test_cli_json_output(tmp_path, capsys):
+    sp = tmp_path / "s.json"
+    write_doc(sp, [serving_entry(100.0), serving_entry(10.0, sha="bbb")])
+    rc = main(["--serving", str(sp),
+               "--quality", str(tmp_path / "missing.json"), "--json"])
+    out = json.loads(capsys.readouterr().out)
+    assert rc == 1 and out["ok"] is False
+    assert out["findings"][0]["kind"] == "serving"
+
+
+def test_run_sentinel_missing_files(tmp_path):
+    ok, findings, ctx = run_sentinel(str(tmp_path / "a.json"),
+                                     str(tmp_path / "b.json"))
+    assert ok and findings == []
+    assert ctx["serving_entries"] == ctx["quality_entries"] == 0
+
+
+def test_committed_histories_pass():
+    """The repo's own bench histories must satisfy the sentinel — CI runs
+    it on them after every append."""
+    assert os.path.exists(SERVING_PATH), "BENCH_serving.json missing"
+    ok, findings, ctx = run_sentinel()
+    assert ok, f"committed bench history regressed: {findings}"
+    assert ctx["serving_entries"] >= 1
+    assert 0 < DEFAULT_TOK_THRESHOLD < 1 < DEFAULT_PPL_THRESHOLD
+
+
+def test_committed_serving_history_well_formed():
+    hist = load_history(SERVING_PATH)
+    assert hist, "serving history unreadable"
+    # Entries older than the stamping scheme may lack the hash (they just
+    # never match a comparison); everything recent must carry it.
+    assert "config_hash" in hist[-1] and "git_sha" in hist[-1]
+    if os.path.exists(QUALITY_PATH):
+        qhist = load_history(QUALITY_PATH)
+        assert qhist
+        for e in qhist:
+            assert "config_hash" in e and "compressed_ppl" in e
