@@ -46,7 +46,7 @@ import numpy as np
 from .common import get_grams, save_table, train_small_lm
 
 BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json")
-BENCH_SCHEMA = 6
+BENCH_SCHEMA = 7
 
 _UNSHARDED_MESH = {"dp": 1, "tp": 1, "devices": 1}
 
@@ -63,7 +63,12 @@ def _migrate_entry(entry: Dict) -> Dict:
     block (TTFT/TPOT percentiles, occupancy, spec win/loss per (k,
     acceptance)) and no per-run serving-kernel roofline stamp — both
     ``null``; fresh entries record them from the repro.obs layer and
-    ``benchmarks.roofline.serving_kernel_rows_for_cfg``."""
+    ``benchmarks.roofline.serving_kernel_rows_for_cfg``.  Schema 6 -> 7:
+    pre-scheduler rows ran the worst-case admission contract and never
+    preempted — stamp ``admission_policy="worst_case"``,
+    ``preempt_count=0`` and null occupancy (live/reserved was not
+    measured); fresh rows record all three from
+    ``engine.scheduler_stats()``."""
     if "mesh" not in entry:
         entry = dict(entry, mesh=dict(_UNSHARDED_MESH))
         entry["rows"] = [
@@ -74,6 +79,11 @@ def _migrate_entry(entry: Dict) -> Dict:
     entry["rows"] = [
         dict({"pipeline_depth": 1, "step_device_wait_ms": None,
               "step_host_ms": None}, **r)
+        for r in entry.get("rows", [])
+    ]
+    entry["rows"] = [
+        dict({"admission_policy": "worst_case", "occupancy_live_frac": None,
+              "preempt_count": 0, "mean_live_rows": None}, **r)
         for r in entry.get("rows", [])
     ]
     if "audit" not in entry:
@@ -137,7 +147,8 @@ def drive(model, params, prompts, label: str, max_batch: int, max_len: int,
           max_new: int, warmup: int = 1, paged: bool = False,
           num_blocks=None, block_size: int = 16,
           spec_config=None, parallelism=None,
-          pipeline_depth: int = 1, telemetry=None) -> Dict[str, float]:
+          pipeline_depth: int = 1, telemetry=None,
+          sched_config=None, max_new_seq=None) -> Dict[str, float]:
     from repro.serving.engine import ServingEngine
 
     def make_engine(tel=None):
@@ -147,7 +158,8 @@ def drive(model, params, prompts, label: str, max_batch: int, max_len: int,
                              spec_config=spec_config,
                              parallelism=parallelism,
                              pipeline_depth=pipeline_depth,
-                             telemetry=tel)
+                             telemetry=tel,
+                             sched_config=sched_config)
 
     # Warmup pass triggers all jit compilations (prefill + decode) so the
     # timed pass measures steady-state serving.
@@ -160,8 +172,9 @@ def drive(model, params, prompts, label: str, max_batch: int, max_len: int,
     # Telemetry (when requested) observes only the timed pass — warmup
     # compilations would skew the TTFT/TPOT histograms by seconds.
     eng = make_engine(telemetry)
-    for p in prompts:
-        eng.submit(p, max_new_tokens=max_new)
+    for i, p in enumerate(prompts):
+        eng.submit(p, max_new_tokens=max_new_seq[i % len(max_new_seq)]
+                   if max_new_seq else max_new)
     t0 = time.perf_counter()
     out = eng.run()
     dt = time.perf_counter() - t0
@@ -191,6 +204,14 @@ def drive(model, params, prompts, label: str, max_batch: int, max_len: int,
         "cache_tokens_capacity": cs["tokens_capacity"],
         "mesh": cs["mesh"],
     }
+    # Schema-7 scheduler stamp: which admission contract the row ran,
+    # how much of the reserved pool held live tokens, and whether the
+    # run had to preempt (always 0 when the pool covers worst case).
+    sch = eng.scheduler_stats()
+    row["admission_policy"] = sch["admission_policy"]
+    row["occupancy_live_frac"] = sch["occupancy_live_frac"]
+    row["preempt_count"] = sch["preempt_count"]
+    row["mean_live_rows"] = sch["mean_live_rows"]
     if paged:
         row["blocks_peak"] = cs["blocks_peak"]
         row["block_size"] = cs["block_size"]
@@ -297,6 +318,39 @@ def run(model_name: str = "small-llama", requests: int = 24, max_new: int = 24,
         parallelism=parallelism, pipeline_depth=2,
     ))
 
+    # Overcommit rows: a mixed long/short workload against a pool HALF
+    # the batch's worst-case demand (demand 2x pool).  The worst_case
+    # baseline can only admit rows whose full prompt+max_new reservation
+    # fits, so the batch runs part-empty; on-demand admission packs the
+    # batch on prompt-sized footprints, grows per decode step, and
+    # preempts the fattest row when the pool runs dry — higher mean live
+    # rows, higher live/reserved occupancy, higher tok/s at the SAME
+    # pool size.  Budgets alternate long/short (real traffic is not
+    # uniformly worst-case — exactly the pessimism on-demand reclaims).
+    from repro.serving.scheduler import SchedulerConfig
+
+    short_new = max(2, max_new // 3)
+    over_budgets = [max_new, short_new]
+    longest = max(len(p) for p in prompts)
+    long_b = -(-(longest + max_new) // block_size)
+    short_b = -(-(longest + short_new) // block_size)
+    demand_blocks = (max_batch // 2) * (long_b + short_b) \
+        + (max_batch % 2) * long_b
+    over_blocks = demand_blocks // 2
+    over_wc = drive(model, cparams, prompts, f"{nsvd}+over-wc", max_batch,
+                    max_len, max_new, paged=True, num_blocks=over_blocks,
+                    block_size=block_size, parallelism=parallelism,
+                    pipeline_depth=2, max_new_seq=over_budgets,
+                    sched_config=SchedulerConfig(admission="worst_case",
+                                                 preempt=False))
+    over_od = drive(model, cparams, prompts, f"{nsvd}+over-od", max_batch,
+                    max_len, max_new, paged=True, num_blocks=over_blocks,
+                    block_size=block_size, parallelism=parallelism,
+                    pipeline_depth=2, max_new_seq=over_budgets,
+                    sched_config=SchedulerConfig(admission="on_demand",
+                                                 preempt=True))
+    rows.extend([over_wc, over_od])
+
     meta = {"model": model_name, "ratio": ratio, "draft_ratio": draft_ratio,
             "spec_k": spec_k, "max_batch": max_batch, "max_len": max_len,
             "max_new": max_new, "requests": requests,
@@ -344,9 +398,32 @@ def run(model_name: str = "small-llama", requests: int = 24, max_new: int = 24,
             "cache_bytes_dense_slab": dense_b,
             "cache_bytes_paged": paged_b,
             "cache_bytes_ratio": dense_b / max(1, paged_b),
+            # The scheduler's headline: same pool, same workload, the
+            # admission policy alone decides how full the batch runs.
+            "overcommit": {
+                "pool_blocks": over_blocks,
+                "demand_blocks": demand_blocks,
+                "budgets": over_budgets,
+                "tok_per_s_worst_case": over_wc["tok_per_s"],
+                "tok_per_s_on_demand": over_od["tok_per_s"],
+                "mean_live_rows_worst_case": over_wc["mean_live_rows"],
+                "mean_live_rows_on_demand": over_od["mean_live_rows"],
+                "occupancy_live_frac_worst_case":
+                    over_wc["occupancy_live_frac"],
+                "occupancy_live_frac_on_demand":
+                    over_od["occupancy_live_frac"],
+                "preempt_count_on_demand": over_od["preempt_count"],
+            },
         },
     }
     doc = append_history(entry)
+    oc = entry["summary"]["overcommit"]
+    print(f"  overcommit (pool {over_blocks} blocks, worst-case demand "
+          f"{demand_blocks}): worst_case {oc['tok_per_s_worst_case']:.1f} "
+          f"tok/s @ {oc['mean_live_rows_worst_case']:.1f} live rows vs "
+          f"on_demand {oc['tok_per_s_on_demand']:.1f} tok/s @ "
+          f"{oc['mean_live_rows_on_demand']:.1f} "
+          f"({oc['preempt_count_on_demand']} preempts)")
     print(f"  cache HBM: dense-slab {dense_b/1e6:.2f}MB vs paged "
           f"{paged_b/1e6:.2f}MB ({entry['summary']['cache_bytes_ratio']:.1f}x) "
           f"| spec accept={spec_row['acceptance_rate']:.0%} "

@@ -31,6 +31,16 @@ every operation it asserts:
   * defrag soundness — the move map returned by ``defrag()`` preserves
     per-owner block counts and conservation.
 
+The scheduler PR widened the operation alphabet: ``grow`` (on-demand
+block growth — legal mid-flight, appending never invalidates an older
+entry), ``preempt`` (victim eviction, reprefill or swap flavour —
+requires a drained ring exactly like admission/defrag), and ``resume``
+(re-admission of a preempted slot; a swap resume must get back exactly
+the block count it saved).  A per-slot reservation ledger is checked
+against the real allocator after every move, so an engine that grows a
+row twice while recording the growth once (``double_grow``) is caught
+as ledger drift even though block conservation still holds.
+
 ``bug=`` injects a deliberate violation of one convention so tests can
 prove the checker actually catches each class (see ``BUGS``)."""
 
@@ -48,6 +58,8 @@ BUGS = (
     "free_on_dispatch",  # blocks freed at dispatch while step is in flight
     "leak_on_retire",    # retire drops the slot without freeing its blocks
     "admit_unsynced",    # admission without draining the ring first
+    "double_grow",       # grow allocates twice but records one block
+    "preempt_in_flight", # preemption without draining the ring first
 )
 
 _Entry = FrozenSet[int]          # active-row mask at dispatch
@@ -101,15 +113,23 @@ class _Model:
         self.bug = bug
         self.host_live: FrozenSet[int] = frozenset()
         self.ring: Tuple[_Entry, ...] = ()
+        # scheduler's ledger: expected block count per live slot
+        self.lengths: Dict[int, int] = {}
+        # preempted slots awaiting resume: slot -> (mode, saved_blocks)
+        self.preempted: Dict[int, Tuple[str, int]] = {}
 
     # ------------------------------------------------------------- state io
 
     def key(self):
-        return (_snapshot(self.alloc), self.host_live, self.ring)
+        return (_snapshot(self.alloc), self.host_live, self.ring,
+                tuple(sorted(self.lengths.items())),
+                tuple(sorted(self.preempted.items())))
 
     def set_key(self, key) -> None:
-        snap, self.host_live, self.ring = key
+        snap, self.host_live, self.ring, lengths, preempted = key
         _restore(self.alloc, snap)
+        self.lengths = dict(lengths)
+        self.preempted = dict(preempted)
 
     # ----------------------------------------------------------- invariants
 
@@ -136,6 +156,19 @@ class _Model:
                 violations.append(
                     f"{op}: live slots {naked} own no blocks (cache space "
                     "freed under an active request)")
+        for s in sorted(self.host_live):
+            want = self.lengths.get(s)
+            got = len(a.owned_by(s))
+            if want is not None and got != want:
+                violations.append(
+                    f"{op}: slot {s} owns {got} blocks but the scheduler "
+                    f"ledger says {want} (reservation drift — a double "
+                    "grow or unrecorded shrink)")
+        for s in sorted(self.preempted):
+            if a.owned_by(s):
+                violations.append(
+                    f"{op}: preempted slot {s} still owns blocks "
+                    f"{a.owned_by(s)} (eviction must release everything)")
         for i in range(1, len(self.ring)):
             if not self.ring[i] <= self.ring[i - 1]:
                 violations.append(
@@ -152,14 +185,27 @@ class _Model:
         admit_ok = (not self.ring) or self.bug == "admit_unsynced"
         if admit_ok:
             for s in range(self.num_slots):
-                if s not in self.host_live:
+                if s not in self.host_live and s not in self.preempted:
                     out.append(("admit", s))
+            for s in sorted(self.preempted):
+                out.append(("resume", s))
         if len(self.ring) < self.depth and self.host_live:
             out.append(("dispatch", None))
         if self.ring:
             mask = self.ring[0]
             for fin in _subsets(mask & self.host_live):
                 out.append(("consume", frozenset(fin)))
+        # On-demand growth appends blocks to a live reservation; it is
+        # legal mid-flight (older entries reference a PREFIX of the
+        # grown reservation, never the new blocks).
+        for s in sorted(self.host_live):
+            if self.alloc.free_blocks(0) > 0:
+                out.append(("grow", s))
+        preempt_ok = (not self.ring) or self.bug == "preempt_in_flight"
+        if preempt_ok:
+            for s in sorted(self.host_live):
+                out.append(("preempt", (s, "reprefill")))
+                out.append(("preempt", (s, "swap")))
         if not self.ring:
             for s in sorted(self.host_live):
                 if len(self.alloc.owned_by(s)) > 1:
@@ -176,6 +222,45 @@ class _Model:
                 ids = a.alloc(arg, 1)       # backpressure: try smaller
             if ids is not None:
                 self.host_live = self.host_live | {arg}
+                self.lengths[arg] = len(ids)
+        elif op == "grow":
+            got = a.grow(arg, 1)
+            if got is not None:
+                if self.bug == "double_grow":
+                    a.grow(arg, 1)          # second alloc, never recorded
+                self.lengths[arg] += 1
+        elif op == "preempt":
+            s, mode = arg
+            if any(s in entry for entry in self.ring):
+                violations.append(
+                    f"preempt: evicting slot {s} while an in-flight step "
+                    "still references it — the device can write blocks "
+                    "the pool has already handed out")
+            freed = a.free(s)
+            if not freed:
+                violations.append(
+                    f"preempt: evicting slot {s} freed NO blocks")
+            saved = len(freed)
+            self.preempted[s] = (mode, saved)
+            self.host_live = self.host_live - {s}
+            self.lengths.pop(s, None)
+        elif op == "resume":
+            mode, saved = self.preempted[arg]
+            if mode == "swap":
+                # swap restore needs exactly the saved context back
+                ids = a.alloc(arg, saved)
+                if ids is not None and len(ids) != saved:
+                    violations.append(
+                        f"resume: swap slot {arg} got {len(ids)} blocks, "
+                        f"saved {saved}")
+            else:
+                ids = a.alloc(arg, 2)
+                if ids is None:
+                    ids = a.alloc(arg, 1)   # reprefill can shrink its ask
+            if ids is not None:
+                self.host_live = self.host_live | {arg}
+                self.lengths[arg] = len(ids)
+                del self.preempted[arg]
         elif op == "dispatch":
             self.ring = self.ring + (self.host_live,)
             if self.bug == "free_on_dispatch" and self.host_live:
@@ -202,8 +287,10 @@ class _Model:
                     for b in freed:
                         a._free[a.home_shard(b)].remove(b)
                     self.host_live = self.host_live - {s}
+                self.lengths.pop(s, None)
         elif op == "rollback":
             a.release_suffix(arg, 1)
+            self.lengths[arg] = 1
         elif op == "defrag":
             before = {k: len(v) for k, v in a._owned.items()}
             moves = a.defrag()

@@ -56,6 +56,23 @@ def main():
                     help="speculation window: draft tokens per step")
     ap.add_argument("--spec-dynamic-k", action="store_true",
                     help="per-row adaptive speculation windows")
+    ap.add_argument("--sched-policy", choices=("on_demand", "worst_case"),
+                    default="on_demand",
+                    help="paged admission policy: on_demand admits on "
+                         "prompt-sized reservations and grows per decode "
+                         "step at block boundaries; worst_case reserves "
+                         "prompt+max_new up front (the pre-scheduler "
+                         "contract)")
+    ap.add_argument("--priority-classes", default=None, metavar="A,B,...",
+                    help="comma-separated latency classes, highest "
+                         "priority first (default: single 'default' "
+                         "class, plain FIFO); requests here all land in "
+                         "the lowest class")
+    ap.add_argument("--no-preempt", action="store_true",
+                    help="never evict a live row when the block pool runs "
+                         "dry: starved rows stall (frozen on device) "
+                         "until blocks free up, and a genuine full-pool "
+                         "deadlock raises instead of thrashing")
     ap.add_argument("--pipeline-depth", type=int, default=None,
                     help="in-flight decode steps (default 2, or the "
                          "REPRO_SERVING_PIPELINE_DEPTH env var): the engine "
@@ -201,6 +218,15 @@ def main():
         print(f"audit: {len(rows)} {layout} roots clean "
               "(transfers/donation/sharding/dtypes)")
 
+    from repro.serving.scheduler import SchedulerConfig
+
+    sched_config = SchedulerConfig(
+        admission=args.sched_policy,
+        preempt=not args.no_preempt,
+        priority_classes=tuple(
+            c.strip() for c in args.priority_classes.split(",") if c.strip())
+        if args.priority_classes else ("default",),
+    )
     eng = ServingEngine(model, params, max_batch=args.max_batch,
                         max_len=args.max_len, seed=args.seed,
                         paged={"auto": None, "on": True, "off": False}[args.paged],
@@ -212,7 +238,8 @@ def main():
                         parallelism=parallelism,
                         pipeline_depth=args.pipeline_depth,
                         transfer_guard=args.transfer_guard or None,
-                        telemetry=telemetry)
+                        telemetry=telemetry,
+                        sched_config=sched_config)
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
         eng.submit(rng.integers(2, cfg.vocab_size // 2, size=8),
@@ -251,6 +278,14 @@ def main():
                if mesh_s["devices"] > 1 else "")
     print(f"cache[{cs['layout']}]: {cs['cache_hbm_bytes']/1e6:.2f}MB{per_dev}, "
           f"capacity {cs['tokens_capacity']} tok{extra}")
+    sch = eng.scheduler_stats()
+    if cs["layout"] == "paged":
+        occ = sch["occupancy_live_frac"]
+        occ_s = f"{occ:.0%}" if occ is not None else "n/a"
+        print(f"sched[{sch['admission_policy']}]: live/reserved {occ_s}, "
+              f"{sch['preempt_count']} preempts, {sch['resumes']} resumes, "
+              f"{sch['grown_blocks']} grown blocks, {sch['stalls']} stalls, "
+              f"swap {sch['swap_bytes']/1e6:.2f}MB")
     ss = eng.spec_stats()
     if ss:
         print(f"spec[k={ss['k']}]: acceptance {ss['acceptance_rate']:.0%}, "

@@ -192,13 +192,14 @@ def set_cache_rows(cache, rows, slots: jax.Array):
 
 
 def _sample_advance_exit(logits, last_token, cache_len, budget, key_data,
-                         act, temps, eos, max_len):
+                         active, host_keep, temps, eos, max_len):
     """Shared decode-step tail: batched sampling, inactive-row masking,
     per-row length advance, and the device-side finish update (EOS sample,
     exhausted token budget, or the max_len-1 cache bound — every reason a
     host would retire the row).  Both decode builders (dense slab and
     paged) MUST share this so their sampling/exit semantics cannot
     diverge."""
+    act = jnp.logical_and(active, host_keep)
     new_kd, sampled = sample_tokens(key_data, logits[:, 0], temps)
     # Inactive rows FREEZE all their per-slot state — token, length,
     # budget, and PRNG key alike.  The key freeze is what makes extra
@@ -211,7 +212,13 @@ def _sample_advance_exit(logits, last_token, cache_len, budget, key_data,
     cache_len = cache_len + adv
     budget = budget - adv
     alive = jnp.logical_and(budget > 0, cache_len < max_len - 1)
-    active = jnp.logical_and(jnp.logical_and(act, sampled != eos), alive)
+    # The active flag FREEZES too for host-masked rows (retired rows are
+    # already device-dead, so freezing matches the old always-clear there):
+    # a live row the scheduler temporarily withholds — stalled on block
+    # growth — must still be device-active when dispatches resume, not
+    # permanently retired by the masked no-op steps in between.
+    new_active = jnp.logical_and(jnp.logical_and(act, sampled != eos), alive)
+    active = jnp.where(host_keep, new_active, active)
     return sampled, cache_len, budget, key_data, active
 
 
@@ -239,8 +246,8 @@ def make_decode_sample_step(model: Model, max_len: int) -> Callable:
             cache=cache, cache_len=cache_len,
         )
         sampled, cache_len, budget, key_data, active = _sample_advance_exit(
-            logits, last_token, cache_len, budget, key_data, act, temps,
-            eos, max_len,
+            logits, last_token, cache_len, budget, key_data, active,
+            host_keep, temps, eos, max_len,
         )
         return sampled, cache, cache_len, budget, key_data, active
 
@@ -261,7 +268,8 @@ def make_paged_decode_step(model: Model, max_len: int) -> Callable:
     correctness requirement, not an optimization."""
 
     def paged_decode_step(params, pools, block_tables, last_token, cache_len,
-                          budget, key_data, active, host_keep, temps, eos):
+                          budget, key_data, active, host_keep, temps, eos,
+                          row_order):
         act = jnp.logical_and(active, host_keep)
         bt_eff = jnp.where(act[:, None], block_tables, -1)
         # Zero dead rows' lengths for the attention call only (real
@@ -270,13 +278,22 @@ def make_paged_decode_step(model: Model, max_len: int) -> Callable:
         # the LONGEST length in each row pack — one stale 16-page row
         # would drag its whole pack through 16 junk-page DMAs per step.
         cl_eff = jnp.where(act, cache_len, 0)
-        logits, pools, _ = model.apply(
-            params, last_token[:, None], mode="decode",
-            cache=pools, cache_len=cl_eff, block_tables=bt_eff,
+        # Attention runs in scheduler-chosen row order (longest-first per
+        # DP shard, dead rows last) so each packed-kernel row pack shares
+        # page-loop trip counts.  Per-row math is row-independent, so
+        # un-permuting the logits makes the permutation invisible to
+        # sampling — and every donated array stays in slot order, keeping
+        # the donation aliases intact.
+        inv = jnp.argsort(row_order)
+        logits_s, pools, _ = model.apply(
+            params, jnp.take(last_token, row_order)[:, None], mode="decode",
+            cache=pools, cache_len=jnp.take(cl_eff, row_order),
+            block_tables=jnp.take(bt_eff, row_order, axis=0),
         )
+        logits = jnp.take(logits_s, inv, axis=0)
         sampled, cache_len, budget, key_data, active = _sample_advance_exit(
-            logits, last_token, cache_len, budget, key_data, act, temps,
-            eos, max_len,
+            logits, last_token, cache_len, budget, key_data, active,
+            host_keep, temps, eos, max_len,
         )
         return sampled, pools, cache_len, budget, key_data, active
 
@@ -489,9 +506,13 @@ def make_spec_verify_step(model: Model, k: int, max_len: int) -> Callable:
         # so the row is device-dead before the next dispatch either way).
         budget = budget - n_commit
         alive = jnp.logical_and(budget > 0, cache_len < max_len - 1)
-        active = jnp.logical_and(
+        # Freeze (not clear) the active flag for host-masked rows — see
+        # _sample_advance_exit: a scheduler-stalled row must stay
+        # device-active across the masked steps it sits out.
+        new_active = jnp.logical_and(
             jnp.logical_and(act, jnp.logical_not(any_eos)), alive
         )
+        active = jnp.where(host_keep, new_active, active)
         pack = jnp.concatenate(
             [out_tokens.astype(jnp.int32), n_commit[:, None].astype(jnp.int32),
              jnp.where(act, m, 0)[:, None].astype(jnp.int32)], axis=1,
@@ -655,7 +676,7 @@ def _paged_decode_inputs(ctx: RootContext, params):
     i32, boo, f32, keys = _row_avals(b)
     bt = _sds((b, ctx.max_blocks_per_row), jnp.int32)
     return (params, ctx.pool_avals(), bt, i32, i32, i32, keys, boo, boo,
-            f32, i32)
+            f32, i32, i32)
 
 
 def _paged_prefill_chunk_inputs(ctx: RootContext, params):
@@ -1014,7 +1035,8 @@ class ServingShardings:
     def paged_decode(self, params=None):
         p = params or self.params
         return ((p, self.cache, self.mat, self.row, self.row, self.row,
-                 self.mat, self.row, self.row, self.row, self.row),
+                 self.mat, self.row, self.row, self.row, self.row,
+                 self.row),
                 (self.row, self.cache, self.row, self.row, self.mat,
                  self.row))
 

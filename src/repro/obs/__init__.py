@@ -93,7 +93,20 @@ class Telemetry:
             "(time-per-output-token)", buckets=TIME_BUCKETS, window=window)
         self.preempt_ready = m.counter(
             "serving_preempt_ready_total", "rows flagged preemptible "
-            "(scheduler hook; no preemption is performed yet)")
+            "(fired for the victim the scheduler actually evicts, and for "
+            "the most-blocks row when admission is backpressured)")
+
+        # -- scheduler (serving/scheduler): growth, preemption, occupancy
+        self.preempts = m.counter(
+            "serving_preempt_total", "rows preempted (victim evicted)",
+            labelnames=("reason",))
+        self.swap_bytes = m.counter(
+            "serving_swap_bytes_total", "KV bytes swapped to host by "
+            "preemptions (resume='swap' only)")
+        self.pool_reserved_vs_live = m.gauge(
+            "serving_pool_reserved_vs_live_frac", "live committed tokens / "
+            "reserved pool tokens at dispatch (on-demand admission drives "
+            "this toward 1; worst-case reservation leaves it low)")
 
         # -- step machinery
         self.step_dispatch = m.histogram(
@@ -186,20 +199,49 @@ class Telemetry:
                              "tpot_s": tpot_s})
 
     def on_preempt_ready(self, uid: int, slot: int) -> None:
-        """Scheduler hook (ROADMAP item 1): a row the engine COULD swap
-        out (release_suffix + rollback) to relieve pool pressure.  Nothing
-        preempts today; the event stream is the signal the
-        continuous-batching scheduler will consume."""
+        """A row the scheduler could (or is about to) evict to relieve
+        pool pressure — fired for the most-blocks row when admission is
+        backpressured, and for the actual victim right before every
+        ``on_preempt``."""
         self.preempt_ready.inc()
         self.tracer.instant("preempt_ready", "request", PID_REQUESTS, uid,
                             {"slot": slot})
+
+    # --------------------------------------------------- scheduler hooks
+    # (cat="sched": scheduler lifecycle events are engine policy, not part
+    # of the per-request event multiset depth-invariance tests pin.)
+
+    def on_grow(self, uid: int, slot: int, n_blocks: int,
+                pool_in_use: int) -> None:
+        """On-demand block growth extended a live row's reservation."""
+        self.tracer.instant("grow", "sched", PID_ENGINE, 0,
+                            {"uid": uid, "slot": slot, "blocks": n_blocks,
+                             "pool_in_use": pool_in_use})
+
+    def on_preempt(self, uid: int, slot: int, reason: str, blocks: int,
+                   swap_bytes: int) -> None:
+        """A live row was evicted (reason: "pool_dry" growth pressure or
+        "priority" SLA admission); its blocks are free again."""
+        self.preempts.labels(reason=reason).inc()
+        if swap_bytes:
+            self.swap_bytes.inc(swap_bytes)
+        self.tracer.instant("preempt", "sched", PID_REQUESTS, uid,
+                            {"slot": slot, "reason": reason,
+                             "blocks": blocks, "swap_bytes": swap_bytes})
+
+    def on_resume(self, uid: int, slot: int, mode: str) -> None:
+        """A preempted request re-entered a slot (reprefill or swap)."""
+        self.tracer.instant("resume", "sched", PID_REQUESTS, uid,
+                            {"slot": slot, "mode": mode})
 
     # -------------------------------------------------------- step hooks
 
     def on_step_dispatch(self, kind: str, ring_depth: int, live_rows: int,
                          dispatch_s: float,
                          pool_in_use: Optional[List[int]] = None,
-                         blocks_per_shard: Optional[int] = None) -> None:
+                         blocks_per_shard: Optional[int] = None,
+                         live_tokens: Optional[int] = None,
+                         reserved_tokens: Optional[int] = None) -> None:
         self.steps_dispatched.inc()
         self.step_dispatch.observe(dispatch_s)
         self.ring_depth.observe(ring_depth)
@@ -211,6 +253,8 @@ class Telemetry:
             frac = max(pool_in_use) / blocks_per_shard
             self.pool_occupancy.observe(frac)
             args["pool_frac"] = frac
+        if live_tokens is not None and reserved_tokens:
+            self.pool_reserved_vs_live.set(live_tokens / reserved_tokens)
         self.tracer.complete(f"dispatch:{kind}", "step", dispatch_s,
                              PID_ENGINE, 0, args)
         if self.profile is not None:
@@ -265,6 +309,7 @@ class Telemetry:
                 "stats": engine.stats(),
                 "cache": engine.cache_stats(),
                 "spec": engine.spec_stats(),
+                "scheduler": engine.scheduler_stats(),
             }
             if engine.paged:
                 out["engine"]["allocator"] = dict(engine.kv.alloc.counters)
@@ -354,8 +399,18 @@ class _NullTelemetry:
     def on_preempt_ready(self, uid, slot):
         pass
 
+    def on_grow(self, uid, slot, n_blocks, pool_in_use):
+        pass
+
+    def on_preempt(self, uid, slot, reason, blocks, swap_bytes):
+        pass
+
+    def on_resume(self, uid, slot, mode):
+        pass
+
     def on_step_dispatch(self, kind, ring_depth, live_rows, dispatch_s,
-                         pool_in_use=None, blocks_per_shard=None):
+                         pool_in_use=None, blocks_per_shard=None,
+                         live_tokens=None, reserved_tokens=None):
         pass
 
     def on_step_consume(self, kind, sync_s, host_s):

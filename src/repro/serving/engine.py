@@ -41,9 +41,17 @@ stacks — see serving/kvcache/):
   * K/V live in a shared block pool (num_blocks, block_size, ...) instead of
     a dense slab, addressed through per-slot block-table rows, so cache HBM
     scales with pool capacity (live tokens), not max_batch * max_len.
-  * Admission reserves each request's worst-case blocks up front
-    (per-request max_len = prompt + max_new_tokens): exhaustion surfaces
-    only as admission backpressure, never mid-decode.
+  * Scheduling is a separate policy module (serving/scheduler): by default
+    admission reserves only the PROMPT's blocks and the reservation grows
+    at block boundaries as the row decodes (allocate-on-demand, so pool
+    occupancy tracks live tokens and more rows fit a fixed pool), with
+    victim preemption — most-blocks row evicted, resumed by re-prefill or
+    host swap-back — when growth or a higher-priority admission runs a
+    shard dry.  SLA latency classes queue separately with starvation-free
+    aging, and DP placement targets the emptiest shard's sub-pool.
+    ``SchedulerConfig(admission="worst_case")`` restores the PR-3 contract
+    (prompt + max_new reserved up front; exhaustion surfaces only as
+    admission backpressure, never mid-decode).
   * Prefill is CHUNKED: prompts stream into their blocks ``prefill_chunk``
     tokens per engine iteration through one fixed-shape jit root (compiles
     exactly once), interleaved with decode steps so a very long prompt
@@ -120,7 +128,25 @@ from repro.models.api import (
 from repro.obs import NULL_TELEMETRY
 from repro.parallel.sharding import Parallelism
 from repro.serving.kvcache import PagedKVCache
+from repro.serving.scheduler import Scheduler, SchedulerConfig
 from repro.serving.spec import DraftState, SpecConfig
+
+
+@dataclasses.dataclass
+class _SwapPayload:
+    """A preempted row's KV prefix, swapped to host for a copy-back resume:
+    the block rows covering its committed context, plus the row's PRNG key
+    so the sampling chain continues where it stopped (temperature streams
+    stay identical to an un-preempted run)."""
+    n_ctx: int            # committed context length the blocks cover
+    n_blocks: int         # leading block count of every ``blocks`` leaf
+    blocks: object        # host pytree of per-layer pool block rows
+    key_row: np.ndarray   # (2,) uint32 saved sampling-key state
+
+    @property
+    def nbytes(self) -> int:
+        import jax as _jax
+        return int(sum(leaf.nbytes for leaf in _jax.tree.leaves(self.blocks)))
 
 
 @dataclasses.dataclass
@@ -132,6 +158,17 @@ class Request:
     eos_id: Optional[int] = None
     generated: List[int] = dataclasses.field(default_factory=list)
     slot: Optional[int] = None
+    # SLA admission (serving/scheduler): latency class name + queue index.
+    latency_class: Optional[str] = None
+    class_idx: int = 0
+    # Preemption bookkeeping: eviction count, and the host-swapped KV
+    # payload when the scheduler resumes by copy-back instead of re-prefill
+    # (reprefill resumes instead fold ``generated`` into ``prompt``;
+    # ``prompt_absorbed`` counts how many generated tokens the prompt
+    # already holds, so a SECOND preemption folds only the new suffix).
+    preemptions: int = 0
+    prompt_absorbed: int = 0
+    swap: Optional[_SwapPayload] = None
     # Speculative-decoding accounting (spec_config engines only).
     spec_proposed: int = 0
     spec_accepted: int = 0
@@ -144,6 +181,12 @@ class Request:
     @property
     def done(self) -> bool:
         return len(self.generated) >= self.max_new_tokens
+
+    @property
+    def prefix_len(self) -> int:
+        """Tokens admission must cover: the prompt (re-prefill resumes
+        fold generated tokens into it) or the swapped context length."""
+        return self.swap.n_ctx if self.swap is not None else len(self.prompt)
 
     @property
     def acceptance_rate(self) -> float:
@@ -201,6 +244,7 @@ class ServingEngine:
         pipeline_depth: Optional[int] = None,
         transfer_guard: Optional[bool] = None,
         telemetry=None,
+        sched_config: Optional[SchedulerConfig] = None,
     ):
         # Observability (repro.obs.Telemetry, or the shared no-op).  All
         # hooks consume host bookkeeping + the packed D2H word the step
@@ -263,6 +307,17 @@ class ServingEngine:
                 "form)"
             )
 
+        # Scheduling policy (serving/scheduler): per-class admission
+        # queues, on-demand vs worst-case block reservation, preemption
+        # + resume mode, DP placement, and decode-row dispatch order.
+        self.sched = Scheduler(sched_config)
+        if (self.sched.resume_mode == "swap" and spec_config is not None):
+            raise ValueError(
+                "resume='swap' is unsupported with speculative decoding "
+                "(the draft pool's swapped prefix has no catch-up path); "
+                "use resume='reprefill'"
+            )
+
         # Device-resident state (never read back except the sampled tokens).
         self.cache_len = jnp.zeros((max_batch,), jnp.int32)
         self.last_token = jnp.zeros((max_batch,), jnp.int32)
@@ -282,6 +337,25 @@ class ServingEngine:
         self.temps = np.zeros((max_batch,), np.float32)
         self._eos = np.full((max_batch,), -1, np.int32)
         self._len_host = np.zeros((max_batch,), np.int64)
+        # On-demand growth bookkeeping: ``_dev_len`` conservatively mirrors
+        # each row's DEVICE cache length at dispatch time (host ``_len_host``
+        # lags by the pipeline ring), so coverage targets never undershoot
+        # a write the device is about to make.  ``_stalled`` rows are live
+        # but frozen (host_keep=False) because their shard ran dry with
+        # preemption disabled — they resume exactly where they froze once
+        # blocks free up.
+        self._dev_len = np.zeros((max_batch,), np.int64)
+        self._stalled = np.zeros((max_batch,), bool)
+        # Scheduler lifecycle counters + occupancy accumulators (plain
+        # host ints/floats; surfaced by scheduler_stats() and the bench).
+        self.sched_events: Dict[str, int] = {
+            "preemptions": 0, "swap_bytes": 0, "grown_blocks": 0,
+            "resumes": 0, "stalls": 0,
+        }
+        self._occ_live_frac_sum = 0.0
+        self._occ_samples = 0
+        self._occ_rows_sum = 0
+        self._occ_rows_steps = 0
 
         # Device-resident copies of the loop-invariant host inputs
         # (host_keep / temps / eos [/ k_row]).  They only change on slot
@@ -293,6 +367,7 @@ class ServingEngine:
         self._temps_dev = None
         self._eos_dev = None
         self._k_row_dev = None
+        self._order_dev = None
 
         # Pipeline ring of dispatched-but-unconsumed steps, plus finished
         # requests produced by internal drains (handed out by the next
@@ -301,7 +376,6 @@ class ServingEngine:
         self._pending_finished: List[Request] = []
 
         self.slots: List[Optional[Request]] = [None] * max_batch
-        self.queue: deque[Request] = deque()
         self._prefilling: List[_PrefillTask] = []
         self._uid = itertools.count()
         # Free slots are handed out in the order they FREED, not by index.
@@ -454,9 +528,18 @@ class ServingEngine:
 
     # --------------------------------------------------------------- API
 
+    @property
+    def queue(self):
+        """Admission-queue view (the scheduler): truthy while requests
+        wait, ``len()`` for the count — the pre-scheduler deque surface."""
+        return self.sched
+
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
                temperature: float = 0.0,
-               eos_id: Optional[int] = None) -> int:
+               eos_id: Optional[int] = None,
+               latency_class: Optional[str] = None) -> int:
+        """Queue one request; returns its uid.  ``latency_class`` names a
+        configured SchedulerConfig.priority_class (None = the lowest)."""
         prompt = np.asarray(prompt, np.int32)
         if len(prompt) == 0:
             raise ValueError("empty prompt")
@@ -469,10 +552,14 @@ class ServingEngine:
                 f"prompt length {len(prompt)} exceeds max_len-1={self.max_len - 1}"
             )
         if self.paged:
-            # Admission reserves the worst case up front; a request whose
-            # worst case exceeds one DP shard's sub-pool (== the total pool
-            # when unsharded) could never be admitted and would stall the
-            # FIFO head forever — fail fast at submit.
+            # A request whose worst case exceeds one DP shard's sub-pool
+            # (== the total pool when unsharded) could never finish: under
+            # worst-case admission it would stall the queue head forever,
+            # and under on-demand growth it could preempt every other row
+            # and STILL run the shard dry mid-decode — fail fast at submit
+            # under both policies (this check is also what guarantees a
+            # preempted request can always be resumed: its grown prefix
+            # stays within one shard's capacity).
             need = min(self.max_len, len(prompt) + max_new_tokens)
             n_blocks = self.kv.blocks_for(need)
             if n_blocks > self.kv.blocks_per_shard:
@@ -484,11 +571,13 @@ class ServingEngine:
                     f"{self.kv.dp_shards} DP shard(s))"
                 )
         req = Request(next(self._uid), prompt, max_new_tokens, temperature,
-                      eos_id if eos_id is not None else self.eos_id)
+                      eos_id if eos_id is not None else self.eos_id,
+                      latency_class=latency_class,
+                      class_idx=self.sched.class_index(latency_class))
         if self.obs.enabled:
             req.t_submit = time.perf_counter()
             self.obs.on_submit(req.uid, len(prompt), max_new_tokens)
-        self.queue.append(req)
+        self.sched.submit(req)
         return req.uid
 
     def _request_keys(self, uids, draft: bool = False) -> np.ndarray:
@@ -515,15 +604,29 @@ class ServingEngine:
             if self._admission_could_progress():
                 for req in self._admit():
                     finished[req.uid] = req.generated
-            if not self.active.any():
+            if not (self.active & ~self._stalled).any():
                 # The host may only THINK rows are done pending in-flight
-                # transfers: flush the ring, then re-check.
+                # transfers: flush the ring, then re-check.  Draining may
+                # also free blocks a stalled row was waiting on — retry
+                # growth before concluding anything about liveness.
                 for req in self.drain():
                     finished[req.uid] = req.generated
-                if not self.active.any():
-                    if not self.queue and not self._prefilling:
-                        break
-                    continue
+                if self.paged and self._stalled.any():
+                    self._ensure_coverage()
+                if not (self.active & ~self._stalled).any():
+                    if not self.active.any():
+                        if not self.sched and not self._prefilling:
+                            break
+                        continue
+                    if self._prefilling or self._admission_could_progress():
+                        continue  # prefill/admission can still free or fill
+                    raise RuntimeError(
+                        "KV pool deadlock: every live row is stalled on an "
+                        "exhausted block pool with preemption disabled and "
+                        "nothing left to drain — enable preemption "
+                        "(SchedulerConfig.preempt) or use admission="
+                        "'worst_case'"
+                    )
             for req in self.step():
                 finished[req.uid] = req.generated
         return finished
@@ -567,6 +670,8 @@ class ServingEngine:
         self.temps[slot] = req.temperature
         self._eos[slot] = -1 if req.eos_id is None else req.eos_id
         self._len_host[slot] = len(req.prompt)
+        self._dev_len[slot] = len(req.prompt)
+        self._stalled[slot] = False
         self._host_dirty = True
         if self.spec is not None:
             self._k_row[slot] = self.spec.k  # fresh speculation window
@@ -594,8 +699,16 @@ class ServingEngine:
         """Shared retirement bookkeeping for EVERY finish path (admission
         finishes and both commit paths): release the slot, invalidate the
         cached host inputs, stamp the freed-order clock, free KV blocks."""
+        req = self.slots[slot]
+        if req is not None:
+            # A retired uid must be able to re-arm the preempt_ready
+            # signal if it is ever re-blocked (and the set must not grow
+            # unboundedly over a long-running engine).
+            self._obs_blocked.discard(req.uid)
         self.slots[slot] = None
         self.active[slot] = False
+        self._stalled[slot] = False
+        self._dev_len[slot] = 0
         self._host_dirty = True
         self._freed_at[slot] = next(self._free_clock)
         if self.paged:
@@ -605,41 +718,67 @@ class ServingEngine:
 
     def _admission_could_progress(self) -> bool:
         """Cheap host-side check gating _admit() calls from run(): a
-        prefill is mid-flight, or the FIFO head could plausibly land in a
-        free slot (paged: and its worst case fits today's free blocks,
-        target AND draft pools) — otherwise calling _admit would drain the
-        step pipeline every iteration just to back off again."""
+        prefill is mid-flight, or the scheduler head could plausibly land
+        in a free slot (paged: and its admission blocks — prompt-only
+        under on-demand, worst case under worst_case — fit today's free
+        blocks, target AND draft pools), or an SLA preemption could make
+        the room — otherwise calling _admit would drain the step pipeline
+        every iteration just to back off again.  A blocked round ages the
+        waiting class-heads (starvation-free admission)."""
         if self._prefilling:
             return True
-        if not self.queue or self.active.all():
+        head = self.sched.head()
+        if head is None:
             return False
-        if self.paged:
-            head = self.queue[0]
-            need = min(self.max_len, len(head.prompt) + head.max_new_tokens)
-            n_blocks = self.kv.blocks_for(need)
-            if self.kv.alloc.free_blocks() < n_blocks:
-                return False
-            if (self.spec is not None
-                    and self.draft.kv.alloc.free_blocks() < n_blocks):
-                return False
-        return True
+        blocked = bool(self.active.all())
+        if not blocked and self.paged:
+            n_blocks = self.kv.blocks_for(
+                self.sched.admit_tokens(head, self.max_len))
+            blocked = self.kv.alloc.free_blocks() < n_blocks
+            if not blocked and self.spec is not None:
+                blocked = self.draft.kv.alloc.free_blocks() < n_blocks
+        if not blocked:
+            return True
+        if (self.paged and self.sched.preempt
+                and self._outranked_victims(head)):
+            return True  # SLA preemption will make room in _admit
+        self.sched.note_blocked()
+        return False
+
+    def _outranked_victims(self, head: Request):
+        """(slot, blocks, class_idx) of live rows the head's latency class
+        STRICTLY outranks — the only rows SLA admission may evict (equal
+        class blocks on backpressure, never thrash)."""
+        return [(s, len(self.kv.alloc.owned_by(s)), r.class_idx)
+                for s, r in enumerate(self.slots)
+                if r is not None and r.class_idx > head.class_idx]
 
     def _admit_paged(self) -> List[Request]:
         finished: List[Request] = []
         busy = {t.slot for t in self._prefilling}
-        while self.queue:
-            free = self._free_slots(busy)
-            if not free:
+        while True:
+            req = self.sched.head()
+            if req is None:
                 break
-            req = self.queue[0]
-            need = min(self.max_len, len(req.prompt) + req.max_new_tokens)
-            # Block reservations are per DP shard (slot s -> shard
-            # s*dp/max_batch), so the FIFO head tries every free slot —
-            # different slots may land on shards with different headroom.
-            # Unsharded pools reduce to the old single-attempt semantics
-            # (every slot shares one shard, so one failure implies all).
+            need = self.sched.admit_tokens(req, self.max_len)
+            free = [s for s in self._free_slots(busy)]
+            if not free:
+                # Batch full: a strictly-outranked live row may be evicted
+                # for the head (the ring is drained — _admit's contract).
+                victim = (self.sched.pick_victim(self._outranked_victims(req))
+                          if self.sched.preempt else None)
+                if victim is None:
+                    break
+                self._preempt(victim, "priority")
+                continue
+            # Placement: the scheduler orders candidate slots by their DP
+            # shard's headroom (emptiest sub-pool first; freed-order within
+            # a shard, which IS the old handout when unsharded).  Block
+            # reservations are per shard (slot s -> shard s*dp/max_batch),
+            # so the head tries every free slot — different slots may land
+            # on shards with different headroom.
             slot = None
-            for cand in free:
+            for cand in self.sched.slot_order(free, self.kv, self._freed_at):
                 if not self.kv.reserve(cand, need):
                     if self.kv.alloc.in_use(self.kv.slot_shard(cand)) == 0:
                         raise RuntimeError(
@@ -659,10 +798,17 @@ class ServingEngine:
                 slot = cand
                 break
             if slot is None:
-                # Every shard exhausted: FIFO backpressure.  Flag the live
-                # row holding the most blocks as preempt-ready ONCE per
-                # blocked request — the signal a future continuous-batching
-                # scheduler consumes (nothing preempts today).
+                # Every shard exhausted.  SLA preemption first (strictly
+                # lower-priority victims only), then FIFO backpressure:
+                # flag the live row holding the most blocks as
+                # preempt-ready ONCE per blocked request — the victim the
+                # pool-dry preemption path actually picks.
+                if self.sched.preempt:
+                    victim = self.sched.pick_victim(
+                        self._outranked_victims(req))
+                    if victim is not None:
+                        self._preempt(victim, "priority")
+                        continue
                 if self.obs.enabled and req.uid not in self._obs_blocked:
                     self._obs_blocked.add(req.uid)
                     owners = {t.slot: t.req for t in self._prefilling}
@@ -674,12 +820,20 @@ class ServingEngine:
                     if cand is not None:
                         self.obs.on_preempt_ready(owners[cand].uid, cand)
                 break
-            self.queue.popleft()
+            self.sched.pop_head()
+            self._obs_blocked.discard(req.uid)
             busy.add(slot)
             if self.obs.enabled:
                 self.obs.on_admit(req.uid, slot,
                                   time.perf_counter() - req.t_submit)
-            self._prefilling.append(_PrefillTask(req, slot))
+            if req.swap is not None:
+                self._resume_swap(req, slot)
+            else:
+                if req.preemptions:
+                    self.sched_events["resumes"] += 1
+                    if self.obs.enabled:
+                        self.obs.on_resume(req.uid, slot, "reprefill")
+                self._prefilling.append(_PrefillTask(req, slot))
         if self._prefilling:
             finished.extend(self._prefill_tick())
         return finished
@@ -719,7 +873,12 @@ class ServingEngine:
             task.pos += n
             if task.pos >= len(p):
                 fslots[r] = task.slot
-                budgets[r] = max(0, task.req.max_new_tokens - 1)
+                # Budget after the first sampled token: fresh requests have
+                # generated == []; a reprefill-resumed request's prompt
+                # already contains its generated tokens, so its budget is
+                # what remains AFTER re-sampling the next one.
+                budgets[r] = max(0, task.req.max_new_tokens
+                                 - len(task.req.generated) - 1)
                 fin.append((r, task))
         if fin:
             # Per-request sampling chains for the finishing rows (one
@@ -759,6 +918,204 @@ class ServingEngine:
                                 if id(t) not in done_tasks]
         return finished
 
+    # ---- on-demand growth + preemption (serving/scheduler decisions)
+
+    def _ensure_coverage(self) -> None:
+        """Grow every live row's block reservation to cover its next
+        dispatch (one token, or the k+1 speculative chunk) — the
+        allocate-on-demand half of the scheduler contract.  Growth is
+        alloc-only (it appends table entries; the dirty table mirror
+        re-uploads at the next dispatch), so it is safe with steps in
+        flight.  A row whose shard is dry either stalls (preemption off:
+        frozen on device until blocks free) or triggers victim preemption
+        (ring drained first — PR 5 drain discipline)."""
+        if not self.paged or not self.sched.on_demand:
+            return
+        look = (self.spec.k + 1) if self.spec is not None else 1
+        bs = self.kv.block_size
+        for slot in np.flatnonzero(self.active).tolist():
+            if not self.active[slot]:
+                continue  # retired/preempted by an earlier row's growth
+            target = min(int(self._dev_len[slot]) + look, self.max_len)
+            covered = len(self.kv.alloc.owned_by(slot)) * bs
+            if target <= covered:
+                ok = True
+            else:
+                # A grow is due: opportunistically take one block of
+                # slack so the table (re-uploaded whenever it dirties)
+                # dirties half as often — but only when the slack fits
+                # without stalling or evicting anyone; under pressure
+                # fall back to the exact target.
+                slacked = min(target + bs, self.max_len)
+                ok = slacked > target and self._extend_both(slot, slacked)
+                if not ok:
+                    ok = self._grow_row(slot, target)
+            if not self.active[slot]:
+                continue  # the row itself was evicted to make room
+            if ok:
+                if self._stalled[slot]:
+                    self._stalled[slot] = False
+                    self._host_dirty = True
+            elif not self._stalled[slot]:
+                self._stalled[slot] = True
+                self._host_dirty = True
+                self.sched_events["stalls"] += 1
+
+    def _grow_row(self, slot: int, target: int) -> bool:
+        """True once slot's reservation covers ``target`` tokens (or the
+        slot is gone).  On shard exhaustion with preemption enabled:
+        drain the ring (pending finishes may free blocks), then evict
+        most-blocks victims until the growth fits — the growing row is
+        itself a candidate, so progress never deadlocks (submit bounds
+        every request's worst case to one shard's capacity)."""
+        if self._extend_both(slot, target):
+            return True
+        if not self.sched.preempt:
+            return False
+        self._drain_ring()
+        while self.slots[slot] is not None:
+            if self._extend_both(slot, target):
+                return True
+            victim = self.sched.pick_victim(self._victim_candidates())
+            if victim is None:
+                return False
+            self._preempt(victim, "pool_dry")
+        return True  # the drain retired the row; nothing left to cover
+
+    def _extend_both(self, slot: int, target: int) -> bool:
+        """Extend target (and draft, in lockstep) coverage; False when
+        either pool's shard is dry.  A target-side extension that the
+        draft cannot match is kept — harmless over-reservation the retire
+        path frees — and retried whole next call."""
+        added = self.kv.extend(slot, target)
+        if added is None:
+            return False
+        d_added = 0
+        if self.spec is not None:
+            d_added = self.draft.kv.extend(slot, target)
+            if d_added is None:
+                return False
+        grown = added + d_added
+        if grown:
+            self.sched_events["grown_blocks"] += grown
+            if self.obs.enabled:
+                req = self.slots[slot]
+                self.obs.on_grow(req.uid if req is not None else -1, slot,
+                                 grown, self.kv.alloc.in_use())
+        return True
+
+    def _victim_candidates(self):
+        """(slot, blocks, class_idx) for every live row (any class)."""
+        return [(s, len(self.kv.alloc.owned_by(s)), r.class_idx)
+                for s, r in enumerate(self.slots) if r is not None]
+
+    def _preempt(self, slot: int, reason: str) -> None:
+        """Evict a live row (callers hold the ring drained): swap its KV
+        prefix to host (resume='swap') or fold its generated tokens into
+        the prompt (resume='reprefill'), release every block through the
+        rollback API, and requeue it at the FRONT of its latency class.
+        The freed slot and blocks are immediately reusable."""
+        req = self.slots[slot]
+        n_ctx = int(self._len_host[slot])
+        blocks = len(self.kv.alloc.owned_by(slot))
+        if self.obs.enabled:
+            # The preempt_ready flag and the actual eviction name the same
+            # victim — the observability contract ROADMAP item 1 promised.
+            self.obs.on_preempt_ready(req.uid, slot)
+        swap_bytes = 0
+        if self.sched.resume_mode == "swap":
+            req.swap = self._swap_out(slot, n_ctx)
+            swap_bytes = req.swap.nbytes
+        else:
+            # Re-prefill resume: the committed prefix (prompt + generated)
+            # becomes the prompt.  Greedy streams are unchanged — the
+            # re-prefill reproduces the evicted cache exactly and samples
+            # the same next token; temperature streams restart their key
+            # chain (use resume='swap' to preserve them).
+            fold = req.generated[req.prompt_absorbed:]
+            req.prompt = np.concatenate(
+                [req.prompt, np.asarray(fold, np.int32)])
+            req.prompt_absorbed = len(req.generated)
+        self.kv.rollback(slot, 0)
+        if self.spec is not None:
+            self.draft.rollback(slot, 0)
+        self.slots[slot] = None
+        self.active[slot] = False
+        self._stalled[slot] = False
+        self._dev_len[slot] = 0
+        self._len_host[slot] = 0
+        self._host_dirty = True
+        self._freed_at[slot] = next(self._free_clock)
+        req.slot = None
+        req.preemptions += 1
+        self.sched.requeue(req)
+        self.sched_events["preemptions"] += 1
+        self.sched_events["swap_bytes"] += swap_bytes
+        if self.obs.enabled:
+            self.obs.on_preempt(req.uid, slot, reason, blocks, swap_bytes)
+
+    def _swap_out(self, slot: int, n_ctx: int) -> _SwapPayload:
+        """Copy the blocks covering slot's committed context to host (one
+        gather per pool leaf + the row's sampling key).  Preemption is off
+        the steady-state path, so this D2H is sanctioned — the one-D2H
+        step contract is about the decode hot loop."""
+        n_blocks = self.kv.blocks_for(max(1, n_ctx))
+        ids = jnp.asarray(self.kv.alloc.owned_by(slot)[:n_blocks], jnp.int32)
+        data = jax.tree.map(
+            lambda leaf, ax: np.asarray(
+                jax.device_get(jnp.take(leaf, ids, axis=ax))),
+            self.kv.pools, self.kv.block_axes)
+        key_row = np.asarray(jax.device_get(self.key_data[slot]))
+        return _SwapPayload(n_ctx=n_ctx, n_blocks=n_blocks, blocks=data,
+                            key_row=key_row)
+
+    def _resume_swap(self, req: Request, slot: int) -> None:
+        """Re-admit a swap-preempted request by scattering its saved block
+        rows into the fresh reservation and restoring the row's device
+        state — no recompute, and the PRNG chain continues exactly where
+        eviction stopped (temperature streams match an un-preempted run).
+        Caller has already reserved admission blocks on ``slot``."""
+        pay = req.swap
+        ids = jnp.asarray(self.kv.alloc.owned_by(slot)[:pay.n_blocks],
+                          jnp.int32)
+        self.kv.pools = jax.tree.map(
+            lambda leaf, ax, host: leaf.at[
+                (slice(None),) * ax + (ids,)].set(jnp.asarray(host)),
+            self.kv.pools, self.kv.block_axes, pay.blocks)
+        g = len(req.generated)
+        self.cache_len = self.cache_len.at[slot].set(pay.n_ctx)
+        self.last_token = self.last_token.at[slot].set(
+            int(req.generated[-1]))
+        self.budget_dev = self.budget_dev.at[slot].set(
+            req.max_new_tokens - g)
+        self.key_data = self.key_data.at[slot].set(jnp.asarray(pay.key_row))
+        self._active_dev = self._active_dev.at[slot].set(True)
+        if self._sh is not None:
+            # Eager scatters can drop the roots' expected placements:
+            # repin so donated buffers keep aliasing in place.
+            if self.kv.shardings is not None:
+                self.kv.pools = jax.device_put(self.kv.pools,
+                                               self.kv.shardings)
+            row, mat = self._sh.row, self._sh.mat
+            self.cache_len = jax.device_put(self.cache_len, row)
+            self.last_token = jax.device_put(self.last_token, row)
+            self.budget_dev = jax.device_put(self.budget_dev, row)
+            self.key_data = jax.device_put(self.key_data, mat)
+            self._active_dev = jax.device_put(self._active_dev, row)
+        self.slots[slot] = req
+        self.active[slot] = True
+        self._stalled[slot] = False
+        req.slot = slot
+        self.temps[slot] = req.temperature
+        self._eos[slot] = -1 if req.eos_id is None else req.eos_id
+        self._len_host[slot] = pay.n_ctx
+        self._dev_len[slot] = pay.n_ctx
+        self._host_dirty = True
+        req.swap = None
+        self.sched_events["resumes"] += 1
+        if self.obs.enabled:
+            self.obs.on_resume(req.uid, slot, "swap")
+
     # ---- dense: bucketed batched prefill-admission (PR 1 path)
 
     @staticmethod
@@ -778,27 +1135,19 @@ class ServingEngine:
         return self.max_len
 
     def _take_group(self, max_r: int) -> List[Request]:
-        """Pop up to max_r queued requests sharing the front request's
-        prompt-length bucket (FIFO within the bucket)."""
-        if not self.queue:
+        """Pop up to max_r queued requests sharing the scheduler head's
+        prompt-length bucket (FIFO within the bucket and class)."""
+        if not self.sched:
             return []
         if not self._bucketed:
             # Recurrent state: exact-length prefill, one request at a time.
-            return [self.queue.popleft()]
-        want = self._bucket(len(self.queue[0].prompt))
-        group, rest = [], deque()
-        while self.queue:
-            req = self.queue.popleft()
-            if len(group) < max_r and self._bucket(len(req.prompt)) == want:
-                group.append(req)
-            else:
-                rest.append(req)
-        self.queue = rest
-        return group
+            return [self.sched.pop_head()]
+        return self.sched.take_bucket(
+            max_r, lambda req: self._bucket(len(req.prompt)))
 
     def _admit_dense(self) -> List[Request]:
         finished: List[Request] = []
-        while self.queue:
+        while self.sched:
             free = self._free_slots()
             if not free:
                 break
@@ -868,6 +1217,10 @@ class ServingEngine:
             # Per-row window feedback: step N+1's k_row depends on step N's
             # acceptance, so dynamic-k speculation runs the ring at depth 1.
             self._drain_ring()
+        if self.paged and self.sched.on_demand:
+            # Grow every live row's reservation to cover this dispatch
+            # (alloc-only bookkeeping — safe with steps in flight).
+            self._ensure_coverage()
         if self.spec is not None:
             self._dispatch_spec()
         else:
@@ -899,19 +1252,34 @@ class ServingEngine:
         rebuilt only when admission/finish bookkeeping dirtied them."""
         if self._host_dirty:
             # Explicit device_put (guard-sanctioned; sharded when meshed).
+            # Stalled rows are live but must not advance: host_keep drops
+            # them, so the device freezes their entire per-slot state (the
+            # same mechanism that freezes finished rows) until growth
+            # succeeds and un-stalls them.
             row = self._sh.row if self._sh is not None else None
-            self._keep_dev = jax.device_put(self.active, row)
+            keep = self.active & ~self._stalled
+            self._keep_dev = jax.device_put(keep, row)
             self._temps_dev = jax.device_put(self.temps, row)
             self._eos_dev = jax.device_put(self._eos, row)
             if self.spec is not None:
                 self._k_row_dev = jax.device_put(self._k_row, row)
+            if self.paged:
+                # Dispatch-order permutation (longest rows first per DP
+                # shard).  Any fixed permutation is token-stream neutral —
+                # the root un-permutes its logits — so reusing it between
+                # dirty events is correct even as lengths advance.
+                order = self.sched.row_order(self._dev_len, keep,
+                                             self.max_batch, self.dp_shards)
+                if order is None:
+                    order = np.arange(self.max_batch, dtype=np.int32)
+                self._order_dev = jax.device_put(order, row)
             self._host_dirty = False
         return self._keep_dev, self._temps_dev, self._eos_dev
 
     def _dispatch_decode(self) -> None:
         """Launch one decode root and ring its token future (no sync)."""
         t0 = time.perf_counter()
-        mask = self.active.copy()
+        mask = self.active & ~self._stalled
         with self._guard(), self.obs.span("serving.dispatch.decode"):
             host_keep, temps, eos = self._host_inputs()
             if self.paged:
@@ -920,6 +1288,7 @@ class ServingEngine:
                     self.params, self.kv.pools, self.kv.table_device(),
                     self.last_token, self.cache_len, self.budget_dev,
                     self.key_data, self._active_dev, host_keep, temps, eos,
+                    self._order_dev,
                 )
             else:
                 (sampled, self.cache, self.cache_len, self.budget_dev,
@@ -929,6 +1298,9 @@ class ServingEngine:
                     host_keep, temps, eos,
                 )
         self.last_token = sampled
+        if self.paged:
+            self._dev_len += mask  # each dispatched row writes one entry
+        self._note_occupancy(mask)
         self._ring.append(_InFlight(sampled, mask,
                                     time.perf_counter() - t0))
         if self.obs.enabled:
@@ -938,7 +1310,7 @@ class ServingEngine:
         """Launch one speculative step (fused draft-K root + chunk-verify
         root) and ring its packed committed-token future (no sync)."""
         t0 = time.perf_counter()
-        mask = self.active.copy()
+        mask = self.active & ~self._stalled
         with self._guard():
             host_keep, temps, eos = self._host_inputs()
             k_row = self._k_row_dev
@@ -965,21 +1337,46 @@ class ServingEngine:
             self.kv.pools = target_cache
         else:
             self.cache = target_cache
+        if self.paged:
+            # Conservative device-length advance: verify may write the full
+            # k+1 proposal entries before rolling back to the accepted
+            # prefix; _commit_spec reconciles once acceptance is known.
+            self._dev_len += (self.spec.k + 1) * mask
+        self._note_occupancy(mask)
         self._ring.append(_InFlight(pack, mask, time.perf_counter() - t0,
                                     spec=True, k_row=self._k_row.copy()))
         if self.obs.enabled:
             self._obs_dispatch("spec", mask)
 
+    def _note_occupancy(self, mask: np.ndarray) -> None:
+        """Accumulate per-dispatch occupancy: live committed tokens over
+        reserved pool tokens (the on-demand payoff metric — worst-case
+        admission reserves far more than it has committed) and live rows
+        per step (mean batch occupancy).  Host ints only."""
+        self._occ_rows_sum += int(mask.sum())
+        self._occ_rows_steps += 1
+        if not self.paged:
+            return
+        reserved = self.kv.alloc.in_use() * self.kv.block_size
+        if reserved > 0:
+            live = int(self._len_host[mask].sum())
+            self._occ_live_frac_sum += live / reserved
+            self._occ_samples += 1
+
     def _obs_dispatch(self, kind: str, mask: np.ndarray) -> None:
         """Step-dispatch telemetry: ring depth, live rows, per-shard pool
         occupancy — all host ints the engine already tracks."""
         pool = peaks = None
+        live_tok = reserved_tok = None
         if self.paged:
             alloc = self.kv.alloc
             pool = [alloc.in_use(s) for s in range(alloc.num_shards)]
             peaks = self.kv.blocks_per_shard
+            reserved_tok = alloc.in_use() * self.kv.block_size
+            live_tok = int(self._len_host[mask].sum())
         self.obs.on_step_dispatch(kind, len(self._ring), int(mask.sum()),
-                                  self._ring[-1].dispatch_s, pool, peaks)
+                                  self._ring[-1].dispatch_s, pool, peaks,
+                                  live_tok, reserved_tok)
 
     def _consume_one(self) -> None:
         """Sync the oldest in-flight step's tokens (the ONE D2H this step
@@ -1053,6 +1450,11 @@ class ServingEngine:
             if self.obs.enabled:
                 self.obs.on_spec_row(k_eff, m)
             self._len_host[slot] += m + 1  # entries committed to cache
+            if self.paged:
+                # Dispatch advanced _dev_len by the conservative k+1;
+                # the cache actually kept m+1 — reconcile the difference
+                # so coverage targets track the committed length.
+                self._dev_len[slot] -= k - m
             if self.spec.dynamic_k:
                 if m == k_eff:
                     self._k_row[slot] = min(k, k_eff + 1)
@@ -1137,6 +1539,30 @@ class ServingEngine:
             "committed_per_row_step":
                 self.spec_committed / max(1, self.spec_step_rows),
             "draft_hbm_bytes": self.draft.hbm_bytes(),
+        }
+
+    def scheduler_stats(self) -> Dict[str, object]:
+        """Scheduling policy + lifecycle accounting: admission policy,
+        preempt/resume/grow counters, and the occupancy means the
+        overcommit benchmark reports (live committed tokens / reserved
+        pool tokens per dispatch; live rows per step)."""
+        occ = (self._occ_live_frac_sum / self._occ_samples
+               if self._occ_samples else None)
+        rows = (self._occ_rows_sum / self._occ_rows_steps
+                if self._occ_rows_steps else 0.0)
+        return {
+            "admission_policy": self.sched.cfg.admission,
+            "preempt_enabled": self.sched.preempt,
+            "resume_mode": self.sched.resume_mode,
+            "priority_classes": list(self.sched.cfg.priority_classes),
+            "preempt_count": self.sched_events["preemptions"],
+            "swap_bytes": self.sched_events["swap_bytes"],
+            "grown_blocks": self.sched_events["grown_blocks"],
+            "resumes": self.sched_events["resumes"],
+            "stalls": self.sched_events["stalls"],
+            "occupancy_live_frac": occ,
+            "mean_live_rows": rows,
+            "queued": len(self.sched),
         }
 
     def mesh_shape(self) -> Dict[str, int]:

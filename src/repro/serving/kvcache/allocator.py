@@ -56,6 +56,7 @@ class BlockAllocator:
         # bookkeeping only, never consulted for allocation decisions.
         self.counters: Dict[str, int] = {
             "alloc_calls": 0, "alloc_denied": 0, "alloc_blocks": 0,
+            "grow_calls": 0, "grow_denied": 0, "grown_blocks": 0,
             "free_calls": 0, "freed_blocks": 0,
             "release_suffix_calls": 0, "defrag_calls": 0,
             "defrag_moved_blocks": 0,
@@ -105,6 +106,30 @@ class BlockAllocator:
         del free[:n]
         self.counters["alloc_blocks"] += n
         self._owned.setdefault(owner, []).extend(ids)
+        self._note_peaks()
+        return ids
+
+    def grow(self, owner: Hashable, n: int, shard: int = 0) -> Optional[List[int]]:
+        """Extend an EXISTING owner's reservation by n blocks from its home
+        shard — the allocate-on-demand path: admission reserves the prompt,
+        and decode grows the suffix one block boundary at a time.  Returns
+        the appended ids, or None (no state change) when the shard is dry
+        (caller stalls the row or preempts a victim).  Distinct counters
+        from ``alloc`` so occupancy telemetry can split admission
+        reservations from on-demand growth."""
+        if n < 0:
+            raise ValueError(f"negative block count {n}")
+        if owner not in self._owned:
+            raise KeyError(f"grow for unknown owner {owner!r}")
+        self.counters["grow_calls"] += 1
+        free = self._free[shard]
+        if n > len(free):
+            self.counters["grow_denied"] += 1
+            return None
+        ids = free[:n]
+        del free[:n]
+        self.counters["grown_blocks"] += n
+        self._owned[owner].extend(ids)
         self._note_peaks()
         return ids
 

@@ -173,6 +173,30 @@ class PagedKVCache:
         self._table_dirty()
         return True
 
+    def extend(self, slot: int, n_tokens: int) -> Optional[int]:
+        """Grow slot's reservation to cover ``n_tokens`` logical positions
+        — the allocate-on-demand path.  Returns the number of blocks
+        appended (0 when coverage already suffices), or None (no state
+        change) when the slot's shard is dry: the scheduler then stalls
+        the row or preempts a victim.  Appended blocks extend the table
+        row in owned order, so positions already written stay mapped."""
+        have = len(self.alloc.owned_by(slot))
+        need = self.blocks_for(n_tokens)
+        if need > self.max_blocks_per_row:
+            raise ValueError(
+                f"{n_tokens} tokens need {need} blocks > "
+                f"max_blocks_per_row={self.max_blocks_per_row}"
+            )
+        if need <= have:
+            return 0
+        ids = self.alloc.grow(slot, need - have,
+                              shard=self.slot_shard(slot))
+        if ids is None:
+            return None
+        self.table_np[slot, have:have + len(ids)] = ids
+        self._table_dirty()
+        return len(ids)
+
     def free(self, slot: int) -> List[int]:
         """Release a finished slot's blocks immediately for reuse."""
         self.table_np[slot, :] = -1

@@ -65,6 +65,16 @@ class DraftState:
     def reserve(self, slot: int, n_tokens: int) -> bool:
         return self.kv.reserve(slot, n_tokens) if self.paged else True
 
+    def extend(self, slot: int, n_tokens: int) -> Optional[int]:
+        """Grow the draft reservation in lockstep with the target's
+        on-demand growth (0 blocks for the dense slab)."""
+        return self.kv.extend(slot, n_tokens) if self.paged else 0
+
+    def rollback(self, slot: int, n_tokens: int) -> None:
+        """Shrink the draft reservation with the target's (preemption)."""
+        if self.paged:
+            self.kv.rollback(slot, n_tokens)
+
     def free(self, slot: int) -> None:
         if self.paged:
             self.kv.free(slot)

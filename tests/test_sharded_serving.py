@@ -442,7 +442,7 @@ class TestBenchSchemaMigration:
              "rows": []},
             path=str(path),
         )
-        assert doc["schema"] == st.BENCH_SCHEMA == 6
+        assert doc["schema"] == st.BENCH_SCHEMA == 7
         migrated, fresh = doc["history"]
         assert migrated["mesh"] == {"dp": 1, "tp": 1, "devices": 1}
         assert migrated["rows"][0]["per_device_cache_bytes"] == 100
@@ -456,4 +456,9 @@ class TestBenchSchemaMigration:
         # and roofline blocks.
         assert migrated["telemetry"] is None
         assert migrated["roofline"] is None
+        # Schema 6 -> 7: pre-scheduler rows ran worst-case admission with
+        # no live-occupancy or preemption accounting.
+        assert migrated["rows"][0]["admission_policy"] == "worst_case"
+        assert migrated["rows"][0]["occupancy_live_frac"] is None
+        assert migrated["rows"][0]["preempt_count"] == 0
         assert fresh["mesh"]["dp"] == 2
