@@ -46,7 +46,7 @@ import numpy as np
 from .common import get_grams, save_table, train_small_lm
 
 BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json")
-BENCH_SCHEMA = 7
+BENCH_SCHEMA = 8
 
 _UNSHARDED_MESH = {"dp": 1, "tp": 1, "devices": 1}
 
@@ -68,7 +68,11 @@ def _migrate_entry(entry: Dict) -> Dict:
     preempted — stamp ``admission_policy="worst_case"``,
     ``preempt_count=0`` and null occupancy (live/reserved was not
     measured); fresh rows record all three from
-    ``engine.scheduler_stats()``."""
+    ``engine.scheduler_stats()``.  Schema 7 -> 8: pre-fault-tolerance
+    entries carry no fault accounting — ``faults: null``; fresh entries
+    roll up ``engine.fault_stats()`` (injected/quarantined/retried/shed,
+    all zero on a healthy bench run — the stamp proves the fault surface
+    was live and silent, not absent)."""
     if "mesh" not in entry:
         entry = dict(entry, mesh=dict(_UNSHARDED_MESH))
         entry["rows"] = [
@@ -92,6 +96,8 @@ def _migrate_entry(entry: Dict) -> Dict:
         entry = dict(entry, telemetry=None)
     if "roofline" not in entry:
         entry = dict(entry, roofline=None)
+    if "faults" not in entry:
+        entry = dict(entry, faults=None)
     return entry
 
 
@@ -212,6 +218,13 @@ def drive(model, params, prompts, label: str, max_batch: int, max_len: int,
     row["occupancy_live_frac"] = sch["occupancy_live_frac"]
     row["preempt_count"] = sch["preempt_count"]
     row["mean_live_rows"] = sch["mean_live_rows"]
+    # Schema-8 fault stamp: all-zero on a healthy run, proving the fault
+    # surface was live (and silent) rather than absent.
+    fs = eng.fault_stats()
+    row["faults"] = {"injected": fs["injected_total"],
+                     "quarantined": fs["quarantined"],
+                     "retried": fs["retried"],
+                     "shed": fs["shed"]}
     if paged:
         row["blocks_peak"] = cs["blocks_peak"]
         row["block_size"] = cs["block_size"]
@@ -375,6 +388,8 @@ def run(model_name: str = "small-llama", requests: int = 24, max_new: int = 24,
         "audit": _audit_stamp(model, max_batch, max_len, block_size),
         "telemetry": _telemetry_block(tel_paged, tel_spec),
         "roofline": _roofline_stamp(model, max_batch, max_len, block_size),
+        "faults": {k: sum(r["faults"][k] for r in rows)
+                   for k in ("injected", "quarantined", "retried", "shed")},
         "summary": {
             "per_device_cache_bytes_paged":
                 by[(nsvd, "paged")]["per_device_cache_bytes"],

@@ -168,6 +168,34 @@ def main():
           f"live/reserved {occ:.0%} | tokens identical to uncontended run: "
           f"{same_press:.0%}")
 
+    # Fault-injection leg: serving near numerical cliffs (aggressive
+    # NSVD, int8 dequant, a higher-compression draft) treats faults as a
+    # first-class input.  A seeded FaultPlan poisons one request's
+    # logits mid-decode and stalls one D2H sync; the device-side finite
+    # check flags the poisoned row inside the existing packed D2H word,
+    # the engine retries it (reprefill + capped backoff), and every
+    # stream still matches the fault-free run bit-for-bit.  CLI twin:
+    # --chaos PLAN.json / --max-retries / --step-timeout on
+    # launch/serve.py (plus SIGTERM -> graceful drain and a /healthz
+    # that answers 503 while degraded).
+    from repro.serving.faults import FaultPlan, FaultPolicy, FaultSpec
+
+    plan_f = FaultPlan([FaultSpec("poison_logits", step=3, uid=1),
+                        FaultSpec("straggler", step=6, delay_s=0.05)])
+    eng = ServingEngine(model, cparams, max_batch=4, max_len=128,
+                        paged=True, faults=plan_f,
+                        fault_policy=FaultPolicy(max_retries=2))
+    uids = [eng.submit(p, max_new_tokens=24) for p in prompts]
+    chaos_out = eng.run()
+    fs = eng.fault_stats()
+    same_chaos = np.mean([chaos_out[u] == comp_out[o]
+                          for u, o in zip(uids, comp_out)])
+    print(f"  chaos leg: injected {fs['injected']} -> "
+          f"{fs['retried']} retried, {fs['quarantined']} quarantined | "
+          f"tokens identical to fault-free run: {same_chaos:.0%} | "
+          f"finish reasons all 'stop': "
+          f"{all(r.finish_reason == 'stop' for r in eng.finished_requests.values())}")
+
     # Quality-report leg: the compression-side twin of the telemetry
     # above.  Re-compress with CompressionTelemetry attached (params stay
     # bit-identical — it only observes) and read back the per-target

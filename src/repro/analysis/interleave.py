@@ -41,6 +41,18 @@ against the real allocator after every move, so an engine that grows a
 row twice while recording the growth once (``double_grow``) is caught
 as ledger drift even though block conservation still holds.
 
+The fault-tolerance PR widened it again: ``cancel`` (user abort of a
+live row — the engine drains the ring before touching device state, so
+the move is gated on a drained ring and must free the row's blocks
+exactly once), ``expire`` (deadline shed of a preempted/parked request
+— host-only bookkeeping, its blocks were already released at eviction),
+and ``fault_retire`` (quarantine: the oldest in-flight entry is consumed
+and one of its masked rows retires to the preempted-reprefill state for
+a backoff retry instead of finishing).  ``cancel_double_free`` seeds the
+classic cancel/retire race: cancel frees a row that a concurrent
+retirement already freed, which the retire-frees-once invariant reports
+as an empty second free.
+
 ``bug=`` injects a deliberate violation of one convention so tests can
 prove the checker actually catches each class (see ``BUGS``)."""
 
@@ -60,6 +72,7 @@ BUGS = (
     "admit_unsynced",    # admission without draining the ring first
     "double_grow",       # grow allocates twice but records one block
     "preempt_in_flight", # preemption without draining the ring first
+    "cancel_double_free",  # cancel frees a row its retirement already freed
 )
 
 _Entry = FrozenSet[int]          # active-row mask at dispatch
@@ -206,6 +219,16 @@ class _Model:
             for s in sorted(self.host_live):
                 out.append(("preempt", (s, "reprefill")))
                 out.append(("preempt", (s, "swap")))
+        # cancel mirrors the engine: it drains the ring before touching
+        # device state, so the move only exists on a drained ring.
+        if not self.ring:
+            for s in sorted(self.host_live):
+                out.append(("cancel", s))
+        for s in sorted(self.preempted):
+            out.append(("expire", s))
+        if self.ring:
+            for s in sorted(self.ring[0] & self.host_live):
+                out.append(("fault_retire", s))
         if not self.ring:
             for s in sorted(self.host_live):
                 if len(self.alloc.owned_by(s)) > 1:
@@ -288,6 +311,37 @@ class _Model:
                         a._free[a.home_shard(b)].remove(b)
                     self.host_live = self.host_live - {s}
                 self.lengths.pop(s, None)
+        elif op == "cancel":
+            freed = a.free(arg)
+            if not freed:
+                violations.append(
+                    f"cancel: cancelling slot {arg} freed NO blocks "
+                    "(double free, or cancel of an already-retired slot)")
+            if self.bug == "cancel_double_free" and freed:
+                again = a.free(arg)
+                if not again:
+                    violations.append(
+                        f"cancel: second free of slot {arg} returned "
+                        "nothing — cancel raced a retirement into a "
+                        "double free")
+            self.host_live = self.host_live - {arg}
+            self.lengths.pop(arg, None)
+        elif op == "expire":
+            # Deadline shed of a parked request: host-only retire — its
+            # blocks were already released when it was evicted.
+            del self.preempted[arg]
+        elif op == "fault_retire":
+            # Quarantine: the oldest entry is consumed and one poisoned
+            # row retires to the parked (reprefill) state for a retry.
+            self.ring = self.ring[1:]
+            freed = a.free(arg)
+            if not freed:
+                violations.append(
+                    f"fault_retire: quarantining slot {arg} freed NO "
+                    "blocks (double free or ghost quarantine)")
+            self.host_live = self.host_live - {arg}
+            self.lengths.pop(arg, None)
+            self.preempted[arg] = ("reprefill", len(freed))
         elif op == "rollback":
             a.release_suffix(arg, 1)
             self.lengths[arg] = 1

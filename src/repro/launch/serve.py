@@ -103,6 +103,27 @@ def main():
                          "host<->device transfer raises instead of "
                          "silently stalling the step pipeline (also via "
                          "REPRO_SERVING_TRANSFER_GUARD=1)")
+    fault_g = ap.add_argument_group(
+        "fault tolerance", "deterministic chaos + degradation policy "
+        "(repro.serving.faults); off by default — an engine without a "
+        "plan takes no extra hot-path branches")
+    fault_g.add_argument("--chaos", default=None, metavar="PLAN.json",
+                         help="inject the FaultPlan in PLAN.json "
+                              '({"faults": [{"kind": "straggler", '
+                              '"step": 4}, ...]}): the engine must absorb '
+                              "every fault without perturbing healthy "
+                              "token streams; a fault report prints at "
+                              "exit")
+    fault_g.add_argument("--max-retries", type=int, default=0,
+                         help="poisoned-request retry budget (reprefill "
+                              "from committed context with capped "
+                              "exponential backoff) before the request "
+                              "retires with finish_reason='error'")
+    fault_g.add_argument("--step-timeout", type=float, default=None,
+                         metavar="SECONDS",
+                         help="hard per-step wall-clock limit: exceeding "
+                              "it raises a structured ServingFault with "
+                              "an engine snapshot for post-mortem")
     obs_g = ap.add_argument_group(
         "observability", "host-side telemetry (repro.obs): any flag here "
         "enables the tracer + metrics registry; all are off by default "
@@ -144,6 +165,9 @@ def main():
     telemetry = None
     metrics_server = None
     compress_telemetry = None
+    # The metrics server is built before the engine exists; /healthz reads
+    # the engine's degradation surface through this late-bound reference.
+    health_ref = {}
     obs_wanted = any(v is not None for v in (
         args.metrics_port, args.metrics_json, args.trace_jsonl,
         args.trace_chrome, args.profile_dir))
@@ -154,8 +178,10 @@ def main():
                               profile_steps=args.profile_steps)
         compress_telemetry = CompressionTelemetry(registry=telemetry.metrics)
         if args.metrics_port is not None:
-            metrics_server = MetricsServer(telemetry.metrics,
-                                           port=args.metrics_port)
+            metrics_server = MetricsServer(
+                telemetry.metrics, port=args.metrics_port,
+                health=lambda: (health_ref["eng"].degraded_components()
+                                if "eng" in health_ref else {}))
             print(f"metrics: {metrics_server.url} "
                   "(+ /metrics.json, /healthz)")
 
@@ -218,6 +244,18 @@ def main():
         print(f"audit: {len(rows)} {layout} roots clean "
               "(transfers/donation/sharding/dtypes)")
 
+    faults = None
+    fault_policy = None
+    if (args.chaos is not None or args.max_retries
+            or args.step_timeout is not None):
+        from repro.serving.faults import FaultPlan, FaultPolicy
+
+        if args.chaos is not None:
+            faults = FaultPlan.from_json(args.chaos)
+            print(f"chaos: {len(faults)} seeded fault(s) from {args.chaos}")
+        fault_policy = FaultPolicy(max_retries=args.max_retries,
+                                   step_timeout_s=args.step_timeout)
+
     from repro.serving.scheduler import SchedulerConfig
 
     sched_config = SchedulerConfig(
@@ -239,7 +277,15 @@ def main():
                         pipeline_depth=args.pipeline_depth,
                         transfer_guard=args.transfer_guard or None,
                         telemetry=telemetry,
-                        sched_config=sched_config)
+                        sched_config=sched_config,
+                        faults=faults,
+                        fault_policy=fault_policy)
+    health_ref["eng"] = eng
+    # SIGTERM = graceful drain: stop admitting, shed the queue, let live
+    # rows finish their in-flight steps, then run() returns normally.
+    import signal
+
+    signal.signal(signal.SIGTERM, lambda *_: eng.request_drain())
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
         eng.submit(rng.integers(2, cfg.vocab_size // 2, size=8),
@@ -255,6 +301,14 @@ def main():
         if metrics_server is not None:
             metrics_server.close()
         raise
+    finally:
+        # Idempotent engine teardown: sheds anything still queued/parked
+        # and retires live rows with finish_reason='shutdown' (a no-op
+        # after a clean run; best-effort when unwinding a ServingFault).
+        try:
+            eng.close()
+        except Exception:
+            pass
     dt = time.time() - t0
     n = sum(len(v) for v in out.values())
     print(f"{len(out)} requests, {n} tokens, {n/dt:.1f} tok/s")
@@ -291,6 +345,20 @@ def main():
         print(f"spec[k={ss['k']}]: acceptance {ss['acceptance_rate']:.0%}, "
               f"{ss['committed_per_row_step']:.2f} committed tok/row-step, "
               f"draft cache {ss['draft_hbm_bytes']/1e6:.2f}MB")
+    if faults is not None or fault_policy is not None:
+        fs = eng.fault_stats()
+        inj = ", ".join(f"{k}={v}" for k, v in sorted(fs["injected"].items()))
+        print(f"faults: injected [{inj or 'none'}], "
+              f"quarantined={fs['quarantined']} retried={fs['retried']} "
+              f"shed={fs['shed']} swap_fallbacks={fs['swap_fallbacks']} "
+              f"draft_kills={fs['draft_kills']}/"
+              f"reenables={fs['draft_reenables']} "
+              f"straggler slow/trips={fs['straggler_slow']}/"
+              f"{fs['straggler_trips']}")
+        if faults is not None and faults.outstanding():
+            kinds = [sp.kind for sp in faults.outstanding()]
+            print(f"faults: {len(kinds)} spec(s) never found an injection "
+                  f"site: {kinds}")
 
     if telemetry is not None:
         if telemetry.profile is not None:

@@ -191,6 +191,15 @@ def set_cache_rows(cache, rows, slots: jax.Array):
     return walk(cache, rows)
 
 
+# Device-side poison sentinel in the packed D2H token word.  Sampled
+# vocab ids are >= 0 and the disabled-eos sentinel is -1, so -2 is free:
+# a row whose logits go non-finite reports POISON_TOKEN instead of a
+# token and clears its own active flag, and the host quarantines it off
+# the transfer it already performs — no extra D2H word, no host check
+# on the healthy path.
+POISON_TOKEN = -2
+
+
 def _sample_advance_exit(logits, last_token, cache_len, budget, key_data,
                          active, host_keep, temps, eos, max_len):
     """Shared decode-step tail: batched sampling, inactive-row masking,
@@ -200,6 +209,12 @@ def _sample_advance_exit(logits, last_token, cache_len, budget, key_data,
     paged) MUST share this so their sampling/exit semantics cannot
     diverge."""
     act = jnp.logical_and(active, host_keep)
+    # Always-on finite check: a poisoned row (NaN/Inf logits — numerical
+    # cliff or injected fault) folds POISON_TOKEN into the existing D2H
+    # word and retires itself on device.  Healthy rows are untouched:
+    # the wheres below select their exact sampled values bit-for-bit.
+    bad = jnp.logical_and(
+        act, jnp.logical_not(jnp.isfinite(logits[:, 0]).all(axis=-1)))
     new_kd, sampled = sample_tokens(key_data, logits[:, 0], temps)
     # Inactive rows FREEZE all their per-slot state — token, length,
     # budget, and PRNG key alike.  The key freeze is what makes extra
@@ -207,6 +222,7 @@ def _sample_advance_exit(logits, last_token, cache_len, budget, key_data,
     # depend on how many garbage steps ran before the host caught up, or
     # the slot's next occupant would sample a different stream per depth.
     sampled = jnp.where(act, sampled, last_token)
+    sampled = jnp.where(bad, POISON_TOKEN, sampled)
     key_data = jnp.where(act[:, None], new_kd, key_data)
     adv = act.astype(jnp.int32)
     cache_len = cache_len + adv
@@ -218,6 +234,7 @@ def _sample_advance_exit(logits, last_token, cache_len, budget, key_data,
     # growth — must still be device-active when dispatches resume, not
     # permanently retired by the masked no-op steps in between.
     new_active = jnp.logical_and(jnp.logical_and(act, sampled != eos), alive)
+    new_active = jnp.logical_and(new_active, jnp.logical_not(bad))
     active = jnp.where(host_keep, new_active, active)
     return sampled, cache_len, budget, key_data, active
 
@@ -236,15 +253,23 @@ def make_decode_sample_step(model: Model, max_len: int) -> Callable:
     keep their last_token and cache_len (their sampled garbage is masked
     out on device).  ``eos`` is a per-row token id (-1 disables); a row
     that samples its eos id, spends its last budgeted token, or hits the
-    max_len-1 cache bound drops out of ``active`` in the same call."""
+    max_len-1 cache bound drops out of ``active`` in the same call.
+
+    The chaos-variant root (RootContext.chaos) appends a trailing (B,)
+    float32 ``poison`` input added to the logits: a zero vector is an
+    exact identity (x + 0.0 bit-preserves finite floats), so streams are
+    token-identical until the fault harness swaps in a NaN row."""
 
     def decode_sample_step(params, cache, last_token, cache_len, budget,
-                           key_data, active, host_keep, temps, eos):
+                           key_data, active, host_keep, temps, eos,
+                           poison=None):
         act = jnp.logical_and(active, host_keep)
         logits, cache, _ = model.apply(
             params, last_token[:, None], mode="decode",
             cache=cache, cache_len=cache_len,
         )
+        if poison is not None:
+            logits = logits + poison[:, None, None]
         sampled, cache_len, budget, key_data, active = _sample_advance_exit(
             logits, last_token, cache_len, budget, key_data, active,
             host_keep, temps, eos, max_len,
@@ -269,7 +294,7 @@ def make_paged_decode_step(model: Model, max_len: int) -> Callable:
 
     def paged_decode_step(params, pools, block_tables, last_token, cache_len,
                           budget, key_data, active, host_keep, temps, eos,
-                          row_order):
+                          row_order, poison=None):
         act = jnp.logical_and(active, host_keep)
         bt_eff = jnp.where(act[:, None], block_tables, -1)
         # Zero dead rows' lengths for the attention call only (real
@@ -291,6 +316,8 @@ def make_paged_decode_step(model: Model, max_len: int) -> Callable:
             block_tables=jnp.take(bt_eff, row_order, axis=0),
         )
         logits = jnp.take(logits_s, inv, axis=0)
+        if poison is not None:
+            logits = logits + poison[:, None, None]
         sampled, cache_len, budget, key_data, active = _sample_advance_exit(
             logits, last_token, cache_len, budget, key_data, active,
             host_keep, temps, eos, max_len,
@@ -477,7 +504,7 @@ def make_spec_verify_step(model: Model, k: int, max_len: int) -> Callable:
 
     def spec_verify_step(params, pools, block_tables, last_token, proposals,
                          q_probs, cache_len, budget, key_data, active,
-                         host_keep, temps, eos, k_row):
+                         host_keep, temps, eos, k_row, poison=None):
         act = jnp.logical_and(active, host_keep)
         bt_eff = None
         if block_tables is not None:
@@ -487,6 +514,14 @@ def make_spec_verify_step(model: Model, k: int, max_len: int) -> Callable:
             params, chunk, mode="decode", cache=pools, cache_len=cache_len,
             block_tables=bt_eff,
         )
+        if poison is not None:
+            logits = logits + poison[:, None, None]
+        # Always-on finite check, the spec twin of _sample_advance_exit's:
+        # a poisoned row signals the host through the n_commit word it
+        # already packs (-1 is unreachable: healthy n_commit >= 0) and
+        # retires itself on device.  Healthy rows' wheres are identities.
+        bad = jnp.logical_and(
+            act, jnp.logical_not(jnp.isfinite(logits).all(axis=(1, 2))))
         new_kd, m, t_new, out_tokens = verify_tail(
             key_data, logits, q_probs, proposals, temps, k_row
         )
@@ -504,7 +539,10 @@ def make_spec_verify_step(model: Model, k: int, max_len: int) -> Callable:
         # The host emits n_commit tokens (minus any it truncates at its own
         # budget/max_len bound — but those bounds clear `active` right here,
         # so the row is device-dead before the next dispatch either way).
-        budget = budget - n_commit
+        # Poisoned rows commit nothing: their budget freezes and the pack
+        # carries the -1 quarantine sentinel instead of a commit count.
+        budget = budget - jnp.where(bad, 0, n_commit)
+        n_commit = jnp.where(bad, -1, n_commit)
         alive = jnp.logical_and(budget > 0, cache_len < max_len - 1)
         # Freeze (not clear) the active flag for host-masked rows — see
         # _sample_advance_exit: a scheduler-stalled row must stay
@@ -512,10 +550,12 @@ def make_spec_verify_step(model: Model, k: int, max_len: int) -> Callable:
         new_active = jnp.logical_and(
             jnp.logical_and(act, jnp.logical_not(any_eos)), alive
         )
+        new_active = jnp.logical_and(new_active, jnp.logical_not(bad))
         active = jnp.where(host_keep, new_active, active)
         pack = jnp.concatenate(
             [out_tokens.astype(jnp.int32), n_commit[:, None].astype(jnp.int32),
-             jnp.where(act, m, 0)[:, None].astype(jnp.int32)], axis=1,
+             jnp.where(jnp.logical_and(act, jnp.logical_not(bad)), m, 0,
+                       )[:, None].astype(jnp.int32)], axis=1,
         )
         return pack, pools, cache_len, t_new, budget, key_data, active
 
@@ -597,6 +637,12 @@ class RootContext:
     bucket: int = 16          # representative admission prompt bucket
     bucketed: bool = True     # models.api.prefill_pad_safe(model)
     dp_shards: int = 1
+    # Chaos-variant roots: the steady sampling roots (decode /
+    # paged_decode / spec_verify) take a trailing (B,) float32 poison
+    # input added to the logits, so a FaultPlan can NaN one row's step
+    # without recompiling.  Off (the default), roots keep their exact
+    # pre-chaos signatures — the fault harness costs nothing when absent.
+    chaos: bool = False
 
     @property
     def resolved_num_blocks(self) -> int:
@@ -664,11 +710,18 @@ def _row_avals(b: int):
             _sds((b,), jnp.float32), _sds((b, 2), jnp.uint32))
 
 
+def _chaos_tail(ctx: RootContext):
+    """Trailing poison-input aval for chaos-variant sampling roots."""
+    if not ctx.chaos:
+        return ()
+    return (_sds((ctx.max_batch,), jnp.float32),)
+
+
 def _decode_inputs(ctx: RootContext, params):
     b = ctx.max_batch
     i32, boo, f32, keys = _row_avals(b)
     return (params, ctx.cache_avals(), i32, i32, i32, keys, boo, boo, f32,
-            i32)
+            i32) + _chaos_tail(ctx)
 
 
 def _paged_decode_inputs(ctx: RootContext, params):
@@ -676,7 +729,7 @@ def _paged_decode_inputs(ctx: RootContext, params):
     i32, boo, f32, keys = _row_avals(b)
     bt = _sds((b, ctx.max_blocks_per_row), jnp.int32)
     return (params, ctx.pool_avals(), bt, i32, i32, i32, keys, boo, boo,
-            f32, i32, i32)
+            f32, i32, i32) + _chaos_tail(ctx)
 
 
 def _paged_prefill_chunk_inputs(ctx: RootContext, params):
@@ -723,7 +776,7 @@ def _spec_verify_inputs(layout):
         props = _sds((b, k), jnp.int32)
         qs = _sds((b, k, ctx.model.cfg.vocab_size), jnp.float32)
         return (params, cache, bt, i32, props, qs, i32, i32, keys, boo, boo,
-                f32, i32, i32)
+                f32, i32, i32) + _chaos_tail(ctx)
 
     return inputs
 
@@ -768,7 +821,8 @@ def serving_root_registry(layout: str,
                 make_paged_decode_step(ctx.model, ctx.max_len),
                 "paged_decode"),
             _paged_decode_inputs,
-            lambda sh, ctx, draft_params=None: sh.paged_decode(),
+            lambda sh, ctx, draft_params=None: sh.paged_decode(
+                chaos=ctx.chaos),
         ))
         roots.append(RootSpec(
             "paged_prefill_chunk", "paged", "admission",
@@ -786,7 +840,7 @@ def serving_root_registry(layout: str,
             lambda ctx: wrap_root(
                 make_decode_sample_step(ctx.model, ctx.max_len), "decode"),
             _decode_inputs,
-            lambda sh, ctx, draft_params=None: sh.decode(),
+            lambda sh, ctx, draft_params=None: sh.decode(chaos=ctx.chaos),
         ))
         roots.append(RootSpec(
             "prefill_admit", "dense", "admission",
@@ -818,7 +872,8 @@ def serving_root_registry(layout: str,
                 make_spec_verify_step(ctx.model, ctx.spec_k, ctx.max_len),
                 "spec_verify"),
             _spec_verify_inputs(layout),
-            lambda sh, ctx, draft_params=None: sh.spec_verify(paged),
+            lambda sh, ctx, draft_params=None: sh.spec_verify(
+                paged, chaos=ctx.chaos),
         ))
         if paged:
             roots.append(RootSpec(
@@ -1025,18 +1080,20 @@ class ServingShardings:
     # roots pass the draft's (factored leaves shard identically by rule,
     # but shapes differ, so sanitization must see the right tree).
 
-    def decode(self, params=None):
+    def decode(self, params=None, chaos: bool = False):
         p = params or self.params
+        tail = (self.row,) if chaos else ()
         return ((p, self.cache, self.row, self.row, self.row, self.mat,
-                 self.row, self.row, self.row, self.row),
+                 self.row, self.row, self.row, self.row) + tail,
                 (self.row, self.cache, self.row, self.row, self.mat,
                  self.row))
 
-    def paged_decode(self, params=None):
+    def paged_decode(self, params=None, chaos: bool = False):
         p = params or self.params
+        tail = (self.row,) if chaos else ()
         return ((p, self.cache, self.mat, self.row, self.row, self.row,
                  self.mat, self.row, self.row, self.row, self.row,
-                 self.row),
+                 self.row) + tail,
                 (self.row, self.cache, self.row, self.row, self.mat,
                  self.row))
 
@@ -1066,11 +1123,12 @@ class ServingShardings:
                  self.row, self.row, self.row),
                 (self.mat, self.mat3, self.cache, self.mat))
 
-    def spec_verify(self, paged: bool):
+    def spec_verify(self, paged: bool, chaos: bool = False):
         bt = self.mat if paged else None
+        tail = (self.row,) if chaos else ()
         return ((self.params, self.cache, bt, self.row, self.mat, self.mat3,
                  self.row, self.row, self.mat, self.row, self.row, self.row,
-                 self.row, self.row),
+                 self.row, self.row) + tail,
                 (self.mat, self.cache, self.row, self.row, self.row,
                  self.mat, self.row))
 

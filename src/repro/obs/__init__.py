@@ -162,6 +162,26 @@ class Telemetry:
             "serving_spec_committed_tokens_total", "tokens committed by "
             "speculative steps (accepted + correction/bonus)")
 
+        # -- fault tolerance (serving/faults): detections, retries,
+        #    shedding, degraded components, straggler verdicts
+        self.faults = m.counter(
+            "serving_faults_total", "faults detected/injected by kind "
+            "(poison_logits, alloc_fail, swap_corrupt, straggler, "
+            "draft_kill)", labelnames=("kind",))
+        self.retries = m.counter(
+            "serving_retries_total", "poisoned requests requeued for a "
+            "backed-off reprefill retry instead of retiring with an error")
+        self.deadline_shed = m.counter(
+            "serving_deadline_shed_total", "queued requests shed because "
+            "their deadline expired before admission")
+        self.degraded_mode = m.gauge(
+            "serving_degraded_mode", "1 while a component runs degraded "
+            "(draft: spec decode fell back to plain decode)",
+            labelnames=("component",))
+        self.straggler_steps = m.counter(
+            "serving_straggler_steps_total", "watchdog-flagged step "
+            "durations by verdict", labelnames=("verdict",))
+
     # ----------------------------------------------------- request hooks
 
     def on_submit(self, uid: int, prompt_len: int, max_new: int) -> None:
@@ -287,6 +307,38 @@ class Telemetry:
             draft_ratio=str(self.spec_meta.get("draft_ratio", "?")),
         ).observe(accepted)
 
+    # ------------------------------------------------------- fault hooks
+    # (cat="fault": fired where the fault OCCURS — poison at host
+    # detection of the packed sentinel, the injected kinds at their
+    # injection sites — so the trace timeline localizes each fault.)
+
+    def on_fault(self, kind: str, uid: Optional[int], step: int) -> None:
+        self.faults.labels(kind=kind).inc()
+        self.tracer.instant(f"fault:{kind}", "fault", PID_ENGINE, 0,
+                            {"uid": uid, "step": step})
+
+    def on_retry(self, uid: int, attempt: int, backoff_steps: int) -> None:
+        self.retries.inc()
+        self.tracer.instant("fault_retry", "fault", PID_REQUESTS, uid,
+                            {"attempt": attempt,
+                             "backoff_steps": backoff_steps})
+
+    def on_shed(self, uid: int, reason: str) -> None:
+        if reason == "deadline":
+            self.deadline_shed.inc()
+        self.tracer.instant("shed", "fault", PID_REQUESTS, uid,
+                            {"reason": reason})
+
+    def on_degraded(self, component: str, active: bool) -> None:
+        self.degraded_mode.labels(component=component).set(int(active))
+        self.tracer.instant("degraded", "fault", PID_ENGINE, 0,
+                            {"component": component, "active": active})
+
+    def on_straggler(self, verdict: str, dur_s: float) -> None:
+        self.straggler_steps.labels(verdict=verdict).inc()
+        self.tracer.instant("straggler", "fault", PID_ENGINE, 1,
+                            {"verdict": verdict, "dur_s": dur_s})
+
     def span(self, name: str):
         """Host-side profiler span around a dispatch/sync region."""
         return annotation(name)
@@ -310,6 +362,7 @@ class Telemetry:
                 "cache": engine.cache_stats(),
                 "spec": engine.spec_stats(),
                 "scheduler": engine.scheduler_stats(),
+                "faults": engine.fault_stats(),
             }
             if engine.paged:
                 out["engine"]["allocator"] = dict(engine.kv.alloc.counters)
@@ -423,6 +476,21 @@ class _NullTelemetry:
         pass
 
     def on_spec_row(self, k_eff, accepted):
+        pass
+
+    def on_fault(self, kind, uid, step):
+        pass
+
+    def on_retry(self, uid, attempt, backoff_steps):
+        pass
+
+    def on_shed(self, uid, reason):
+        pass
+
+    def on_degraded(self, component, active):
+        pass
+
+    def on_straggler(self, verdict, dur_s):
         pass
 
     def snapshot(self, engine=None):

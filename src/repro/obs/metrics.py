@@ -283,11 +283,17 @@ def _escape(v: str) -> str:
 class MetricsServer:
     """Minimal scrape endpoint: ``GET /metrics`` serves the Prometheus
     text exposition, ``GET /metrics.json`` the snapshot dict, and
-    ``GET /healthz`` a liveness probe ("ok" while the server thread is
-    up).  Runs on a daemon thread; ``port=0`` binds an ephemeral port
-    (``.port`` reports the bound one)."""
+    ``GET /healthz`` a readiness probe.  Runs on a daemon thread;
+    ``port=0`` binds an ephemeral port (``.port`` reports the bound one).
 
-    def __init__(self, source, port: int = 0, host: str = "127.0.0.1"):
+    ``health`` is an optional zero-arg callable naming currently-degraded
+    components (e.g. ``engine.degraded_components``): when it returns a
+    non-empty dict, /healthz answers 503 with a JSON body instead of a
+    bare 200 "ok", so orchestrators see draft-off / stalled-slot /
+    draining states rather than a false all-clear."""
+
+    def __init__(self, source, port: int = 0, host: str = "127.0.0.1",
+                 health=None):
         import http.server
 
         snapshot = getattr(source, "snapshot")
@@ -295,6 +301,7 @@ class MetricsServer:
 
         class _Handler(http.server.BaseHTTPRequestHandler):
             def do_GET(self):  # noqa: N802 (http.server API)
+                code = 200
                 if self.path.startswith("/metrics.json"):
                     body = json.dumps(snapshot()).encode()
                     ctype = "application/json"
@@ -302,12 +309,19 @@ class MetricsServer:
                     body = prometheus().encode()
                     ctype = "text/plain; version=0.0.4; charset=utf-8"
                 elif self.path.startswith("/healthz"):
-                    body = b"ok\n"
-                    ctype = "text/plain; charset=utf-8"
+                    degraded = health() if health is not None else {}
+                    if degraded:
+                        code = 503
+                        body = json.dumps({"status": "degraded",
+                                           "components": degraded}).encode()
+                        ctype = "application/json"
+                    else:
+                        body = b"ok\n"
+                        ctype = "text/plain; charset=utf-8"
                 else:
                     self.send_error(404)
                     return
-                self.send_response(200)
+                self.send_response(code)
                 self.send_header("Content-Type", ctype)
                 self.send_header("Content-Length", str(len(body)))
                 self.end_headers()

@@ -87,6 +87,10 @@ class HeartbeatMonitor:
         self.last_seen = {h: clock() for h in range(n_hosts)}
 
     def beat(self, host: int):
+        if host not in self.last_seen:
+            raise KeyError(
+                f"heartbeat from unknown host {host!r}; monitor tracks "
+                f"hosts 0..{len(self.last_seen) - 1}")
         self.last_seen[host] = self.clock()
 
     def dead_hosts(self) -> list:

@@ -39,6 +39,19 @@ class StepTimeWatchdog:
         assert self._start is not None
         dur = self.clock() - self._start
         self._start = None
+        return self.observe(dur)
+
+    def observe(self, dur: float) -> str:
+        """Classify an externally-timed step duration: 'ok'|'slow'|'trip'.
+
+        The serving engine times steps itself (a pipelined ring keeps
+        several in flight, so the single-slot step_start/step_end pair
+        cannot bracket them) and feeds durations here.
+
+        Only clean durations enter the median window: folding flagged
+        steps in would let sustained degradation drag the median up
+        until the watchdog stops tripping on it.
+        """
         verdict = "ok"
         if len(self.history) >= 8:
             med = statistics.median(self.history[-self.cfg.window :])
@@ -51,9 +64,10 @@ class StepTimeWatchdog:
                     verdict = "trip"
             else:
                 self._suspicious = 0
-        self.history.append(dur)
-        if len(self.history) > 4 * self.cfg.window:
-            del self.history[: -2 * self.cfg.window]
+        if verdict == "ok":
+            self.history.append(dur)
+            if len(self.history) > 4 * self.cfg.window:
+                del self.history[: -2 * self.cfg.window]
         return verdict
 
     @property

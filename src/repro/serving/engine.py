@@ -105,14 +105,16 @@ import dataclasses
 import itertools
 import os
 import time
+import zlib
 from collections import deque
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.launch.steps import (
+    POISON_TOKEN,
     RootContext,
     ServingShardings,
     named,
@@ -127,9 +129,26 @@ from repro.models.api import (
 )
 from repro.obs import NULL_TELEMETRY
 from repro.parallel.sharding import Parallelism
+from repro.runtime.straggler import StepTimeWatchdog
+from repro.serving.faults import (
+    FaultPlan,
+    FaultPolicy,
+    ServingFault,
+    ServingFaultHandler,
+)
 from repro.serving.kvcache import PagedKVCache
 from repro.serving.scheduler import Scheduler, SchedulerConfig
 from repro.serving.spec import DraftState, SpecConfig
+
+
+def _swap_checksum(blocks) -> int:
+    """CRC32 chained over a swap payload's host leaves (flatten order is
+    deterministic for a fixed pool pytree), so a corrupted copy is caught
+    at resume instead of scattering garbage KV back onto the device."""
+    crc = 0
+    for leaf in jax.tree.leaves(blocks):
+        crc = zlib.crc32(np.ascontiguousarray(leaf).tobytes(), crc)
+    return crc
 
 
 @dataclasses.dataclass
@@ -142,6 +161,9 @@ class _SwapPayload:
     n_blocks: int         # leading block count of every ``blocks`` leaf
     blocks: object        # host pytree of per-layer pool block rows
     key_row: np.ndarray   # (2,) uint32 saved sampling-key state
+    # CRC32 over the leaves at swap-out time; a mismatch at resume means
+    # the host copy was corrupted and the engine falls back to reprefill.
+    checksum: Optional[int] = None
 
     @property
     def nbytes(self) -> int:
@@ -169,6 +191,13 @@ class Request:
     preemptions: int = 0
     prompt_absorbed: int = 0
     swap: Optional[_SwapPayload] = None
+    # Fault tolerance (serving/faults): absolute deadline (time.monotonic)
+    # for admission-side shedding, the terminal reason (one of
+    # faults.FINISH_REASONS; None until the request finishes), and how
+    # many poison-quarantine retries this request has burned.
+    deadline: Optional[float] = None
+    finish_reason: Optional[str] = None
+    retries: int = 0
     # Speculative-decoding accounting (spec_config engines only).
     spec_proposed: int = 0
     spec_accepted: int = 0
@@ -245,6 +274,8 @@ class ServingEngine:
         transfer_guard: Optional[bool] = None,
         telemetry=None,
         sched_config: Optional[SchedulerConfig] = None,
+        faults: Optional[FaultPlan] = None,
+        fault_policy: Optional[FaultPolicy] = None,
     ):
         # Observability (repro.obs.Telemetry, or the shared no-op).  All
         # hooks consume host bookkeeping + the packed D2H word the step
@@ -357,6 +388,41 @@ class ServingEngine:
         self._occ_rows_sum = 0
         self._occ_rows_steps = 0
 
+        # Fault injection + degradation (serving/faults).  The plan is a
+        # pure chaos surface consumed at explicit injection sites —
+        # without one, every site is a single ``is None`` check.  The
+        # policy/handler own quarantine-vs-retry dispositions; the
+        # watchdog (built only when chaos/policy is requested) classifies
+        # per-step durations and enforces the hard step timeout.
+        self._faults = faults
+        self._fault_policy = (fault_policy if fault_policy is not None
+                              else FaultPolicy())
+        self._handler = ServingFaultHandler(self._fault_policy)
+        self._watchdog = (StepTimeWatchdog(self._fault_policy.straggler)
+                          if faults is not None or fault_policy is not None
+                          else None)
+        # Chaos-variant roots (a trailing poison input on the steady
+        # sampling roots) are built only when the plan can poison logits;
+        # otherwise the roots are byte-identical to a fault-free engine's.
+        self._chaos = faults is not None and faults.has("poison_logits")
+        self._poison_zero = None
+        self._step_idx = 0  # monotonic dispatch counter (decode/spec)
+        # Backoff-parked poison retries: (ready_step, Request).
+        self._parked: List[Tuple[int, Request]] = []
+        self._has_deadlines = False
+        self._draining = False
+        self._closed = False
+        self._draft_dead = False
+        self._draft_off_until = 0
+        # uid -> Request for every terminal exit (normal or aborted), so
+        # finish_reason accounting can never miss a path.
+        self.finished_requests: Dict[int, Request] = {}
+        self.fault_events: Dict[str, int] = {
+            "quarantined": 0, "retried": 0, "shed": 0, "cancelled": 0,
+            "swap_fallbacks": 0, "draft_kills": 0, "draft_reenables": 0,
+            "straggler_slow": 0, "straggler_trips": 0,
+        }
+
         # Device-resident copies of the loop-invariant host inputs
         # (host_keep / temps / eos [/ k_row]).  They only change on slot
         # (re)admission or a finish, so dispatch reuses the cached arrays
@@ -434,6 +500,7 @@ class ServingEngine:
             num_blocks=self.kv.num_blocks if self.paged else None,
             spec_k=spec_config.k if spec_config is not None else 4,
             bucketed=self._bucketed, dp_shards=self.dp_shards,
+            chaos=self._chaos,
         )
         self._roots = {r.name: r for r in serving_root_registry(
             "paged" if self.paged else "dense",
@@ -537,9 +604,15 @@ class ServingEngine:
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
                temperature: float = 0.0,
                eos_id: Optional[int] = None,
-               latency_class: Optional[str] = None) -> int:
+               latency_class: Optional[str] = None,
+               deadline_s: Optional[float] = None) -> int:
         """Queue one request; returns its uid.  ``latency_class`` names a
-        configured SchedulerConfig.priority_class (None = the lowest)."""
+        configured SchedulerConfig.priority_class (None = the lowest).
+        ``deadline_s`` is a relative admission deadline: a request still
+        QUEUED when it expires is shed (finish_reason='deadline') instead
+        of admitted — activated rows always run to completion."""
+        if self._closed:
+            raise RuntimeError("submit() on a closed engine")
         prompt = np.asarray(prompt, np.int32)
         if len(prompt) == 0:
             raise ValueError("empty prompt")
@@ -574,6 +647,12 @@ class ServingEngine:
                       eos_id if eos_id is not None else self.eos_id,
                       latency_class=latency_class,
                       class_idx=self.sched.class_index(latency_class))
+        if deadline_s is not None:
+            if deadline_s <= 0:
+                raise ValueError(
+                    f"deadline_s must be positive, got {deadline_s}")
+            req.deadline = time.monotonic() + deadline_s
+            self._has_deadlines = True
         if self.obs.enabled:
             req.t_submit = time.perf_counter()
             self.obs.on_submit(req.uid, len(prompt), max_new_tokens)
@@ -601,6 +680,14 @@ class ServingEngine:
         step() consumes it, one iteration later."""
         finished: Dict[int, List[int]] = {}
         for _ in range(max_steps):
+            if self._parked:
+                self._unpark()
+            if self._draining:
+                self._shed_shutdown()
+            if self._has_deadlines and self.sched:
+                self._shed_expired()
+            for req in self._pop_finished():  # shed/cancelled surface here
+                finished[req.uid] = req.generated
             if self._admission_could_progress():
                 for req in self._admit():
                     finished[req.uid] = req.generated
@@ -616,7 +703,17 @@ class ServingEngine:
                 if not (self.active & ~self._stalled).any():
                     if not self.active.any():
                         if not self.sched and not self._prefilling:
-                            break
+                            if not self._parked:
+                                break
+                            # Only backoff-parked retries remain and the
+                            # device is empty: fast-forward the dispatch
+                            # counter to the earliest ready step instead
+                            # of spinning empty iterations (the loop-top
+                            # _unpark requeues them next pass).
+                            self._step_idx = max(
+                                self._step_idx,
+                                min(s for s, _ in self._parked))
+                            continue
                         continue
                     if self._prefilling or self._admission_could_progress():
                         continue  # prefill/admission can still free or fill
@@ -678,6 +775,7 @@ class ServingEngine:
         if (req.done or self._len_host[slot] >= self.max_len - 1
                 or tok == self._eos[slot]):
             finished.append(req)
+            self._mark_finished(req)
             self._retire_slot(slot)
             if self.obs.enabled:
                 self._obs_finish(req)
@@ -759,6 +857,12 @@ class ServingEngine:
         while True:
             req = self.sched.head()
             if req is None:
+                break
+            if self._take_fault("alloc_fail") is not None:
+                # Injected allocator failure: admission backs off this
+                # round exactly like a dry pool and retries next round —
+                # never the idle-shard RuntimeError a real undersized
+                # pool raises.
                 break
             need = self.sched.admit_tokens(req, self.max_len)
             free = [s for s in self._free_slots(busy)]
@@ -987,6 +1091,8 @@ class ServingEngine:
         either pool's shard is dry.  A target-side extension that the
         draft cannot match is kept — harmless over-reservation the retire
         path frees — and retried whole next call."""
+        if self._take_fault("alloc_fail") is not None:
+            return False  # injected growth failure: caller stalls/evicts
         added = self.kv.extend(slot, target)
         if added is None:
             return False
@@ -1058,7 +1164,9 @@ class ServingEngine:
         """Copy the blocks covering slot's committed context to host (one
         gather per pool leaf + the row's sampling key).  Preemption is off
         the steady-state path, so this D2H is sanctioned — the one-D2H
-        step contract is about the decode hot loop."""
+        step contract is about the decode hot loop.  The payload carries
+        a CRC32 so _resume_swap can detect host-side corruption and fall
+        back to reprefill instead of scattering garbage KV."""
         n_blocks = self.kv.blocks_for(max(1, n_ctx))
         ids = jnp.asarray(self.kv.alloc.owned_by(slot)[:n_blocks], jnp.int32)
         data = jax.tree.map(
@@ -1066,8 +1174,20 @@ class ServingEngine:
                 jax.device_get(jnp.take(leaf, ids, axis=ax))),
             self.kv.pools, self.kv.block_axes)
         key_row = np.asarray(jax.device_get(self.key_data[slot]))
+        checksum = _swap_checksum(data)
+        req = self.slots[slot]
+        if self._take_fault("swap_corrupt",
+                            uid=req.uid if req is not None else None):
+            # Flip one byte of the first leaf (a private copy —
+            # device_get may return read-only views) AFTER checksumming,
+            # so the mismatch surfaces at resume time.
+            leaves = list(jax.tree.leaves(data))
+            bad = np.array(leaves[0], copy=True)
+            bad.view(np.uint8).reshape(-1)[0] ^= 0xFF
+            leaves[0] = bad
+            data = jax.tree.unflatten(jax.tree.structure(data), leaves)
         return _SwapPayload(n_ctx=n_ctx, n_blocks=n_blocks, blocks=data,
-                            key_row=key_row)
+                            key_row=key_row, checksum=checksum)
 
     def _resume_swap(self, req: Request, slot: int) -> None:
         """Re-admit a swap-preempted request by scattering its saved block
@@ -1076,6 +1196,25 @@ class ServingEngine:
         eviction stopped (temperature streams match an un-preempted run).
         Caller has already reserved admission blocks on ``slot``."""
         pay = req.swap
+        if (pay.checksum is not None
+                and _swap_checksum(pay.blocks) != pay.checksum):
+            # Corrupted swap payload — never scatter it.  Fall back to a
+            # reprefill resume over the committed prefix (exact for
+            # greedy; temperature restarts the key chain, the documented
+            # resume='reprefill' caveat).  The reserved blocks cover the
+            # prefix — prompt + generated == n_ctx — so prefill starts
+            # immediately on this slot.
+            req.swap = None
+            fold = req.generated[req.prompt_absorbed:]
+            req.prompt = np.concatenate(
+                [req.prompt, np.asarray(fold, np.int32)])
+            req.prompt_absorbed = len(req.generated)
+            self.fault_events["swap_fallbacks"] += 1
+            self.sched_events["resumes"] += 1
+            if self.obs.enabled:
+                self.obs.on_resume(req.uid, slot, "reprefill")
+            self._prefilling.append(_PrefillTask(req, slot))
+            return
         ids = jnp.asarray(self.kv.alloc.owned_by(slot)[:pay.n_blocks],
                           jnp.int32)
         self.kv.pools = jax.tree.map(
@@ -1212,8 +1351,20 @@ class ServingEngine:
         runs up to D steps ahead of the host's emission/free bookkeeping.
         Depth 1 reproduces the unpipelined dispatch->sync sequence exactly.
         At most one D2H transfer is consumed per call."""
-        if (self.spec is not None and self.spec.dynamic_k
-                and self._ring):
+        if self._draft_dead and self._step_idx >= self._draft_off_until:
+            # A killed draft path re-enables after its cool-down; stale
+            # draft-cache entries only lower acceptance (verify stays an
+            # exact argmax-prefix check), never correctness.  Drain the
+            # ring first: plain-decode entries alias last_token, which
+            # the verify root DONATES — switching with them in flight
+            # would delete an unconsumed token future.
+            self._drain_ring()
+            self._draft_dead = False
+            self.fault_events["draft_reenables"] += 1
+            if self.obs.enabled:
+                self.obs.on_degraded("draft", False)
+        use_spec = self.spec is not None and not self._draft_dead
+        if use_spec and self.spec.dynamic_k and self._ring:
             # Per-row window feedback: step N+1's k_row depends on step N's
             # acceptance, so dynamic-k speculation runs the ring at depth 1.
             self._drain_ring()
@@ -1221,10 +1372,11 @@ class ServingEngine:
             # Grow every live row's reservation to cover this dispatch
             # (alloc-only bookkeeping — safe with steps in flight).
             self._ensure_coverage()
-        if self.spec is not None:
+        if use_spec:
             self._dispatch_spec()
         else:
             self._dispatch_decode()
+        self._step_idx += 1
         if len(self._ring) >= self.pipeline_depth:
             self._consume_one()
         return self._pop_finished()
@@ -1246,6 +1398,286 @@ class ServingEngine:
     def _pop_finished(self) -> List[Request]:
         out, self._pending_finished = self._pending_finished, []
         return out
+
+    # ------------------------------------------------- fault tolerance
+
+    def _take_fault(self, kind: str, uid: Optional[int] = None):
+        """Claim a due injected fault of ``kind`` (None without a plan).
+
+        Fires the telemetry fault event for kinds whose injection IS the
+        observable fault; poison_logits instead reports at host-side
+        detection (see _quarantine), where the fault actually surfaces."""
+        if self._faults is None:
+            return None
+        sp = self._faults.take(kind, self._step_idx, uid=uid)
+        if (sp is not None and self.obs.enabled
+                and kind != "poison_logits"):
+            self.obs.on_fault(kind, -1 if uid is None else uid,
+                              self._step_idx)
+        return sp
+
+    def _poison_args(self):
+        """Trailing poison input for the chaos-variant sampling roots.
+
+        () when the engine was built without poison specs (the roots then
+        take no poison argument).  Otherwise the cached device-zero row
+        vector — or a freshly-uploaded vector with NaN at each targeted
+        live slot when a poison spec fires this dispatch.  Zeros are an
+        EXACT identity on the logits (x + 0.0), so healthy rows and
+        non-firing steps stay bit-identical to a fault-free engine."""
+        if not self._chaos:
+            return ()
+        vec = None
+        mask = self.active & ~self._stalled
+        for slot in np.flatnonzero(mask).tolist():
+            req = self.slots[slot]
+            if req is None:
+                continue
+            if self._take_fault("poison_logits", uid=req.uid) is None:
+                continue
+            if vec is None:
+                vec = np.zeros((self.max_batch,), np.float32)
+            vec[slot] = np.nan
+        row = self._sh.row if self._sh is not None else None
+        if vec is not None:
+            return (jax.device_put(vec, row),)
+        if self._poison_zero is None:
+            self._poison_zero = jax.device_put(
+                np.zeros((self.max_batch,), np.float32), row)
+        return (self._poison_zero,)
+
+    def _mark_finished(self, req: Request, reason: str = "stop") -> None:
+        """Stamp the terminal reason (first writer wins) and record the
+        request — every exit path funnels through here, so finish_reason
+        accounting can never miss one."""
+        if req.finish_reason is None:
+            req.finish_reason = reason
+        self.finished_requests[req.uid] = req
+
+    def _abort(self, req: Request, reason: str) -> None:
+        """Terminate a request outside the commit paths (shed / cancel /
+        shutdown) and surface it via the pending-finished list the next
+        public step()/run() iteration returns."""
+        self._mark_finished(req, reason)
+        self._pending_finished.append(req)
+        if self.obs.enabled:
+            self._obs_finish(req)
+
+    def _quarantine(self, slot: int, req: Request,
+                    finished: List[Request]) -> None:
+        """A poisoned row surfaced in the packed D2H word (POISON_TOKEN,
+        or spec n_commit == -1): free the slot immediately — healthy rows
+        never stall behind it — then either park the request for a
+        backoff'd reprefill retry or finish it with
+        ``finish_reason='error'``."""
+        if self.obs.enabled:
+            self.obs.on_fault("poison_logits", req.uid, self._step_idx)
+        action, backoff = self._handler.disposition(req)
+        self._retire_slot(slot)
+        req.slot = None
+        if action == "retry":
+            # Reprefill-retry from the committed context (the _preempt
+            # reprefill arm): generated tokens fold into the prompt, the
+            # request parks until its backoff elapses, then requeues at
+            # the front of its class.  The poison token was never
+            # appended, so the retried context is clean.
+            fold = req.generated[req.prompt_absorbed:]
+            req.prompt = np.concatenate(
+                [req.prompt, np.asarray(fold, np.int32)])
+            req.prompt_absorbed = len(req.generated)
+            self._parked.append((self._step_idx + backoff, req))
+            self.fault_events["retried"] += 1
+            if self.obs.enabled:
+                self.obs.on_retry(req.uid, req.retries, backoff)
+        else:
+            self.fault_events["quarantined"] += 1
+            self._mark_finished(req, "error")
+            finished.append(req)
+            if self.obs.enabled:
+                self._obs_finish(req)
+
+    def _degrade_draft(self) -> None:
+        """Draft dispatch failed: run plain decode until the cool-down
+        elapses (step() re-enables), flagging the degraded component."""
+        self._draft_dead = True
+        self._draft_off_until = (
+            self._step_idx + self._fault_policy.draft_cooldown_steps)
+        self.fault_events["draft_kills"] += 1
+        if self.obs.enabled:
+            self.obs.on_degraded("draft", True)
+
+    def _unpark(self) -> None:
+        """Requeue parked poison-retries whose backoff has elapsed (they
+        re-enter at the FRONT of their class, like preemption resumes)."""
+        due = [(s, r) for s, r in self._parked if s <= self._step_idx]
+        if not due:
+            return
+        self._parked = [(s, r) for s, r in self._parked
+                        if s > self._step_idx]
+        for _, req in due:
+            self.sched.requeue(req)
+
+    def _shed_expired(self) -> None:
+        """Admission-side deadline shedding: drop queued requests whose
+        deadline passed before they reached a slot (activated rows run to
+        completion — a mid-flight abort would waste the work done)."""
+        now = time.monotonic()
+        expired = [r for r in self.sched.queued()
+                   if r.deadline is not None and r.deadline <= now]
+        for req in expired:
+            self.sched.remove(req.uid)
+            self.fault_events["shed"] += 1
+            self._abort(req, "deadline")
+            if self.obs.enabled:
+                self.obs.on_shed(req.uid, "deadline")
+
+    def _shed_shutdown(self) -> None:
+        """Drop every queued + parked request as ``shutdown`` (the drain
+        discipline: live rows keep decoding to completion)."""
+        for req in list(self.sched.queued()):
+            self.sched.remove(req.uid)
+            self.fault_events["shed"] += 1
+            self._abort(req, "shutdown")
+            if self.obs.enabled:
+                self.obs.on_shed(req.uid, "shutdown")
+        for _, req in self._parked:
+            self.fault_events["shed"] += 1
+            self._abort(req, "shutdown")
+            if self.obs.enabled:
+                self.obs.on_shed(req.uid, "shutdown")
+        self._parked = []
+
+    def cancel(self, uid: int) -> bool:
+        """Cancel a request anywhere in its pre-finish lifecycle.
+
+        Queued and backoff-parked requests are dropped outright; a
+        mid-prefill request frees its reservation; a LIVE row drains the
+        step ring first (in-flight steps may still write its blocks —
+        the same interleave invariant admission holds) and is cancelled
+        only if it did not finish during the drain.  Returns True iff
+        the request was found and ended with finish_reason='cancelled'."""
+        req = self.sched.remove(uid)
+        if req is not None:
+            self._finish_cancel(req)
+            return True
+        for i, (_, parked) in enumerate(self._parked):
+            if parked.uid == uid:
+                del self._parked[i]
+                self._finish_cancel(parked)
+                return True
+        for task in self._prefilling:
+            if task.req.uid == uid:
+                self._prefilling.remove(task)
+                if self.paged:
+                    self.kv.free(task.slot)
+                    if self.spec is not None:
+                        self.draft.free(task.slot)
+                    self._freed_at[task.slot] = next(self._free_clock)
+                self._finish_cancel(task.req)
+                return True
+        for slot, live in enumerate(self.slots):
+            if live is not None and live.uid == uid:
+                self._drain_ring()
+                if self.slots[slot] is not live:
+                    return False  # finished while the ring drained
+                self._retire_slot(slot)
+                self._finish_cancel(live)
+                return True
+        return False
+
+    def _finish_cancel(self, req: Request) -> None:
+        self.fault_events["cancelled"] += 1
+        self._abort(req, "cancelled")
+        if self.obs.enabled:
+            self.obs.on_shed(req.uid, "cancelled")
+
+    def request_drain(self) -> None:
+        """Signal graceful shutdown (serve.py's SIGTERM handler): run()
+        stops admitting and sheds queued/parked work as 'shutdown';
+        live rows decode to completion."""
+        self._draining = True
+
+    def close(self) -> None:
+        """Shut the engine down: drain the ring, then finish EVERYTHING
+        still inside (queued, parked, prefilling, live) with
+        ``finish_reason='shutdown'``.  Idempotent; subsequent submits
+        raise.  Requests that finished normally during the final drain
+        keep their 'stop' reason."""
+        if self._closed:
+            return
+        self._draining = True
+        self._drain_ring()
+        self._shed_shutdown()
+        for task in list(self._prefilling):
+            if self.paged:
+                self.kv.free(task.slot)
+                if self.spec is not None:
+                    self.draft.free(task.slot)
+            self.fault_events["shed"] += 1
+            self._abort(task.req, "shutdown")
+            if self.obs.enabled:
+                self.obs.on_shed(task.req.uid, "shutdown")
+        self._prefilling = []
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            self._retire_slot(slot)
+            self.fault_events["shed"] += 1
+            self._abort(req, "shutdown")
+            if self.obs.enabled:
+                self.obs.on_shed(req.uid, "shutdown")
+        self._closed = True
+
+    def fault_stats(self) -> Dict[str, object]:
+        """Fault accounting: every injected fault (by kind, from the
+        plan's fired log) plus the engine's degradation counters — the
+        block the BENCH stamps and the chaos tests reconcile."""
+        injected = self._faults.counts() if self._faults is not None else {}
+        out: Dict[str, object] = {
+            "injected": injected,
+            "injected_total": int(sum(injected.values())),
+            "parked": len(self._parked),
+            "degraded": self.degraded_components(),
+        }
+        out.update(self.fault_events)
+        return out
+
+    def degraded_components(self) -> Dict[str, object]:
+        """Currently-degraded components, empty when fully healthy (the
+        /healthz provider: non-empty answers 503)."""
+        out: Dict[str, object] = {}
+        if self.spec is not None and self._draft_dead:
+            out["draft"] = {"off_until_step": self._draft_off_until}
+        stalled = np.flatnonzero(self._stalled).tolist()
+        if stalled:
+            out["stalled_slots"] = [int(s) for s in stalled]
+        if self._draining:
+            out["draining"] = True
+        return out
+
+    def engine_snapshot(self) -> Dict[str, object]:
+        """JSON-serializable engine state for ServingFault post-mortems
+        (and the chaos CLI's fault report)."""
+        return {
+            "step": self._step_idx,
+            "ring_depth": len(self._ring),
+            "pipeline_depth": self.pipeline_depth,
+            "slots": [
+                None if r is None else {
+                    "uid": r.uid,
+                    "generated": len(r.generated),
+                    "len": int(self._len_host[s]),
+                    "stalled": bool(self._stalled[s]),
+                }
+                for s, r in enumerate(self.slots)],
+            "queued": len(self.sched),
+            "parked": len(self._parked),
+            "prefilling": len(self._prefilling),
+            "pool_free_blocks": (self.kv.alloc.free_blocks()
+                                 if self.paged else None),
+            "degraded": self.degraded_components(),
+            "faults": self.fault_stats(),
+        }
 
     def _host_inputs(self):
         """Device-resident (host_keep, temps, eos[, k_row]) for dispatch,
@@ -1288,14 +1720,14 @@ class ServingEngine:
                     self.params, self.kv.pools, self.kv.table_device(),
                     self.last_token, self.cache_len, self.budget_dev,
                     self.key_data, self._active_dev, host_keep, temps, eos,
-                    self._order_dev,
+                    self._order_dev, *self._poison_args(),
                 )
             else:
                 (sampled, self.cache, self.cache_len, self.budget_dev,
                  self.key_data, self._active_dev) = self._decode(
                     self.params, self.cache, self.last_token, self.cache_len,
                     self.budget_dev, self.key_data, self._active_dev,
-                    host_keep, temps, eos,
+                    host_keep, temps, eos, *self._poison_args(),
                 )
         self.last_token = sampled
         if self.paged:
@@ -1315,14 +1747,26 @@ class ServingEngine:
             host_keep, temps, eos = self._host_inputs()
             k_row = self._k_row_dev
 
-            with self.obs.span("serving.dispatch.spec_draft"):
-                (proposals, q_probs, self.draft.pools,
-                 self.draft.key_data) = self._spec_draft(
-                    self.draft.params, self.draft.pools,
-                    self.draft.table_device(),
-                    self.last_token, self.cache_len, self.draft.key_data,
-                    self._active_dev, host_keep, temps,
-                )
+            try:
+                with self.obs.span("serving.dispatch.spec_draft"):
+                    if self._take_fault("draft_kill") is not None:
+                        # Raised BEFORE the root call, so no draft buffer
+                        # has been donated — engine state is untouched.
+                        raise RuntimeError("injected draft dispatch kill")
+                    (proposals, q_probs, self.draft.pools,
+                     self.draft.key_data) = self._spec_draft(
+                        self.draft.params, self.draft.pools,
+                        self.draft.table_device(),
+                        self.last_token, self.cache_len, self.draft.key_data,
+                        self._active_dev, host_keep, temps,
+                    )
+            except Exception:
+                # Draft path died: degrade to plain decode (greedy streams
+                # are token-identical — verify was always an exact argmax
+                # prefix check) and re-enable after the cool-down.
+                self._degrade_draft()
+                self._dispatch_decode()
+                return
             target_cache = self.kv.pools if self.paged else self.cache
             bt = self.kv.table_device() if self.paged else None
             with self.obs.span("serving.dispatch.spec_verify"):
@@ -1332,6 +1776,7 @@ class ServingEngine:
                     self.params, target_cache, bt, self.last_token, proposals,
                     q_probs, self.cache_len, self.budget_dev, self.key_data,
                     self._active_dev, host_keep, temps, eos, k_row,
+                    *self._poison_args(),
                 )
         if self.paged:
             self.kv.pools = target_cache
@@ -1383,11 +1828,32 @@ class ServingEngine:
         ever costs) and run its emission/finish/free bookkeeping, appending
         newly finished requests to the pending list."""
         entry = self._ring.popleft()
+        sp = self._take_fault("straggler")
+        if sp is not None:
+            time.sleep(sp.delay_s)  # simulated hung transfer
         t0 = time.perf_counter()
         with self.obs.span("serving.ring_sync"):
             toks = np.asarray(jax.device_get(entry.tokens))
         t_sync = time.perf_counter() - t0
+        if sp is not None:
+            t_sync += sp.delay_s  # the sleep IS the stall being modeled
         self.decode_transfers += 1
+        dur = entry.dispatch_s + t_sync
+        if self._watchdog is not None:
+            verdict = self._watchdog.observe(dur)
+            if verdict != "ok":
+                self.fault_events["straggler_slow"] += 1
+                if verdict == "trip":
+                    self.fault_events["straggler_trips"] += 1
+                if self.obs.enabled:
+                    self.obs.on_straggler(verdict, dur)
+        timeout = self._fault_policy.step_timeout_s
+        if timeout is not None and dur > timeout:
+            raise ServingFault(
+                f"engine step exceeded hard timeout: {dur:.3f}s > "
+                f"{timeout}s (dispatch {entry.dispatch_s:.3f}s + sync "
+                f"{t_sync:.3f}s)", kind="step_timeout",
+                step=self._step_idx, snapshot=self.engine_snapshot())
         if entry.spec:
             finished = self._commit_spec(entry, toks)
         else:
@@ -1418,6 +1884,12 @@ class ServingEngine:
             if req is None or not adv[slot]:
                 continue
             tok = int(toks[slot])
+            if tok == POISON_TOKEN:
+                # Device-side finite check tripped (NaN/Inf logits): the
+                # packed D2H word carries the verdict, so detection costs
+                # no extra transfer.  The sentinel is never emitted.
+                self._quarantine(slot, req, finished)
+                continue
             req.generated.append(tok)
             if self.obs.enabled:
                 req.t_last = now
@@ -1425,6 +1897,7 @@ class ServingEngine:
             if (req.done or self._len_host[slot] >= self.max_len - 1
                     or tok == self._eos[slot]):
                 finished.append(req)
+                self._mark_finished(req)
                 self._retire_slot(slot)
                 if self.obs.enabled:
                     self._obs_finish(req)
@@ -1439,6 +1912,12 @@ class ServingEngine:
         now = time.perf_counter() if self.obs.enabled else 0.0
         for slot, req in enumerate(self.slots):
             if req is None or not entry.mask[slot]:
+                continue
+            if int(n_commit[slot]) < 0:
+                # Verify-side finite check: n_commit == -1 flags NaN/Inf
+                # logits for this row (its budget was NOT charged) —
+                # quarantine before any speculative accounting.
+                self._quarantine(slot, req, finished)
                 continue
             m = int(m_acc[slot])
             k_eff = int(entry.k_row[slot])
@@ -1480,6 +1959,7 @@ class ServingEngine:
                 self.obs.on_commit(req.uid, slot, appended)
             if done:
                 finished.append(req)
+                self._mark_finished(req)
                 self._retire_slot(slot)
                 if self.obs.enabled:
                     self._obs_finish(req)

@@ -134,6 +134,18 @@ class Scheduler:
         """Re-admit a preempted request at the front of its class."""
         self._queues[req.class_idx].appendleft(req)
 
+    def remove(self, uid: int):
+        """Pull a queued request out by uid (cancel / deadline shed).
+
+        Returns the removed request, or None if no queued request has
+        that uid.  Relative order of everything else is preserved."""
+        for q in self._queues:
+            for req in q:
+                if req.uid == uid:
+                    q.remove(req)
+                    return req
+        return None
+
     def pending(self) -> int:
         return sum(len(q) for q in self._queues)
 

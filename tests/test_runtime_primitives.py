@@ -1,0 +1,159 @@
+"""Unit tests for the runtime fault-tolerance primitives the serving
+layer builds on: the jit-side step guard, the host-side fault handler,
+the heartbeat monitor (injected clocks), and the step-time watchdog's
+clean-median discipline."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.runtime.fault import (
+    FaultHandler,
+    GuardConfig,
+    HeartbeatMonitor,
+    guarded_update,
+)
+from repro.runtime.straggler import StepTimeWatchdog, StragglerConfig
+
+
+# ------------------------------------------------------------ step guard
+
+
+class TestGuardedUpdate:
+    def _trees(self):
+        new = {"w": jnp.full((3,), 2.0), "b": jnp.full((2,), 4.0)}
+        old = {"w": jnp.full((3,), 1.0), "b": jnp.full((2,), 3.0)}
+        return new, old
+
+    def test_clean_step_takes_new_tree(self):
+        new, old = self._trees()
+        kept, bad = guarded_update(jnp.float32(1.0), jnp.float32(0.5),
+                                   new, old, GuardConfig())
+        assert not bool(bad)
+        assert jnp.array_equal(kept["w"], new["w"])
+
+    @pytest.mark.parametrize("loss,gnorm", [
+        (jnp.nan, 0.5),          # non-finite loss
+        (jnp.inf, 0.5),
+        (1e9, 0.5),              # divergent loss
+        (1.0, jnp.nan),          # non-finite grad
+        (1.0, 1e9),              # exploding grad
+    ])
+    def test_corrupt_step_keeps_old_tree(self, loss, gnorm):
+        new, old = self._trees()
+        kept, bad = guarded_update(jnp.float32(loss), jnp.float32(gnorm),
+                                   new, old, GuardConfig())
+        assert bool(bad)
+        assert jnp.array_equal(kept["w"], old["w"])
+        assert jnp.array_equal(kept["b"], old["b"])
+
+    def test_guard_works_under_jit(self):
+        cfg = GuardConfig()
+
+        @jax.jit
+        def step(loss, new, old):
+            return guarded_update(loss, jnp.float32(0.0), new, old, cfg)
+
+        new, old = self._trees()
+        kept, bad = step(jnp.float32(jnp.nan), new, old)
+        assert bool(bad) and jnp.array_equal(kept["w"], old["w"])
+        kept, bad = step(jnp.float32(1.0), new, old)
+        assert not bool(bad) and jnp.array_equal(kept["w"], new["w"])
+
+
+class TestFaultHandler:
+    def test_reload_cadence(self):
+        h = FaultHandler(GuardConfig(rollback_patience=3), manager=object())
+        assert h.observe(False) == "ok"
+        assert [h.observe(True) for _ in range(3)] == \
+            ["skipped", "skipped", "reload"]
+        assert (h.total_bad, h.reloads, h.consecutive_bad) == (3, 1, 0)
+        # A clean step resets the consecutive count.
+        assert h.observe(True) == "skipped"
+        assert h.observe(False) == "ok"
+        assert h.consecutive_bad == 0
+
+    def test_no_manager_never_reloads(self):
+        h = FaultHandler(GuardConfig(rollback_patience=1), manager=None)
+        assert all(h.observe(True) == "skipped" for _ in range(5))
+        assert h.reloads == 0 and h.total_bad == 5
+
+
+# ------------------------------------------------------------ heartbeats
+
+
+class TestHeartbeatMonitor:
+    def test_dead_hosts_with_injected_clock(self):
+        t = {"now": 0.0}
+        mon = HeartbeatMonitor(3, timeout_s=10.0, clock=lambda: t["now"])
+        assert mon.healthy()
+        t["now"] = 8.0
+        mon.beat(0)
+        mon.beat(2)
+        t["now"] = 15.0                 # host 1 last seen at t=0
+        assert mon.dead_hosts() == [1]
+        assert not mon.healthy()
+        mon.beat(1)
+        assert mon.healthy()
+
+    def test_unknown_host_raises(self):
+        mon = HeartbeatMonitor(2)
+        with pytest.raises(KeyError, match="unknown host"):
+            mon.beat(5)
+
+
+# ---------------------------------------------------------- watchdog
+
+
+class TestStepTimeWatchdog:
+    def test_warmup_is_always_ok(self):
+        wd = StepTimeWatchdog(StragglerConfig())
+        # Fewer than 8 observations: no baseline, everything is 'ok'.
+        assert all(wd.observe(d) == "ok" for d in [0.01] * 7 + [5.0])
+
+    def test_slow_then_trip(self):
+        cfg = StragglerConfig(slow_factor=2.5, trip_count=3)
+        wd = StepTimeWatchdog(cfg)
+        for _ in range(8):
+            wd.observe(0.01)
+        assert wd.observe(0.1) == "slow"
+        assert wd.observe(0.1) == "slow"
+        assert wd.observe(0.1) == "trip"
+        assert wd.trips == 1
+        # The counter reset on trip: the next slow step starts over.
+        assert wd.observe(0.1) == "slow"
+
+    def test_clean_median_excludes_flagged_steps(self):
+        """Flagged durations must NOT enter the history: sustained
+        degradation would otherwise drag the median up until the
+        watchdog stopped tripping on it."""
+        wd = StepTimeWatchdog(StragglerConfig(slow_factor=2.0))
+        for _ in range(8):
+            wd.observe(0.01)
+        for _ in range(20):             # sustained 10x degradation
+            assert wd.observe(0.1) != "ok"
+        assert wd.median_step == pytest.approx(0.01)
+
+    def test_fast_step_resets_suspicion(self):
+        wd = StepTimeWatchdog(StragglerConfig(trip_count=3))
+        for _ in range(8):
+            wd.observe(0.01)
+        assert wd.observe(0.1) == "slow"
+        assert wd.observe(0.01) == "ok"     # resets the streak
+        assert wd.observe(0.1) == "slow"    # starts over, no trip
+        assert wd.trips == 0
+
+    def test_start_end_bracketing(self):
+        t = {"now": 0.0}
+        wd = StepTimeWatchdog(StragglerConfig(), clock=lambda: t["now"])
+        wd.step_start()
+        t["now"] = 0.02
+        assert wd.step_end() == "ok"
+        assert wd.history == [0.02]
+
+    def test_history_stays_bounded(self):
+        cfg = StragglerConfig(window=8)
+        wd = StepTimeWatchdog(cfg)
+        for _ in range(1000):
+            wd.observe(0.01)
+        assert len(wd.history) <= 4 * cfg.window

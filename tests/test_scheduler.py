@@ -501,25 +501,28 @@ class TestInterleaveSchedulerOps:
         report = check_interleavings()
         assert report.ok, report.violations[:3]
 
-    @pytest.mark.parametrize("bug", ["double_grow", "preempt_in_flight"])
+    @pytest.mark.parametrize("bug", ["double_grow", "preempt_in_flight",
+                                     "cancel_double_free"])
     def test_seeded_scheduler_bugs_caught(self, bug):
         from repro.analysis.interleave import check_interleavings
 
         report = check_interleavings(bug=bug, max_ops=6)
         assert not report.ok
         blob = " ".join(report.violations)
-        assert ("ledger" in blob) if bug == "double_grow" \
-            else ("in-flight" in blob)
+        marker = {"double_grow": "ledger",
+                  "preempt_in_flight": "in-flight",
+                  "cancel_double_free": "double free"}[bug]
+        assert marker in blob
 
 
-# ------------------------------------------------- bench schema 7
+# ------------------------------------------------- bench schema 8
 
 
-class TestBenchSchema7:
+class TestBenchSchema8:
     def test_migrate_stamps_scheduler_fields(self):
         from benchmarks.serving_throughput import BENCH_SCHEMA, _migrate_entry
 
-        assert BENCH_SCHEMA == 7
+        assert BENCH_SCHEMA == 8
         old = {"rows": [{"label": "dense", "tok_per_s": 10.0}]}
         new = _migrate_entry(old)
         row = new["rows"][0]
@@ -528,6 +531,7 @@ class TestBenchSchema7:
         assert row["preempt_count"] == 0
         assert row["mean_live_rows"] is None
         assert row["tok_per_s"] == 10.0   # payload untouched
+        assert new["faults"] is None      # pre-fault-tolerance entry
 
     def test_fresh_rows_keep_their_stamp(self):
         from benchmarks.serving_throughput import _migrate_entry
@@ -542,13 +546,14 @@ class TestBenchSchema7:
         assert row["occupancy_live_frac"] == 0.7
         assert row["preempt_count"] == 3
 
-    def test_committed_history_is_schema7(self):
+    def test_committed_history_is_schema8(self):
         import os
 
         path = os.path.join(os.path.dirname(__file__), "..",
                             "BENCH_serving.json")
         doc = json.load(open(path))
-        assert doc["schema"] == 7
+        assert doc["schema"] == 8
+        assert all("faults" in e for e in doc["history"])
         newest = doc["history"][-1]
         oc = newest["summary"]["overcommit"]
         assert oc["occupancy_live_frac_on_demand"] > \

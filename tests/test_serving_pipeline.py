@@ -3,7 +3,7 @@ depth>1 produces token-identical streams (greedy, temperature with slot
 reuse, speculative) on both cache layouts, drain discipline around the
 host-mutating events (admission, defrag, EOS/completion flush), device-side
 finish exits (token budget + max_len + EOS all clear `active` on device),
-the cached loop-invariant host inputs, and the schema-7 BENCH_serving.json
+the cached loop-invariant host inputs, and the schema-8 BENCH_serving.json
 smoke."""
 
 import json
@@ -343,7 +343,7 @@ class TestPipelineConfig:
 
 
 class TestBenchSchemaSmoke:
-    def test_repo_bench_file_migrates_to_schema7(self):
+    def test_repo_bench_file_migrates_to_schema8(self):
         """The checked-in BENCH_serving.json must parse and migrate: every
         row of every entry carries pipeline_depth + the step breakdown,
         every entry an audit stamp (null for pre-auditor runs) and a
@@ -354,7 +354,7 @@ class TestBenchSchemaSmoke:
                             "BENCH_serving.json")
         with open(path) as f:
             doc = json.load(f)
-        assert doc["schema"] in (1, 2, 3, 4, 5, 6, 7)
+        assert doc["schema"] in (1, 2, 3, 4, 5, 6, 7, 8)
         history = doc["history"] if "history" in doc else [doc]
         for entry in map(st._migrate_entry, history):
             assert entry["mesh"]["devices"] >= 1
@@ -373,6 +373,10 @@ class TestBenchSchemaSmoke:
             assert "roofline" in entry
             if entry["roofline"] is not None:
                 assert entry["roofline"]["serving_kernels"]
+            assert "faults" in entry
+            if entry["faults"] is not None:
+                assert set(entry["faults"]) >= {
+                    "injected", "quarantined", "retried", "shed"}
             for row in entry["rows"]:
                 assert row["pipeline_depth"] >= 1
                 assert "step_device_wait_ms" in row
@@ -389,7 +393,7 @@ class TestBenchSchemaSmoke:
                               "max_abs_err_vs_oracle": 1e-6},
         }
         doc = st.append_history(entry, path=str(tmp_path / "b.json"))
-        assert doc["schema"] == 7
+        assert doc["schema"] == 8
         fresh = doc["history"][-1]
         assert fresh["rows"][0]["pipeline_depth"] == 2
         assert fresh["packed_kernel"]["rows_per_pack"] == 2

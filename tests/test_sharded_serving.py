@@ -442,7 +442,7 @@ class TestBenchSchemaMigration:
              "rows": []},
             path=str(path),
         )
-        assert doc["schema"] == st.BENCH_SCHEMA == 7
+        assert doc["schema"] == st.BENCH_SCHEMA == 8
         migrated, fresh = doc["history"]
         assert migrated["mesh"] == {"dp": 1, "tp": 1, "devices": 1}
         assert migrated["rows"][0]["per_device_cache_bytes"] == 100
@@ -461,4 +461,7 @@ class TestBenchSchemaMigration:
         assert migrated["rows"][0]["admission_policy"] == "worst_case"
         assert migrated["rows"][0]["occupancy_live_frac"] is None
         assert migrated["rows"][0]["preempt_count"] == 0
+        # Schema 7 -> 8: pre-fault-tolerance entries carry a null faults
+        # rollup (the engine ran with no injection surface at all).
+        assert migrated["faults"] is None
         assert fresh["mesh"]["dp"] == 2
